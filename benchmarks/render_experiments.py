@@ -1,0 +1,48 @@
+"""Regenerate the roofline table block inside EXPERIMENTS.md from the
+dry-run JSON reports (single-pod terms + multi-pod compile status)."""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+
+from benchmarks.roofline_table import REPORT, REPORT_MULTI, load, \
+    markdown_table
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DOC = os.path.join(ROOT, "EXPERIMENTS.md")
+START = "<!-- ROOFLINE_TABLE_START -->"
+END = "<!-- ROOFLINE_TABLE_END -->"
+
+
+def multi_pod_summary() -> str:
+    rows = load(REPORT_MULTI)
+    if not rows:
+        return "_multi-pod sweep not yet recorded_"
+    ok = sum(1 for r in rows if r["status"] == "ok")
+    sk = sum(1 for r in rows if r["status"] == "skipped")
+    err = [f"{r['arch']}×{r['shape']}" for r in rows
+           if r["status"] == "error"]
+    out = [f"**Multi-pod (2×16×16 = 512 chips): {ok} cells compile, "
+           f"{sk} skipped by design, {len(err)} failed.**"]
+    if err:
+        out.append("Failed: " + ", ".join(err))
+    return "\n".join(out)
+
+
+def main() -> None:
+    table = markdown_table()
+    block = (f"{START}\n\n### Single-pod (16×16) roofline terms\n\n"
+             f"{table}\n\n{multi_pod_summary()}\n\n{END}")
+    doc = open(DOC).read()
+    pattern = re.compile(re.escape(START) + ".*?" + re.escape(END),
+                         re.DOTALL)
+    assert pattern.search(doc), "markers missing in EXPERIMENTS.md"
+    open(DOC, "w").write(pattern.sub(block, doc))
+    print(f"EXPERIMENTS.md roofline block updated "
+          f"({len(table.splitlines())} rows)")
+
+
+if __name__ == "__main__":
+    main()

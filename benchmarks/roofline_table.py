@@ -1,0 +1,69 @@
+"""Roofline table renderer: reads the dry-run JSON reports and emits the
+EXPERIMENTS.md §Roofline table + CSV rows for benchmarks.run."""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+REPORT = os.path.join(os.path.dirname(os.path.dirname(__file__)),
+                      "reports", "dryrun_single.json")
+REPORT_MULTI = os.path.join(os.path.dirname(os.path.dirname(__file__)),
+                            "reports", "dryrun_multi.json")
+
+
+def load(path: str = REPORT) -> List[Dict]:
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return json.load(f)
+
+
+def csv_rows(rows: List[str]) -> None:
+    for r in load():
+        if r["status"] != "ok":
+            rows.append(f"roofline_{r['arch']}_{r['shape']},0,"
+                        f"status={r['status']}")
+            continue
+        rows.append(
+            f"roofline_{r['arch']}_{r['shape']},0,"
+            f"dominant={r['dominant']}"
+            f";t_comp_ms={r['t_compute'] * 1e3:.2f}"
+            f";t_mem_ms={r['t_memory'] * 1e3:.2f}"
+            f";t_coll_ms={r['t_collective'] * 1e3:.2f}"
+            f";useful={r['useful_flops_ratio']:.3f}"
+            f";roofline={r['roofline_fraction']:.4f}"
+            f";arg_gib={r['argument_gib_per_chip']:.2f}"
+            f";fits={r['fits_hbm']}")
+
+
+def markdown_table(results: Optional[List[Dict]] = None) -> str:
+    results = results if results is not None else load()
+    hdr = ("| arch | shape | mesh | t_comp ms | t_mem ms | t_coll ms | "
+           "dominant | useful | roofline | arg GiB/chip | fits |")
+    sep = "|" + "---|" * 11
+    lines = [hdr, sep]
+    for r in results:
+        if r["status"] == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"— | — | — | skipped (quadratic @500k) | — | — "
+                         f"| — | — |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"ERROR | | | | | | | |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['t_compute'] * 1e3:.1f} | {r['t_memory'] * 1e3:.1f} "
+            f"| {r['t_collective'] * 1e3:.1f} | {r['dominant']} "
+            f"| {r['useful_flops_ratio']:.2f} "
+            f"| {r['roofline_fraction']:.4f} "
+            f"| {r['argument_gib_per_chip']:.2f} "
+            f"| {'yes' if r.get('fits_hbm') else 'NO'} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(markdown_table())

@@ -1,0 +1,37 @@
+"""Benchmark harness — one bench per paper table/figure + roofline.
+
+Prints ``name,us_per_call,derived`` CSV.  Virtual-time rows (simulator)
+report us_per_call=0; threaded-PS rows report wall time per worker
+iteration.  Roofline rows are derived from the dry-run reports
+(reports/dryrun_*.json, produced by repro.launch.dryrun).
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+from typing import List
+
+
+def main() -> None:
+    t0 = time.monotonic()
+    rows: List[str] = []
+    from benchmarks import paper_tables, roofline_table
+
+    paper_tables.threshold_sweep(rows)          # Fig. 3b (virtual time)
+    paper_tables.wait_time_accounting(rows)     # §V.C     (virtual time)
+    paper_tables.finite_budget_updates(rows)    # Table I systems term
+    paper_tables.transient_straggler(rows)      # §VI future-work scenario
+    paper_tables.paradigm_convergence(rows)     # Fig. 3a  (threaded PS)
+    paper_tables.hetero_time_to_target(rows)    # Table I  (composed)
+    roofline_table.csv_rows(rows)               # §Roofline (dry-run)
+
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(r)
+    print(f"# total_bench_wall_s={time.monotonic() - t0:.1f}",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""The paper's headline experiment: a heterogeneous cluster.
+
+Four workers train one shared model through the parameter server; worker
+3 is 4x slower (the paper's GTX1060 next to GTX1080Ti).  Each paradigm
+runs the same jitted SGD steps — only the synchronization policy
+differs.  Reported: updates applied, waiting time, staleness profile,
+final loss, plus the virtual-time Table-I composition.
+
+Run:  PYTHONPATH=src python examples/heterogeneous_ps.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.policies import make_policy
+from repro.ps.metrics import compare
+from repro.ps.server import ParameterServer, ServerOptimizer
+from repro.ps.simulator import run_policy
+from repro.ps.worker import PSWorker, run_cluster
+
+
+def make_problem(seed=0, dim=16, n=2048, classes=4):
+    rng = np.random.RandomState(seed)
+    w = rng.randn(dim, classes).astype(np.float32)
+    x = rng.randn(n, dim).astype(np.float32)
+    y = np.argmax(x @ w + rng.gumbel(size=(n, classes)), -1).astype(np.int32)
+    return x, y, classes
+
+
+def main() -> None:
+    x, y, classes = make_problem()
+
+    def loss_fn(params, batch):
+        bx, by = batch
+        logp = jax.nn.log_softmax(bx @ params["w"] + params["b"])
+        return -jnp.mean(jnp.take_along_axis(logp, by[:, None], 1))
+
+    @jax.jit
+    def step(params, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        return grads, {"loss": loss}
+
+    def batches(w, n_workers=4, bs=64):
+        sx, sy = x[w::n_workers], y[w::n_workers]
+        rng = np.random.RandomState(w)
+        while True:
+            i = rng.randint(0, len(sx), bs)
+            yield sx[i], sy[i]
+
+    speeds = [1.0, 1.0, 1.0, 4.0]
+    print(f"4 workers, speed factors {speeds}, 80 iterations each\n")
+    runs = []
+    for name, kw in (("bsp", {}), ("asp", {}),
+                     ("ssp", dict(staleness=3)),
+                     ("dssp", dict(s_lower=3, s_upper=15))):
+        params = {"w": jnp.zeros((x.shape[1], classes)),
+                  "b": jnp.zeros((classes,))}
+        server = ParameterServer(params, make_policy(name, n_workers=4, **kw),
+                                 ServerOptimizer(lr=0.3), 4)
+        workers = [PSWorker(w, server, step, batches(w), 80,
+                            speed_factor=speeds[w])
+                   for w in range(4)]
+        run_cluster(server, workers, timeout=300.0)
+        logits = x @ np.asarray(server.params["w"]) + np.asarray(
+            server.params["b"])
+        acc = float((np.argmax(logits, -1) == y).mean())
+        server.metrics.policy += f"  acc={acc:.3f}"
+        runs.append(server.metrics)
+    print(compare(runs))
+
+    print("\nVirtual-time view (same speeds, 2000 pushes):")
+    vruns = [run_policy(make_policy(n, n_workers=4, **kw), speeds,
+                        max_pushes=2000)
+             for n, kw in (("bsp", {}), ("asp", {}),
+                           ("ssp", dict(staleness=3)),
+                           ("dssp", dict(s_lower=3, s_upper=15)))]
+    print(compare(vruns))
+    print("\nReading: with a PERSISTENT straggler the steady-state rate "
+          "of every bounded\nscheme converges to the straggler's (BSP ~ "
+          "SSP ~ DSSP here) — DSSP's edge is\nless waiting per sync and "
+          "front-loaded updates under finite budgets or\ntransient skew "
+          "(see benchmarks: finite_budget_*, transient_*, tableI_*),\n"
+          "while keeping staleness bounded (<= s_U) unlike ASP.")
+
+
+if __name__ == "__main__":
+    main()

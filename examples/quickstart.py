@@ -1,0 +1,57 @@
+"""Quickstart: the DSSP idea in 60 seconds.
+
+1. Virtual-time cluster: watch DSSP grant extra iterations to fast
+   workers and beat SSP's waiting time.
+2. Real training: a tiny LM trained with the DSSP delayed-gradient
+   pipeline (the SPMD adaptation) — same loss trajectory as BSP, with
+   the gradient collective moved off the critical path.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+from repro.core.policies import make_policy
+from repro.ps.metrics import compare
+from repro.ps.simulator import run_policy
+
+
+def virtual_cluster():
+    print("=" * 70)
+    print("1. Virtual 4-worker cluster, one 3x straggler, 2000 pushes")
+    print("=" * 70)
+    intervals = [1.0, 1.1, 1.2, 3.0]
+    runs = []
+    for name, kw in (("bsp", {}), ("asp", {}),
+                     ("ssp", dict(staleness=3)),
+                     ("dssp", dict(s_lower=3, s_upper=15))):
+        runs.append(run_policy(make_policy(name, n_workers=4, **kw),
+                               intervals, max_pushes=2000))
+    print(compare(runs))
+    print("\nDSSP: less waiting than SSP(s_L), bounded staleness "
+          "(unlike ASP).\n")
+
+
+def tiny_training():
+    print("=" * 70)
+    print("2. DSSP-SPMD delayed-gradient training (tiny LM, 60 steps)")
+    print("=" * 70)
+    from repro.configs import get_smoke_config
+    from repro.data.synthetic import DataConfig, loss_floor
+    from repro.launch.train import Trainer
+
+    cfg = get_smoke_config("h2o-danube-1.8b")
+    data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                          global_batch=8)
+    for sync in ("bsp", "dssp"):
+        t = Trainer(cfg, data_cfg, sync=sync, lr=5e-3, s_lower=1,
+                    s_upper=3)
+        log = t.train(60, verbose=False)
+        print(f"  sync={sync:<5} loss {log.losses[0]:.3f} -> "
+              f"{log.losses[-1]:.3f}  (floor ~{loss_floor(data_cfg):.3f},"
+              f" mean delay {sum(log.delays) / len(log.delays):.1f})")
+    print("\nDelayed gradients (bounded staleness) converge like BSP;")
+    print("on a pod the delay hides the gradient all-reduce.")
+
+
+if __name__ == "__main__":
+    virtual_cluster()
+    tiny_training()

@@ -1,0 +1,81 @@
+"""Serving demo: batched prefill + greedy decode with a KV cache.
+
+A small dense LM is trained briefly on the synthetic Markov stream, then
+serves a batch of prompts: one prefill computes last-token logits AND the
+packed KV cache (exactly what the decode_32k / long_500k dry-run cells
+lower at scale), and the decode loop appends tokens with the ring cache.
+The model should continue prompts more plausibly than chance (it learned
+the chain's transitions).
+
+Run:  PYTHONPATH=src python examples/serve_decode.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.synthetic import DataConfig, MarkovLM
+from repro.launch.train import Trainer
+from repro.models import transformer
+from repro.models.config import ModelConfig
+
+
+def main() -> None:
+    cfg = ModelConfig(name="serve-demo", family="dense", n_layers=2,
+                      d_model=128, n_heads=4, n_kv_heads=2, d_ff=384,
+                      vocab_size=512, dtype="float32", remat="none")
+    data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=48,
+                          global_batch=8)
+    print("training a tiny LM for 120 steps ...")
+    trainer = Trainer(cfg, data_cfg, sync="dssp", lr=5e-3, s_lower=1,
+                      s_upper=2, optimizer="adamw")
+    log = trainer.train(120, verbose=False)
+    print(f"  loss {log.losses[0]:.3f} -> {log.losses[-1]:.3f}")
+    params = trainer.params
+
+    # ---- build prompts from the same chain (the model knows it)
+    chain = MarkovLM(data_cfg)
+    rows = chain.sample_rows(step=10_000, rows=np.arange(4))
+    prompt_len, max_new = 16, 16
+    prompts = jnp.asarray(rows[:, :prompt_len])
+    gold = rows[:, prompt_len:prompt_len + max_new]
+
+    # ---- prefill: last-token logits + packed KV cache
+    prefill = jax.jit(lambda p, t: transformer.forward_prefill(cfg, p, t))
+    logits, cache = prefill(params, prompts)
+    total = prompt_len + max_new
+    cache = {k: jnp.pad(v, ((0, 0), (0, 0), (0, total - prompt_len),
+                            (0, 0), (0, 0))) for k, v in cache.items()}
+    next_tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+
+    # ---- decode loop
+    decode = jax.jit(lambda p, t, c, i: transformer.forward_decode(
+        cfg, p, t, c, i))
+    out_tokens = [next_tok]
+    for step in range(max_new - 1):
+        logits, cache = decode(params, next_tok, cache,
+                               jnp.int32(prompt_len + step))
+        next_tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+        out_tokens.append(next_tok)
+    generated = np.asarray(jnp.concatenate(out_tokens, axis=1))
+
+    # ---- evaluate: is each generated token a LEGAL chain successor?
+    legal = 0
+    for b in range(generated.shape[0]):
+        prev = int(prompts[b, -1])
+        for t in range(generated.shape[1]):
+            tok = int(generated[b, t])
+            if tok in set(chain.successors[prev]):
+                legal += 1
+            prev = tok
+    frac = legal / generated.size
+    chance = data_cfg.branching / data_cfg.vocab_size
+    print(f"prompts {prompts.shape} -> generated {generated.shape}")
+    print(f"legal-successor rate {frac:.2f} vs chance {chance:.3f}")
+    print("sample:", generated[0][:12].tolist())
+    assert frac > 10 * chance, "model failed to learn the chain"
+    print("OK: serving path (prefill -> ring-cache decode) works.")
+
+
+if __name__ == "__main__":
+    main()

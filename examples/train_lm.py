@@ -1,0 +1,74 @@
+"""End-to-end LM training driver with DSSP, checkpoints and restart.
+
+Presets:
+  tiny   ~0.5M params — seconds on this CPU container (default)
+  20m    ~20M params  — minutes
+  100m   ~100M params — the brief's reference workload (few hundred
+         steps; practical on accelerators, hours on 1 CPU core)
+
+Demonstrates: synthetic data pipeline, DSSP delayed-gradient pipeline
+with the run-time controller, async atomic checkpoints, and
+crash-restart (--resume continues bit-exact w.r.t. the data stream).
+
+Run:  PYTHONPATH=src python examples/train_lm.py --preset tiny --steps 150
+      PYTHONPATH=src python examples/train_lm.py --preset tiny --resume
+"""
+
+import argparse
+
+import numpy as np
+
+from repro.data.synthetic import DataConfig, loss_floor
+from repro.launch.train import Trainer
+from repro.models.config import ModelConfig
+
+PRESETS = {
+    "tiny": dict(n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
+                 d_ff=384, vocab_size=512, seq=64, batch=8),
+    "20m": dict(n_layers=6, d_model=384, n_heads=8, n_kv_heads=4,
+                d_ff=1152, vocab_size=8192, seq=128, batch=8),
+    "100m": dict(n_layers=12, d_model=512, n_heads=8, n_kv_heads=8,
+                 d_ff=2048, vocab_size=32000, seq=256, batch=8),
+}
+
+
+def build_config(preset: str) -> ModelConfig:
+    p = dict(PRESETS[preset])
+    p.pop("seq"), p.pop("batch")
+    return ModelConfig(name=f"lm-{preset}", family="dense",
+                       dtype="float32", remat="none", **p)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="tiny", choices=list(PRESETS))
+    ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--sync", default="dssp",
+                    choices=["bsp", "ssp", "dssp"])
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--checkpoint-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = build_config(args.preset)
+    preset = PRESETS[args.preset]
+    data_cfg = DataConfig(vocab_size=cfg.vocab_size,
+                          seq_len=preset["seq"],
+                          global_batch=preset["batch"])
+    trainer = Trainer(cfg, data_cfg, sync=args.sync, lr=args.lr,
+                      s_lower=1, s_upper=3, optimizer="adamw",
+                      checkpoint_dir=args.checkpoint_dir, save_every=50)
+    if args.resume and trainer.resume():
+        print(f"resumed from step {trainer.step_idx}")
+    from repro.models.registry import count_params
+    print(f"model {cfg.name}: {count_params(cfg):,} params; "
+          f"data floor ~{loss_floor(data_cfg):.3f} nats")
+    log = trainer.train(args.steps, verbose=True, log_every=25)
+    print(f"done: loss {log.losses[0]:.3f} -> {log.losses[-1]:.3f}, "
+          f"mean step {np.mean(log.step_times[1:]) * 1e3:.0f} ms, "
+          f"mean DSSP delay {np.mean(log.delays):.2f}")
+    print(f"checkpoints in {args.checkpoint_dir}: rerun with --resume")
+
+
+if __name__ == "__main__":
+    main()

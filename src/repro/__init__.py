@@ -1,0 +1,16 @@
+"""repro — Dynamic Stale Synchronous Parallel (DSSP) distributed training in JAX.
+
+Reproduction + TPU-pod-scale adaptation of:
+  Zhao, An, Liu, Chen. "Dynamic Stale Synchronous Parallel Distributed
+  Training for Deep Learning" (CS.DC 2019).
+
+Public API surface:
+  repro.core      — DSSP/SSP/ASP/BSP policies + synchronization controller
+  repro.ps        — runnable parameter-server substrate (threads + simulator)
+  repro.models    — model zoo (dense/MoE/SSM/hybrid/enc-dec backbones)
+  repro.configs   — assigned architecture configs
+  repro.launch    — mesh / dryrun / train / serve entry points
+  repro.roofline  — roofline-term extraction from compiled artifacts
+"""
+
+__version__ = "1.0.0"

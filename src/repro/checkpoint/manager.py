@@ -1,0 +1,144 @@
+"""Checkpoint manager: atomic, async, keep-K, restart-friendly.
+
+Layout:
+    <dir>/step_000123/           (atomic: written as .tmp_, then renamed)
+        manifest.json            leaf paths + shapes + dtypes + extras
+        arr_00000.npy ...        one .npy per pytree leaf
+
+Guarantees:
+  * atomicity — a crash mid-save never corrupts the latest checkpoint
+    (readers only see fully-renamed directories),
+  * async — ``save`` returns immediately; the writer thread serializes
+    host-transferred arrays so the train loop never blocks on disk,
+  * keep-K garbage collection,
+  * restart — ``latest_step`` + ``restore`` rebuild (params, opt_state,
+    DSSP pipeline state, data cursor, controller state) exactly.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> Tuple[List[Tuple[str, Any]], Any]:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    named = [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
+    return named, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, keep: int = 3,
+                 async_save: bool = True):
+        self.directory = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ---------------------------------------------------------------- save
+    def save(self, step: int, tree: Any,
+             extras: Optional[Dict[str, Any]] = None) -> None:
+        named, _ = _flatten(tree)
+        # transfer to host *now* (cheap np views) so the step can proceed
+        host = [(name, np.asarray(leaf)) for name, leaf in named]
+        self.wait()
+        if self.async_save:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host, extras or {}),
+                daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, host, extras or {})
+
+    def wait(self) -> None:
+        """Block until the in-flight save lands (and re-raise its error)."""
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _write(self, step: int, host, extras: Dict[str, Any]) -> None:
+        try:
+            final = self._step_dir(step)
+            tmp = final + ".tmp_"
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp)
+            os.makedirs(tmp)
+            manifest = {"step": step, "extras": extras, "leaves": []}
+            for i, (name, arr) in enumerate(host):
+                fname = f"arr_{i:05d}.npy"
+                np.save(os.path.join(tmp, fname), arr)
+                manifest["leaves"].append(
+                    {"name": name, "file": fname,
+                     "shape": list(arr.shape), "dtype": str(arr.dtype)})
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)          # the atomic commit point
+            self._gc()
+        except BaseException as e:  # surfaced on next wait()/save()
+            self._error = e
+
+    # -------------------------------------------------------------- restore
+    def steps(self) -> List[int]:
+        out = []
+        for d in os.listdir(self.directory):
+            if d.startswith("step_") and not d.endswith(".tmp_"):
+                try:
+                    out.append(int(d[5:]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def restore(self, step: int, like: Any,
+                ) -> Tuple[Any, Dict[str, Any]]:
+        """Restore into the structure of ``like`` (names must match)."""
+        d = self._step_dir(step)
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        by_name = {l["name"]: l for l in manifest["leaves"]}
+        named, treedef = _flatten(like)
+        leaves = []
+        for name, ref_leaf in named:
+            entry = by_name.get(name)
+            if entry is None:
+                raise KeyError(f"checkpoint {step} missing leaf {name}")
+            arr = np.load(os.path.join(d, entry["file"]))
+            if list(arr.shape) != list(np.shape(ref_leaf)):
+                raise ValueError(
+                    f"{name}: checkpoint shape {arr.shape} != "
+                    f"expected {np.shape(ref_leaf)}")
+            leaves.append(arr)
+        return treedef.unflatten(leaves), manifest["extras"]
+
+    def restore_latest(self, like: Any,
+                       ) -> Optional[Tuple[int, Any, Dict[str, Any]]]:
+        step = self.latest_step()
+        if step is None:
+            return None
+        tree, extras = self.restore(step, like)
+        return step, tree, extras
+
+    # ------------------------------------------------------------------ gc
+    def _gc(self) -> None:
+        steps = self.steps()
+        for s in steps[:-self.keep] if self.keep > 0 else []:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.directory, f"step_{step:09d}")

@@ -1,0 +1,22 @@
+"""qwen1.5-110b — dense with QKV bias.
+
+80L d_model=8192 64H (GQA kv=8) d_ff=49152 vocab=152064.
+[hf:Qwen/Qwen1.5-0.5B family scaling; hf]
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-110b", family="dense",
+    n_layers=80, d_model=8192, n_heads=64, n_kv_heads=8,
+    d_ff=49152, vocab_size=152064,
+    qkv_bias=True, rope_theta=1_000_000.0,
+    optimizer="adafactor",   # Adam state would not fit 16 GB/chip at 110B
+    grad_accum=16,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return CONFIG.scaled(n_layers=2, d_model=64, n_heads=8, n_kv_heads=2,
+                         d_ff=192, vocab_size=256, dtype="float32",
+                         remat="none")

@@ -1,0 +1,84 @@
+"""Assigned input shapes and ShapeDtypeStruct builders for every cell.
+
+  train_4k     seq 4096,    global batch 256   -> train_step
+  prefill_32k  seq 32768,   global batch 32    -> serve prefill
+  decode_32k   seq 32768,   global batch 128   -> serve_step (1 new token,
+                                                 KV/state cache of seq_len)
+  long_500k    seq 524288,  global batch 1     -> serve_step, sub-quadratic
+                                                 attention archs only
+
+``input_specs`` returns (kind, specs-dict) where every leaf is a
+``jax.ShapeDtypeStruct`` — weak-type-correct, shardable, no allocation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+# archs with sub-quadratic attention (SWA / recurrent / hybrid) run
+# long_500k; pure full-attention archs skip it (DESIGN.md §5)
+SUB_QUADRATIC = {"h2o-danube-1.8b", "xlstm-125m", "jamba-v0.1-52b"}
+
+
+def cell_applicable(arch: str, shape: str) -> bool:
+    if shape == "long_500k":
+        return arch in SUB_QUADRATIC
+    return True
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Model inputs as ShapeDtypeStructs for the given cell."""
+    b, l = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        if cfg.family == "audio":
+            return {"frames": _sds((b, l, cfg.d_model), cfg.dtype),
+                    "tokens": _sds((b, l), jnp.int32),
+                    "labels": _sds((b, l), jnp.int32)}
+        return {"tokens": _sds((b, l), jnp.int32),
+                "labels": _sds((b, l), jnp.int32)}
+    if shape.kind == "prefill":
+        if cfg.family == "audio":
+            return {"frames": _sds((b, l, cfg.d_model), cfg.dtype),
+                    "tokens": _sds((b, l), jnp.int32),
+                    "labels": _sds((b, l), jnp.int32)}
+        return {"tokens": _sds((b, l), jnp.int32),
+                "labels": _sds((b, l), jnp.int32)}
+    # decode: one new token against a cache of length seq_len
+    return {"token": _sds((b, 1), jnp.int32)}
+
+
+def state_sds(cfg: ModelConfig, shape: ShapeSpec) -> Any:
+    """Decode cache/state as ShapeDtypeStructs (kind == 'decode')."""
+    from repro.models import registry
+    b, l = shape.global_batch, shape.seq_len
+    fam = registry.family(cfg)
+    if cfg.family == "audio":
+        return jax.eval_shape(
+            lambda: fam.init_state(cfg, b, l, l))
+    return jax.eval_shape(lambda: fam.init_state(cfg, b, l))

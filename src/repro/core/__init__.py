@@ -1,0 +1,33 @@
+"""Core DSSP algorithm: staleness tracking, controller (Alg. 2), policies (Alg. 1)."""
+
+from repro.core.controller import (
+    IntervalEstimator,
+    SynchronizationController,
+    optimal_extra_iterations,
+    simulate_push_times,
+)
+from repro.core.policies import (
+    ASPPolicy,
+    BackupWorkersBSP,
+    BSPPolicy,
+    Decision,
+    DSSPPolicy,
+    SSPPolicy,
+    SyncPolicy,
+    make_policy,
+)
+from repro.core.staleness import (
+    PushRecord,
+    StalenessTracker,
+    dssp_effective_bound,
+    regret_bound_constant,
+)
+
+__all__ = [
+    "ASPPolicy", "BSPPolicy", "SSPPolicy", "DSSPPolicy", "BackupWorkersBSP",
+    "SyncPolicy", "Decision", "make_policy",
+    "SynchronizationController", "IntervalEstimator",
+    "simulate_push_times", "optimal_extra_iterations",
+    "StalenessTracker", "PushRecord",
+    "regret_bound_constant", "dssp_effective_bound",
+]

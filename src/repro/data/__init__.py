@@ -1,0 +1,5 @@
+"""Synthetic data pipeline (deterministic, host-sharded, resumable)."""
+
+from repro.data.synthetic import DataConfig, MarkovLM, batches, loss_floor
+
+__all__ = ["DataConfig", "MarkovLM", "batches", "loss_floor"]

@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the compute hot-spots (validated in interpret
+mode on CPU against the ref.py jnp oracles; native lowering on TPU).
+
+  flash_attention  causal / sliding-window / GQA, online softmax in VMEM
+  rmsnorm          fused single-pass RMSNorm
+  fused_update     DSSP delayed-gradient apply + momentum in one HBM pass
+
+Use via repro.kernels.ops (jit wrappers + custom_vjp).
+"""
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.fused_update import fused_update
+from repro.kernels.rmsnorm import rmsnorm
+
+__all__ = ["ops", "ref", "flash_attention_fwd", "fused_update", "rmsnorm"]

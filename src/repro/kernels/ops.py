@@ -1,0 +1,76 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On this container (CPU) the kernels execute in ``interpret=True`` mode
+for correctness validation; on TPU the same calls compile natively.  The
+flash-attention wrapper adds a ``jax.custom_vjp`` whose backward
+recomputes through the jnp reference — forward-pass memory wins are the
+kernel's contribution, the bwd kernel is future work (DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import fused_update as _fu
+from repro.kernels import ref as _ref
+from repro.kernels import rmsnorm as _rn
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+# ------------------------------------------------------------ flash attn
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention(q, k, v, causal: bool = True,
+                    window: Optional[int] = None,
+                    block: int = 128):
+    return _fa.flash_attention_fwd(q, k, v, causal=causal, window=window,
+                                   block_q=block, block_k=block,
+                                   interpret=not on_tpu())
+
+
+def _fa_fwd(q, k, v, causal, window, block):
+    out = flash_attention(q, k, v, causal, window, block)
+    return out, (q, k, v)
+
+
+def _fa_bwd(causal, window, block, res, dout):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: _ref.flash_attention_ref(
+            q_, k_, v_, causal=causal, window=window), q, k, v)
+    return vjp(dout)
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)
+
+
+# ------------------------------------------------------------ rmsnorm
+def rmsnorm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    return _rn.rmsnorm(x, weight, eps=eps, interpret=not on_tpu())
+
+
+# ------------------------------------------------------------ fused update
+def fused_update(p: jax.Array, m: jax.Array, g: jax.Array, *,
+                 lr, beta: float = 0.9, scale=1.0,
+                 ) -> Tuple[jax.Array, jax.Array]:
+    return _fu.fused_update(p, m, g, lr=lr, beta=beta, scale=scale,
+                            interpret=not on_tpu())
+
+
+def fused_update_tree(params, momenta, grads, *, lr, beta: float = 0.9,
+                      scale=1.0):
+    """Tree-mapped fused update (the DSSP pipeline's apply phase)."""
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_m = jax.tree_util.tree_leaves(momenta)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    outs = [fused_update(p, m, g, lr=lr, beta=beta, scale=scale)
+            for p, m, g in zip(flat_p, flat_m, flat_g)]
+    return (tdef.unflatten([o[0] for o in outs]),
+            tdef.unflatten([o[1] for o in outs]))

@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each function is the mathematical definition the kernel must reproduce;
+tests sweep shapes/dtypes and assert_allclose(kernel, ref).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True,
+                        window: Optional[int] = None) -> jax.Array:
+    """q (b, lq, hq, d); k/v (b, lk, hkv, d); GQA broadcast; f32 softmax.
+
+    Positions are aligned at the END: query i sits at absolute position
+    lk - lq + i (standard for self-attention lq == lk and for decode
+    suffix queries).
+    """
+    b, lq, hq, d = q.shape
+    lk, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    scores = jnp.einsum("blhd,bmhd->bhlm", qf, kf) / math.sqrt(d)
+    qpos = jnp.arange(lq)[:, None] + (lk - lq)
+    kpos = jnp.arange(lk)[None, :]
+    mask = jnp.ones((lq, lk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhlm,bmhd->blhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def rmsnorm_ref(x: jax.Array, weight: jax.Array,
+                eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)
+            * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+def fused_update_ref(p: jax.Array, m: jax.Array, g: jax.Array, *,
+                     lr: float, beta: float,
+                     scale: float = 1.0) -> Tuple[jax.Array, jax.Array]:
+    """DSSP delayed-gradient apply: one fused momentum-SGD step.
+
+        m' = beta * m + scale * g        (scale = staleness damping /
+        p' = p - lr * m'                  warm-up validity gate)
+
+    All math in f32; p'/m' cast back to the input dtypes.
+    """
+    mf = (beta * m.astype(jnp.float32)
+          + scale * g.astype(jnp.float32))
+    pf = p.astype(jnp.float32) - lr * mf
+    return pf.astype(p.dtype), mf.astype(m.dtype)

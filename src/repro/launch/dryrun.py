@@ -1,0 +1,196 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST stay first — jax locks the device count on first
+init, and the production meshes need 512 placeholder host devices.
+
+For each cell this driver:
+  1. builds the production mesh (16×16 single-pod / 2×16×16 multi-pod),
+  2. builds the step bundle (train_step with the DSSP delayed-gradient
+     pipeline / prefill / serve_step) with full in/out shardings,
+  3. ``jax.jit(...).lower(**ShapeDtypeStructs).compile()`` — no arrays
+     are ever allocated at 123B scale,
+  4. prints ``memory_analysis()`` (proves it fits) and
+     ``cost_analysis()`` and appends the roofline terms to a JSON report.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh both --out reports/dryrun.json
+  PYTHONPATH=src python -m repro.launch.dryrun --arch jamba-v0.1-52b \
+      --shape train_4k --mesh single --sync bsp
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import arch_names, get_config
+from repro.configs.shapes import SHAPES, cell_applicable
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_step
+from repro.roofline import analysis as roofline
+
+
+def _compile(cfg, mesh, shape, sync):
+    kw = {"sync": sync} if shape.kind == "train" else {}
+    bundle = build_step(cfg, mesh, shape, **kw)
+    jitted = jax.jit(bundle.fn,
+                     in_shardings=bundle.in_shardings,
+                     out_shardings=bundle.out_shardings,
+                     donate_argnums=bundle.donate_argnums)
+    lowered = jitted.lower(*bundle.input_sds)
+    return lowered, lowered.compile()
+
+
+def fitted_costs(cfg, mesh, shape, sync) -> dict:
+    """Exact flops/bytes/collective-bytes via the two-point depth fit
+    (roofline.cost_configs); falls back to the full compile's raw costs
+    plus the analytic sLSTM correction for the unrolled xLSTM family."""
+    cc = roofline.cost_configs(cfg)
+    if cc is None:
+        _, compiled = _compile(cfg, mesh, shape, sync)
+        raw = roofline.raw_costs(compiled)
+        raw["flops"] += (roofline.slstm_correction_flops(cfg, shape)
+                         / mesh.devices.size)
+        raw["fit"] = "direct(unrolled)+slstm-analytic"
+        return raw
+    cfg1, cfg2, d1, d2, L = cc
+    _, comp1 = _compile(cfg1, mesh, shape, sync)
+    c1 = roofline.raw_costs(comp1)
+    _, comp2 = _compile(cfg2, mesh, shape, sync)
+    c2 = roofline.raw_costs(comp2)
+    out = {k: roofline.affine_fit(c1[k], c2[k], d1, d2, L)
+           for k in ("flops", "bytes", "coll")}
+    out["fit"] = f"affine(d{d1},d{d2}->L{L})"
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             sync: str = "dssp", verbose: bool = True,
+             cost_fit: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_label = "2x16x16" if multi_pod else "16x16"
+    if not cell_applicable(arch, shape_name):
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_label,
+                "status": "skipped",
+                "reason": "full attention is quadratic at 500k "
+                          "(DESIGN.md §5)"}
+    t0 = time.monotonic()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+
+    # 1. full-config compile: the runnability proof + memory analysis
+    lowered, compiled = _compile(cfg, mesh, shape, sync)
+    lowered_text = lowered.as_text()
+
+    # 2. cost extraction (two-point depth fit, see roofline/analysis.py);
+    #    the multi-pod pass skips it (the roofline table is single-pod)
+    terms = roofline.extract(compiled, None, cfg, shape, mesh_label)
+    if cost_fit:
+        costs = fitted_costs(cfg, mesh, shape, sync)
+        # replace while-undercounted raw numbers with the fitted ones
+        terms.flops = costs["flops"]
+        terms.hbm_bytes = costs["bytes"]
+        terms.collective_bytes = costs["coll"]
+        terms.t_compute = costs["flops"] / roofline.PEAK_FLOPS
+        terms.t_memory = costs["bytes"] / roofline.HBM_BW
+        terms.t_collective = costs["coll"] / roofline.ICI_BW
+    compile_s = time.monotonic() - t0
+    mem = compiled.memory_analysis()
+    if verbose:
+        print(f"--- {arch} × {shape_name} × {mesh_label} "
+              f"(sync={sync if shape.kind == 'train' else '-'}) ---")
+        print(f"memory_analysis: {mem}")
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        keep = {k: v for k, v in sorted(cost.items())
+                if k in ("flops", "bytes accessed", "transcendentals")
+                or k.startswith("bytes accessed")}
+        print(f"cost_analysis (per-chip): "
+              f"{json.dumps(keep, default=float)[:400]}")
+        print(roofline.HEADER)
+        print(roofline.format_row(terms))
+        sys.stdout.flush()
+
+    hbm_limit = 16 * 2**30
+    fits = terms.per_device_argument_bytes <= hbm_limit
+    return {
+        "arch": arch, "shape": shape_name, "mesh": mesh_label,
+        "status": "ok", "sync": sync if shape.kind == "train" else None,
+        "compile_seconds": round(compile_s, 1),
+        "fits_hbm": bool(fits),
+        "flops_per_chip": terms.flops,
+        "hbm_bytes_per_chip": terms.hbm_bytes,
+        "collective_bytes_per_chip": terms.collective_bytes,
+        "t_compute": terms.t_compute,
+        "t_memory": terms.t_memory,
+        "t_collective": terms.t_collective,
+        "dominant": terms.dominant,
+        "model_flops": terms.model_flops,
+        "useful_flops_ratio": terms.useful_flops_ratio,
+        "roofline_fraction": terms.roofline_fraction,
+        "argument_gib_per_chip": terms.per_device_argument_bytes / 2**30,
+        "peak_gib_per_chip": terms.peak_memory_bytes / 2**30,
+        "collective_counts": terms.collective_counts,
+        "hlo_bytes": len(lowered_text),
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--sync", default="dssp",
+                    choices=["bsp", "ssp", "dssp"])
+    ap.add_argument("--out", default="")
+    ap.add_argument("--keep-going", action="store_true", default=True)
+    ap.add_argument("--no-cost-fit", action="store_true")
+    args = ap.parse_args()
+
+    archs = arch_names() if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    results, failures = [], 0
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                try:
+                    results.append(run_cell(arch, shape, multi,
+                                            sync=args.sync,
+                                            cost_fit=not args.no_cost_fit))
+                except Exception as e:  # a failed cell is a bug: report it
+                    failures += 1
+                    traceback.print_exc()
+                    results.append({
+                        "arch": arch, "shape": shape,
+                        "mesh": "2x16x16" if multi else "16x16",
+                        "status": "error", "error": repr(e)[:500],
+                    })
+                    if not args.keep_going:
+                        raise
+                if args.out:
+                    os.makedirs(os.path.dirname(args.out) or ".",
+                                exist_ok=True)
+                    with open(args.out, "w") as f:
+                        json.dump(results, f, indent=1, default=float)
+
+    ok = sum(1 for r in results if r["status"] == "ok")
+    sk = sum(1 for r in results if r["status"] == "skipped")
+    print(f"\n=== dry-run: {ok} ok, {sk} skipped, {failures} failed, "
+          f"{len(results)} total ===")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,48 @@
+"""Elastic scaling: re-mesh a training state onto a different device count.
+
+Node loss (or growth) flow:
+  1. the job restarts with however many devices survive,
+  2. ``elastic_mesh(n)`` builds the largest (data, model) mesh that fits,
+  3. ``remesh`` device_puts the checkpointed state under the new mesh's
+     shardings (host RAM is the transfer buffer — the same path a real
+    multi-host restore uses per-host shards for),
+  4. the data pipeline re-shards itself by (host_index, n_hosts) — batch
+     order is a pure function of the step, so no samples are lost or
+     duplicated (data/synthetic.py),
+  5. DSSP's controller re-learns step intervals within a few steps
+     (the paper's adaptivity argument, §III.B).
+
+The PS layer has its own elasticity (workers join/leave the staleness
+tracker at runtime — ps/server.py); this module covers the SPMD path.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import elastic_mesh
+from repro.models import registry
+from repro.models.params import sds_tree, spec_tree
+from repro.models.sharding import rules_for_mesh
+
+
+def remesh(tree: Any, spec: Any, mesh: jax.sharding.Mesh) -> Any:
+    """device_put a pytree under new shardings (specs pytree-aligned)."""
+    def put(x, s):
+        return jax.device_put(x, NamedSharding(mesh, s))
+
+    return jax.tree_util.tree_map(
+        put, tree, spec, is_leaf=lambda x: x is None)
+
+
+def rescale_params(cfg, params: Any, n_devices: int,
+                   model_parallel: int = 16,
+                   ) -> Tuple[Any, jax.sharding.Mesh]:
+    """Reshard ``params`` for a cluster that now has ``n_devices``."""
+    mesh = elastic_mesh(n_devices, model_parallel=model_parallel)
+    rules = rules_for_mesh(mesh)
+    specs = spec_tree(registry.param_defs(cfg), rules)
+    return remesh(params, specs, mesh), mesh

@@ -1,0 +1,243 @@
+"""Train / serve step builders with full sharding metadata.
+
+``build_train_step``/``build_serve_step`` return (fn, in_shardings,
+out_shardings, donate) ready for ``jax.jit`` — used identically by the
+real trainer (examples/), the dry-run (lower+compile only) and the
+benchmarks.  The DSSP delayed-gradient pipeline threads through the train
+step when ``sync != 'bsp'``; its delay is a traced scalar so the
+controller re-tunes it without recompiles.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import dssp_spmd
+from repro.configs.shapes import ShapeSpec, input_specs, state_sds
+from repro.models import registry, transformer
+from repro.models.config import ModelConfig
+from repro.models.params import sds_tree, spec_tree
+from repro.models.sharding import (AxisRules, rules_for_mesh, shard,
+                                    use_rules)
+from repro.optim import make_optimizer
+from repro.optim.optimizers import Optimizer, state_partition_specs
+
+
+@dataclasses.dataclass
+class StepBundle:
+    fn: Callable
+    in_shardings: Tuple
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...]
+    input_sds: Tuple            # ShapeDtypeStructs matching fn's signature
+    rules: AxisRules
+
+
+def _named(mesh, tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_specs(cfg: ModelConfig, rules: AxisRules, sds: Dict[str, Any]):
+    def spec(x):
+        axes = ["batch"] + [None] * (len(x.shape) - 1)
+        return rules.spec(axes, x.shape)
+
+    return jax.tree_util.tree_map(spec, sds)
+
+
+# ------------------------------------------------------------------ train
+def build_train_step(cfg: ModelConfig, mesh, shape: ShapeSpec, *,
+                     sync: str = "dssp", s_upper: int = 1,
+                     optimizer: Optional[Optimizer] = None,
+                     lr: float = 3e-4) -> StepBundle:
+    rules = rules_for_mesh(mesh, sp=cfg.sequence_parallel,
+                           role=cfg.model_axis_role)
+    opt = optimizer or make_optimizer(cfg.optimizer, lr)
+    lfn = registry.loss_fn(cfg)
+    use_pipeline = sync in ("ssp", "dssp")
+
+    defs = registry.param_defs(cfg)
+    p_sds = sds_tree(defs, cfg.dtype)
+    p_spec = spec_tree(defs, rules)
+    o_sds = jax.eval_shape(opt.init, p_sds)
+    o_spec = state_partition_specs(opt, p_spec, p_sds)
+    b_sds = input_specs(cfg, shape)
+    b_spec = batch_specs(cfg, rules, b_sds)
+
+    if use_pipeline:
+        grads_sds = p_sds  # grads shaped like params (cast to cfg dtype)
+        pipe_sds = jax.eval_shape(
+            functools.partial(dssp_spmd.init_pipeline, depth=s_upper + 1),
+            grads_sds)
+        pipe_spec = dssp_spmd.pipeline_specs(p_spec, s_upper + 1)
+    else:
+        pipe_sds, pipe_spec = (), ()
+
+    import math as _math
+    accum = _math.gcd(max(1, cfg.grad_accum), shape.global_batch)
+
+    def _grads(params, batch):
+        """value_and_grad with microbatch accumulation: remat saves one
+        residual stack per *microbatch*, so 88-layer models fit
+        16 GB/chip at global batch 256 (see DESIGN.md §9)."""
+        if accum <= 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                lfn, has_aux=True)(params, batch)
+            return loss, grads
+
+        def split(x):
+            # interleaved split: microbatch a = rows a::accum, so each
+            # microbatch holds exactly rows_per_device/accum rows on
+            # every device (a local view of the 'data'-sharded batch —
+            # a contiguous split would put whole microbatches on single
+            # devices and force a reshard per scan step)
+            mb = x.shape[0] // accum
+            perm = (1, 0) + tuple(range(2, x.ndim + 1))
+            return x.reshape((mb, accum) + x.shape[1:]).transpose(perm)
+
+        micro_batches = jax.tree_util.tree_map(split, batch)
+
+        def micro(g_acc, mb):
+            mb = jax.tree_util.tree_map(
+                lambda x: shard(x, "batch", *([None] * (x.ndim - 1))), mb)
+            (loss, _), g = jax.value_and_grad(lfn, has_aux=True)(params, mb)
+            g_acc = jax.tree_util.tree_map(
+                lambda a, b: a + b.astype(jnp.float32) / accum, g_acc, g)
+            return g_acc, loss
+
+        g0 = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        grads, losses = jax.lax.scan(micro, g0, micro_batches)
+        grads = jax.tree_util.tree_map(
+            lambda g, p: g.astype(p.dtype), grads, params)
+        return jnp.mean(losses), grads
+
+    def train_step(params, opt_state, pipeline, batch, delay):
+        with use_rules(rules):
+            loss, grads = _grads(params, batch)
+            if use_pipeline:
+                grads, valid, pipeline = dssp_spmd.push_pop(
+                    pipeline, grads, delay)
+                staleness = delay
+                lr_scale = valid
+            else:
+                staleness, lr_scale = 0, 1.0
+            params, opt_state = opt.update(grads, opt_state, params,
+                                           staleness=staleness,
+                                           lr_scale=lr_scale)
+        out_metrics = {"loss": loss}
+        return params, opt_state, pipeline, out_metrics
+
+    metrics_spec = jax.tree_util.tree_map(
+        lambda _: P(), jax.eval_shape(
+            train_step, p_sds, o_sds, pipe_sds, b_sds,
+            jax.ShapeDtypeStruct((), jnp.int32))[3])
+
+    in_sh = (_named(mesh, p_spec), _named(mesh, o_spec),
+             _named(mesh, pipe_spec), _named(mesh, b_spec),
+             NamedSharding(mesh, P()))
+    out_sh = (_named(mesh, p_spec), _named(mesh, o_spec),
+              _named(mesh, pipe_spec), _named(mesh, metrics_spec))
+    input_sds = (p_sds, o_sds, pipe_sds, b_sds,
+                 jax.ShapeDtypeStruct((), jnp.int32))
+    return StepBundle(train_step, in_sh, out_sh, (0, 1, 2), input_sds,
+                      rules)
+
+
+# ------------------------------------------------------------------ prefill
+def build_prefill_step(cfg: ModelConfig, mesh, shape: ShapeSpec) -> StepBundle:
+    # prefill/serve always use TP weight layouts: model_axis_role='dp' is
+    # a TRAINING choice (batch 256 covers the joint axes); at prefill
+    # batch 32 the model axis would sit idle (measured 5.5 -> 74 s on
+    # h2o prefill under dp rules)
+    rules = rules_for_mesh(mesh, sp=cfg.sequence_parallel, role="tp")
+    defs = registry.param_defs(cfg)
+    p_sds = sds_tree(defs, cfg.dtype)
+    p_spec = spec_tree(defs, rules)
+    b_sds = input_specs(cfg, shape)
+    b_spec = batch_specs(cfg, rules, b_sds)
+    fam = registry.family(cfg)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        def prefill(params, batch):
+            with use_rules(rules):
+                logits, cache = transformer.forward_prefill(
+                    cfg, params, batch["tokens"])
+                token = jnp.argmax(logits[:, -1], axis=-1)
+            return token, cache
+
+        cache_spec = transformer.cache_specs(
+            cfg, shape.global_batch, shape.seq_len, rules)
+        tok_spec = rules.spec(("batch",), (shape.global_batch,))
+        out_sh = (NamedSharding(mesh, tok_spec), _named(mesh, cache_spec))
+    else:
+        # ssm/hybrid/audio: prefill = full forward, greedy last token
+        # (state capture for these families happens step-wise; noted in
+        # DESIGN.md — the trunk compute is identical)
+        def prefill(params, batch):
+            with use_rules(rules):
+                loss_like = fam.loss_fn(cfg, params, batch)
+            return loss_like[0]
+
+        out_sh = NamedSharding(mesh, P())
+
+    in_sh = (_named(mesh, p_spec), _named(mesh, b_spec))
+    return StepBundle(prefill, in_sh, out_sh, (), (p_sds, b_sds), rules)
+
+
+# ------------------------------------------------------------------ decode
+def build_serve_step(cfg: ModelConfig, mesh, shape: ShapeSpec) -> StepBundle:
+    # decode always uses TP weight sharding (sp=False, role='tp'):
+    # SP-mode replicates attention weights over 'model' (right for
+    # seq-sharded training, wrong per-token at decode — §Perf it.11) and
+    # dp-role leaves the model axis idle at batch < 256
+    rules = rules_for_mesh(mesh, sp=False, role="tp")
+    if not cfg.decode_batch_shard:
+        # qwen1.5-32b: the 40-head MHA cache only fits when cache_seq
+        # takes BOTH mesh axes; batch stays replicated (decode compute is
+        # one token -- the cache is the footprint that matters)
+        rules = AxisRules(dict(rules.rules, batch=None),
+                          rules.axis_sizes, rules.mesh)
+    defs = registry.param_defs(cfg)
+    p_sds = sds_tree(defs, cfg.dtype)
+    p_spec = spec_tree(defs, rules)
+    fam = registry.family(cfg)
+
+    cache_sds = state_sds(cfg, shape)
+    b, l = shape.global_batch, shape.seq_len
+    if cfg.family == "audio":
+        cache_spec = fam.state_specs(cfg, b, l, l, rules)
+    else:
+        cache_spec = fam.state_specs(cfg, b, l, rules)
+    tok_sds = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    tok_spec = rules.spec(("batch", None), (b, 1))
+
+    def serve_step(params, token, cache, index):
+        with use_rules(rules):
+            logits, new_cache = fam.decode_fn(cfg, params, token, cache,
+                                              index)
+            next_token = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+        return next_token, new_cache
+
+    in_sh = (_named(mesh, p_spec), NamedSharding(mesh, tok_spec),
+             _named(mesh, cache_spec), NamedSharding(mesh, P()))
+    out_sh = (NamedSharding(mesh, tok_spec), _named(mesh, cache_spec))
+    input_sds = (p_sds, tok_sds, cache_sds,
+                 jax.ShapeDtypeStruct((), jnp.int32))
+    return StepBundle(serve_step, in_sh, out_sh, (2,), input_sds, rules)
+
+
+def build_step(cfg: ModelConfig, mesh, shape: ShapeSpec, **kw) -> StepBundle:
+    if shape.kind == "train":
+        return build_train_step(cfg, mesh, shape, **kw)
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, mesh, shape)
+    return build_serve_step(cfg, mesh, shape)

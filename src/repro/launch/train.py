@@ -1,0 +1,232 @@
+"""End-to-end trainer: DSSP-SPMD pipeline + controller + checkpoints.
+
+Runs on anything from 1 CPU device (smoke/reduced configs — this
+container) to the production mesh (full configs — the same step bundle
+the dry-run compiles).  The synchronization mode is first-class:
+
+    --sync bsp    psum-every-step baseline
+    --sync ssp    delayed-gradient pipeline, fixed delay = s_lower
+    --sync dssp   delayed-gradient pipeline, delay re-tuned every step by
+                  DsspScheduleController from measured step/collective
+                  times (no recompile: the delay is a traced scalar)
+
+Fault tolerance: atomic async checkpoints every ``save_every`` steps
+(params, optimizer state, DSSP ring buffer, data cursor); ``--resume``
+restores all of it and continues bit-exact w.r.t. the data stream.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import get_config, get_smoke_config
+from repro.core import dssp_spmd
+from repro.data.synthetic import DataConfig, batches, loss_floor
+from repro.models import registry
+from repro.models.sharding import use_rules
+from repro.optim import make_optimizer
+from repro.optim.compression import make_compressor
+
+
+@dataclasses.dataclass
+class TrainLog:
+    steps: List[int] = dataclasses.field(default_factory=list)
+    losses: List[float] = dataclasses.field(default_factory=list)
+    delays: List[int] = dataclasses.field(default_factory=list)
+    step_times: List[float] = dataclasses.field(default_factory=list)
+
+    def record(self, step, loss, delay, dt):
+        self.steps.append(step)
+        self.losses.append(float(loss))
+        self.delays.append(int(delay))
+        self.step_times.append(dt)
+
+
+class Trainer:
+    def __init__(self, cfg, data_cfg: DataConfig, *, sync: str = "dssp",
+                 s_lower: int = 0, s_upper: int = 3, lr: float = 3e-3,
+                 optimizer: Optional[str] = None,
+                 checkpoint_dir: Optional[str] = None, keep: int = 3,
+                 save_every: int = 50, rules=None,
+                 compressor: str = "none",
+                 collective_time_fn: Optional[Callable[[], float]] = None,
+                 staleness_damping: bool = True):
+        if sync not in ("bsp", "ssp", "dssp"):
+            raise ValueError(f"sync {sync!r} not trainable in SPMD mode "
+                             "(asp exists in the PS layer only)")
+        self.cfg = cfg
+        self.data_cfg = data_cfg
+        self.sync = sync
+        self.s_lower, self.s_upper = s_lower, s_upper
+        self.use_pipeline = sync in ("ssp", "dssp")
+        self.rules = rules
+        self.controller = dssp_spmd.DsspScheduleController(
+            max(s_lower, 1) if self.use_pipeline else 0, s_upper)
+        self.collective_time_fn = collective_time_fn or (lambda: 0.0)
+        self.compressor = make_compressor(compressor)
+        self.log = TrainLog()
+
+        opt_kw = {}
+        opt_name = optimizer or cfg.optimizer
+        if opt_name in ("momentum", "adamw", "sgd"):
+            opt_kw["staleness_damping"] = staleness_damping
+        self.opt = make_optimizer(opt_name, lr, **opt_kw)
+        self.loss_fn = registry.loss_fn(cfg)
+
+        self.params = registry.init_params(cfg, jax.random.PRNGKey(0))
+        self.opt_state = self.opt.init(self.params)
+        if self.use_pipeline:
+            grads_like = jax.eval_shape(lambda p: p, self.params)
+            zero = jax.tree_util.tree_map(
+                lambda s: jnp.zeros(s.shape, s.dtype), grads_like)
+            self.pipeline = dssp_spmd.init_pipeline(zero, s_upper + 1)
+        else:
+            self.pipeline = ()
+        self.err_state = self.compressor.init_error(self.params)
+        self.step_idx = 0
+
+        self.ckpt = (CheckpointManager(checkpoint_dir, keep=keep)
+                     if checkpoint_dir else None)
+        self.save_every = save_every
+        self._jit_step = self._build_step()
+
+    # ------------------------------------------------------------ step fn
+    def _build_step(self):
+        opt, loss_fn = self.opt, self.loss_fn
+        use_pipeline = self.use_pipeline
+        compressor = self.compressor
+        rules = self.rules
+
+        def step(params, opt_state, pipeline, err, batch, delay):
+            with use_rules(rules):
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, batch)
+                if compressor.name != "none":
+                    grads, err = compressor.apply(grads, err)
+                if use_pipeline:
+                    grads, valid, pipeline = dssp_spmd.push_pop(
+                        pipeline, grads, delay)
+                    staleness, lr_scale = delay, valid
+                else:
+                    staleness, lr_scale = 0, 1.0
+                params, opt_state = opt.update(
+                    grads, opt_state, params, staleness=staleness,
+                    lr_scale=lr_scale)
+            return params, opt_state, pipeline, err, loss
+
+        return jax.jit(step, donate_argnums=(0, 1, 2, 3))
+
+    # ------------------------------------------------------------ resume
+    def resume(self) -> bool:
+        if self.ckpt is None:
+            return False
+        state_like = {"params": self.params, "opt": self.opt_state,
+                      "pipeline": self.pipeline}
+        got = self.ckpt.restore_latest(state_like)
+        if got is None:
+            return False
+        step, tree, extras = got
+        self.params = tree["params"]
+        self.opt_state = jax.tree_util.tree_map(
+            jnp.asarray, tree["opt"])
+        self.pipeline = jax.tree_util.tree_map(
+            jnp.asarray, tree["pipeline"])
+        self.step_idx = extras["next_step"]
+        return True
+
+    # ------------------------------------------------------------ train
+    def train(self, n_steps: int, *, log_every: int = 10,
+              verbose: bool = False) -> TrainLog:
+        it = batches(self.cfg, self.data_cfg, start_step=self.step_idx)
+        end = self.step_idx + n_steps
+        while self.step_idx < end:
+            batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+            if self.sync == "dssp":
+                delay = self.controller.delay()
+            elif self.sync == "ssp":
+                delay = max(self.s_lower, 1)
+            else:
+                delay = 0
+            t0 = time.monotonic()
+            (self.params, self.opt_state, self.pipeline,
+             self.err_state, loss) = self._jit_step(
+                self.params, self.opt_state, self.pipeline,
+                self.err_state, batch, jnp.int32(delay))
+            loss = jax.block_until_ready(loss)
+            dt = time.monotonic() - t0
+            self.controller.observe(dt, self.collective_time_fn())
+            self.log.record(self.step_idx, loss, delay, dt)
+            if verbose and self.step_idx % log_every == 0:
+                print(f"step {self.step_idx:5d} loss {float(loss):.4f} "
+                      f"delay {delay} dt {dt * 1e3:.0f}ms")
+            self.step_idx += 1
+            if (self.ckpt is not None and self.save_every
+                    and self.step_idx % self.save_every == 0):
+                self.save()
+        if self.ckpt is not None:
+            self.save()
+            self.ckpt.wait()
+        return self.log
+
+    def save(self) -> None:
+        self.ckpt.save(self.step_idx, {
+            "params": self.params, "opt": self.opt_state,
+            "pipeline": self.pipeline,
+        }, extras={"next_step": self.step_idx,
+                   "data_seed": self.data_cfg.seed})
+
+
+# -------------------------------------------------------------------- CLI
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="xlstm-125m")
+    ap.add_argument("--smoke", action="store_true", default=True,
+                    help="reduced config (full configs need a TPU mesh)")
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--sync", default="dssp",
+                    choices=["bsp", "ssp", "dssp"])
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--optimizer", default=None)
+    ap.add_argument("--s-lower", type=int, default=0)
+    ap.add_argument("--s-upper", type=int, default=3)
+    ap.add_argument("--compress", default="none",
+                    choices=["none", "int8", "topk"])
+    ap.add_argument("--checkpoint-dir", default="")
+    ap.add_argument("--save-every", type=int, default=100)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                          global_batch=args.batch)
+    trainer = Trainer(cfg, data_cfg, sync=args.sync, lr=args.lr,
+                      optimizer=args.optimizer,
+                      s_lower=args.s_lower, s_upper=args.s_upper,
+                      compressor=args.compress,
+                      checkpoint_dir=args.checkpoint_dir or None,
+                      save_every=args.save_every)
+    if args.resume:
+        resumed = trainer.resume()
+        print(f"resume: {'ok, at step ' + str(trainer.step_idx) if resumed else 'no checkpoint'}")
+    print(f"arch={cfg.name} sync={args.sync} params="
+          f"{registry.count_params(cfg):,} "
+          f"loss_floor~{loss_floor(data_cfg):.3f}")
+    log = trainer.train(args.steps, verbose=True)
+    print(f"final loss {log.losses[-1]:.4f} "
+          f"(first {log.losses[0]:.4f}); mean delay "
+          f"{np.mean(log.delays):.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Model zoo: dense/MoE transformers, xLSTM, Mamba hybrids, enc-dec."""
+
+from repro.models.config import ModelConfig, MoEConfig
+from repro.models.sharding import (
+    AxisRules,
+    rules_for_mesh,
+    shard,
+    use_rules,
+)
+
+__all__ = ["ModelConfig", "MoEConfig", "AxisRules", "rules_for_mesh",
+           "shard", "use_rules"]

@@ -1,0 +1,212 @@
+"""Whisper-style encoder-decoder backbone.
+
+The mel/conv frontend is a STUB per the assignment brief: ``input_specs``
+provides precomputed frame embeddings (batch, frames, d_model) — the
+encoder consumes them after adding sinusoidal positions.  The decoder is a
+standard pre-LN transformer with causal self-attention + cross-attention,
+GELU MLP, LayerNorm (with bias) and tied embeddings, matching Whisper.
+
+Serving: ``encode`` runs once per request; decode keeps a self-attention
+KV ring cache plus the *precomputed* cross-attention K/V of the encoder
+output (computed at prefill, static afterwards).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.models.params import ParamDef
+from repro.models.sharding import shard
+
+
+def param_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    ne = cfg.n_encoder_layers or cfg.n_layers
+    nd = cfg.n_layers
+    d = cfg.d_model
+    enc_layer = {
+        "attn": T.attn_defs(cfg, ne),
+        "attn_norm": T.norm_defs(cfg, ne),
+        "mlp": T.mlp_defs(cfg, ne),
+        "mlp_norm": T.norm_defs(cfg, ne),
+    }
+    dec_layer = {
+        "self_attn": T.attn_defs(cfg, nd),
+        "self_norm": T.norm_defs(cfg, nd),
+        "cross_attn": T.attn_defs(cfg, nd),
+        "cross_norm": T.norm_defs(cfg, nd),
+        "mlp": T.mlp_defs(cfg, nd),
+        "mlp_norm": T.norm_defs(cfg, nd),
+    }
+    return {
+        "embed": ParamDef((cfg.padded_vocab, d), ("model", "fsdp"),
+                          init="embed", fan_in_dims=(1,)),
+        # sized for the largest assigned decode shape (32k); real whisper
+        # caps at 448 — the backbone is exercised at the assigned shapes
+        "pos_embed": ParamDef((32768, d), (None, "fsdp"), scale=0.02),
+        "encoder": enc_layer,
+        "enc_final": T._unstack_norm(cfg),
+        "decoder": dec_layer,
+        "dec_final": T._unstack_norm(cfg),
+    }
+
+
+def _sinusoid(length: int, d: int) -> jax.Array:
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _xattn(cfg: ModelConfig, x: jax.Array, w: Dict[str, Any],
+           kv_src: jax.Array = None, mask=None,
+           precomputed_kv=None) -> jax.Array:
+    """Self- or cross-attention without rotary (whisper uses abs pos)."""
+    q = jnp.einsum("bld,dhk->blhk", x, w["wq"])
+    if cfg.qkv_bias:
+        q = q + w["bq"]
+    if precomputed_kv is not None:
+        k, v = precomputed_kv
+    else:
+        src = x if kv_src is None else kv_src
+        k = jnp.einsum("bld,dhk->blhk", src, w["wk"])
+        v = jnp.einsum("bld,dhk->blhk", src, w["wv"])
+        if cfg.qkv_bias:
+            k, v = k + w["bk"], v + w["bv"]
+    if mask is None:
+        mask = jnp.ones((q.shape[1], k.shape[1]), bool)
+    out = L.attention(cfg, q, k, v, mask=mask)
+    return jnp.einsum("blhk,hkd->bld", out, w["wo"])
+
+
+def encode(cfg: ModelConfig, params: Dict[str, Any],
+           frames: jax.Array) -> jax.Array:
+    """frames (b, l_enc, d_model) -> encoder states (b, l_enc, d_model)."""
+    b, l, d = frames.shape
+    x = (frames.astype(jnp.dtype(cfg.dtype))
+         + _sinusoid(l, d).astype(jnp.dtype(cfg.dtype))[None])
+    x = shard(x, "batch", None, None)
+
+    def body(carry, w):
+        h = L.apply_norm(cfg, carry, w["attn_norm"])
+        y = carry + _xattn(cfg, h, w["attn"])
+        h = L.apply_norm(cfg, y, w["mlp_norm"])
+        return y + L.mlp_block(cfg, h, w["mlp"]), ()
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["encoder"],
+                        unroll=cfg.scan_unroll)
+    return L.apply_norm(cfg, x, params["enc_final"])
+
+
+def decode_train(cfg: ModelConfig, params: Dict[str, Any], tokens: jax.Array,
+                 enc: jax.Array) -> jax.Array:
+    b, l = tokens.shape
+    x = (L.embed(tokens, params["embed"])
+         + params["pos_embed"][:l][None]).astype(jnp.dtype(cfg.dtype))
+    mask = L.causal_window_mask(l, l)
+
+    def body(carry, w):
+        h = L.apply_norm(cfg, carry, w["self_norm"])
+        y = carry + _xattn(cfg, h, w["self_attn"], mask=mask)
+        h = L.apply_norm(cfg, y, w["cross_norm"])
+        y = y + _xattn(cfg, h, w["cross_attn"], kv_src=enc)
+        h = L.apply_norm(cfg, y, w["mlp_norm"])
+        return y + L.mlp_block(cfg, h, w["mlp"]), ()
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["decoder"],
+                        unroll=cfg.scan_unroll)
+    x = L.apply_norm(cfg, x, params["dec_final"])
+    return L.unembed(x, params["embed"], cfg.vocab_size)
+
+
+def forward(cfg: ModelConfig, params: Dict[str, Any],
+            batch: Dict[str, jax.Array]) -> Tuple[jax.Array, jax.Array]:
+    enc = encode(cfg, params, batch["frames"])
+    logits = decode_train(cfg, params, batch["tokens"], enc)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+# --------------------------------------------------------------- serving
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               enc_len: int) -> Dict[str, Any]:
+    nd = cfg.n_layers
+    hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "self_k": jnp.zeros((nd, batch, max_seq, hkv, hd), dt),
+        "self_v": jnp.zeros((nd, batch, max_seq, hkv, hd), dt),
+        "cross_k": jnp.zeros((nd, batch, enc_len, hkv, hd), dt),
+        "cross_v": jnp.zeros((nd, batch, enc_len, hkv, hd), dt),
+    }
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_seq: int, enc_len: int,
+                rules) -> Dict[str, Any]:
+    from jax.sharding import PartitionSpec as P
+    nd = cfg.n_layers
+    hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    axes = (None, "batch", "cache_seq", None, None)
+
+    def spec(s):
+        return P() if rules is None else rules.spec(axes, s)
+
+    return {
+        "self_k": spec((nd, batch, max_seq, hkv, hd)),
+        "self_v": spec((nd, batch, max_seq, hkv, hd)),
+        "cross_k": spec((nd, batch, enc_len, hkv, hd)),
+        "cross_v": spec((nd, batch, enc_len, hkv, hd)),
+    }
+
+
+def prefill_cross_kv(cfg: ModelConfig, params: Dict[str, Any],
+                     enc: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Cross K/V for all decoder layers from the encoder output."""
+    def per_layer(w):
+        k = jnp.einsum("bld,dhk->blhk", enc, w["cross_attn"]["wk"])
+        v = jnp.einsum("bld,dhk->blhk", enc, w["cross_attn"]["wv"])
+        if cfg.qkv_bias:
+            k = k + w["cross_attn"]["bk"]
+            v = v + w["cross_attn"]["bv"]
+        return k.astype(jnp.dtype(cfg.dtype)), v.astype(jnp.dtype(cfg.dtype))
+
+    ks, vs = jax.lax.map(lambda w: per_layer(w), params["decoder"])
+    return ks, vs
+
+
+def forward_decode(cfg: ModelConfig, params: Dict[str, Any],
+                   token: jax.Array, cache: Dict[str, Any],
+                   index: jax.Array) -> Tuple[jax.Array, Dict[str, Any]]:
+    b = token.shape[0]
+    x = (L.embed(token, params["embed"])
+         + params["pos_embed"][index][None, None]).astype(jnp.dtype(cfg.dtype))
+
+    def body(carry, xs):
+        w, sk, sv, ck, cv = xs
+        h = L.apply_norm(cfg, carry, w["self_norm"])
+        att, ncache = L.decode_attention_block(
+            cfg, h, w["self_attn"], {"k": sk, "v": sv}, index)
+        y = carry + att
+        h = L.apply_norm(cfg, y, w["cross_norm"])
+        y = y + _xattn(cfg, h, w["cross_attn"], precomputed_kv=(ck, cv))
+        h = L.apply_norm(cfg, y, w["mlp_norm"])
+        y = y + L.mlp_block(cfg, h, w["mlp"])
+        return y, (ncache["k"], ncache["v"])
+
+    xs = (params["decoder"], cache["self_k"], cache["self_v"],
+          cache["cross_k"], cache["cross_v"])
+    x, (nk, nv) = jax.lax.scan(body, x, xs, unroll=cfg.scan_unroll)
+    x = L.apply_norm(cfg, x, params["dec_final"])
+    logits = L.unembed(x, params["embed"], cfg.vocab_size)
+    new_cache = dict(cache)
+    new_cache["self_k"], new_cache["self_v"] = nk, nv
+    return logits, new_cache

@@ -1,0 +1,216 @@
+"""Jamba-style hybrid: Mamba/attention 1:7 interleave + MoE every 2nd layer.
+
+Layer ``i`` is an attention layer iff ``i % attn_period == attn_offset``
+(Jamba: period 8); the FFN sublayer is MoE on every ``moe.every``-th layer
+(Jamba: 2), dense SwiGLU otherwise.  Layers are scanned in *period groups*:
+the 8 slots of one period are unrolled in the scan body (their param
+structure differs), the scan runs over ``n_layers / period`` groups — HLO
+stays small at 32+ layers.
+
+Decode state = {mamba conv tails + ssm states} ∪ {KV caches for the
+attention layers}.  With 7/8 layers recurrent, long-context decode is
+sub-quadratic: only the few attention layers keep a full-length cache
+(sequence-sharded over the mesh).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models import ssm
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.models.params import ParamDef
+from repro.models.sharding import shard
+
+
+def _slot_kinds(cfg: ModelConfig):
+    """Per period-slot: ('attn'|'mamba', 'moe'|'mlp')."""
+    period = cfg.attn_period or 1
+    kinds = []
+    for j in range(period):
+        mixer = "attn" if j == cfg.attn_offset else "mamba"
+        ffn = "moe" if (cfg.moe is not None
+                        and j % cfg.moe.every == cfg.moe.every - 1) else "mlp"
+        kinds.append((mixer, ffn))
+    return kinds
+
+
+def param_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    period = cfg.attn_period or 1
+    if cfg.n_layers % period:
+        raise ValueError("n_layers must be a multiple of attn_period")
+    groups = cfg.n_layers // period
+    slots = []
+    for mixer, ffn in _slot_kinds(cfg):
+        slot: Dict[str, Any] = {
+            "mixer_norm": T.norm_defs(cfg, groups),
+            "ffn_norm": T.norm_defs(cfg, groups),
+        }
+        if mixer == "attn":
+            slot["attn"] = T.attn_defs(cfg, groups)
+        else:
+            slot["mamba"] = ssm.mamba_defs(cfg, groups)
+        if ffn == "moe":
+            slot["moe"] = moe_lib.moe_defs(cfg, groups)
+        else:
+            slot["mlp"] = T.mlp_defs(cfg, groups)
+        slots.append(slot)
+    defs: Dict[str, Any] = {
+        "embed": ParamDef((cfg.padded_vocab, cfg.d_model), ("model", "fsdp"),
+                          init="embed", fan_in_dims=(1,)),
+        "final_norm": {"scale": ParamDef((cfg.d_model,), (None,),
+                                         init="ones")},
+        "slots": tuple(slots),
+    }
+    if not cfg.tie_embeddings:
+        defs["unembed"] = ParamDef((cfg.padded_vocab, cfg.d_model),
+                                   ("model", "fsdp"), fan_in_dims=(1,))
+    return defs
+
+
+def _slot_body(cfg: ModelConfig, mixer: str, ffn: str, x, w, mask):
+    h = L.apply_norm(cfg, x, w["mixer_norm"])
+    if mixer == "attn":
+        cos = sin = jnp.zeros(())            # rope off for jamba
+        x = x + L.attention_block(cfg, h, w["attn"], cos, sin, mask)
+    else:
+        x = x + ssm.mamba_block(cfg, h, w["mamba"])
+    h = L.apply_norm(cfg, x, w["ffn_norm"])
+    if ffn == "moe":
+        out, aux = moe_lib.moe_block(cfg, h, w["moe"])
+    else:
+        out, aux = L.mlp_block(cfg, h, w["mlp"]), jnp.zeros((), jnp.float32)
+    return x + out, aux
+
+
+def _group_body(cfg: ModelConfig, kinds, x, group_w, mask):
+    aux_total = jnp.zeros((), jnp.float32)
+    for (mixer, ffn), w in zip(kinds, group_w):
+        fn = functools.partial(_slot_body, cfg, mixer, ffn, mask=mask)
+        if cfg.remat == "full":
+            # per-slot remat inside the (already checkpointed) period
+            # group: the group backward otherwise keeps 7 mamba layers'
+            # chunked-scan internals live at once
+            fn = jax.checkpoint(fn)
+        x, aux = fn(x, w)
+        aux_total = aux_total + aux
+    return x, aux_total
+
+
+def forward(cfg: ModelConfig, params: Dict[str, Any], tokens: jax.Array,
+            ) -> Tuple[jax.Array, jax.Array]:
+    b, l = tokens.shape
+    kinds = _slot_kinds(cfg)
+    x = L.embed(tokens, params["embed"]).astype(jnp.dtype(cfg.dtype))
+    mask = L.causal_window_mask(l, l, window=cfg.sliding_window)
+    body = functools.partial(_group_body, cfg, kinds, mask=mask)
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+
+    def step(carry, group_w):
+        y, aux = body(carry, group_w)
+        return y, aux
+
+    x, auxs = jax.lax.scan(step, x, params["slots"],
+                           unroll=cfg.scan_unroll)
+    x = L.rms_norm(x, params["final_norm"]["scale"])
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    return L.unembed(x, table, cfg.vocab_size), jnp.sum(auxs)
+
+
+# --------------------------------------------------------------- serving
+def init_state(cfg: ModelConfig, batch: int, max_seq: int) -> Dict[str, Any]:
+    period = cfg.attn_period or 1
+    groups = cfg.n_layers // period
+    di = cfg.expand * cfg.d_model
+    state: Dict[str, Any] = {
+        "kv": {  # one attention layer per group
+            "k": jnp.zeros((groups, batch, max_seq, cfg.n_kv_heads,
+                            cfg.resolved_head_dim), jnp.dtype(cfg.dtype)),
+            "v": jnp.zeros((groups, batch, max_seq, cfg.n_kv_heads,
+                            cfg.resolved_head_dim), jnp.dtype(cfg.dtype)),
+        },
+        "mamba": {  # period-1 mamba layers per group
+            "conv": jnp.zeros((groups, period - 1, batch, cfg.d_conv - 1, di),
+                              jnp.dtype(cfg.dtype)),
+            "h": jnp.zeros((groups, period - 1, batch, di, cfg.d_state),
+                           jnp.float32),
+        },
+    }
+    return state
+
+
+def state_specs(cfg: ModelConfig, batch: int, max_seq: int, rules):
+    from jax.sharding import PartitionSpec as P
+    period = cfg.attn_period or 1
+    groups = cfg.n_layers // period
+    di = cfg.expand * cfg.d_model
+    hd = cfg.resolved_head_dim
+
+    def spec(axes, shape):
+        return P() if rules is None else rules.spec(axes, shape)
+
+    kv_shape = (groups, batch, max_seq, cfg.n_kv_heads, hd)
+    kv = spec((None, "batch", "cache_seq", None, None), kv_shape)
+    return {
+        "kv": {"k": kv, "v": kv},
+        "mamba": {
+            "conv": spec((None, None, "batch", None, "model"),
+                         (groups, period - 1, batch, cfg.d_conv - 1, di)),
+            "h": spec((None, None, "batch", "model", None),
+                      (groups, period - 1, batch, di, cfg.d_state)),
+        },
+    }
+
+
+def forward_decode(cfg: ModelConfig, params: Dict[str, Any],
+                   token: jax.Array, state: Dict[str, Any], index: jax.Array,
+                   ) -> Tuple[jax.Array, Dict[str, Any]]:
+    kinds = _slot_kinds(cfg)
+    x = L.embed(token, params["embed"]).astype(jnp.dtype(cfg.dtype))
+
+    def step(carry, xs):
+        y = carry
+        group_w, ck, cv, conv, hs = xs
+        mi = 0  # mamba slot counter within the group
+        nk, nv = ck, cv
+        nconv, nh = conv, hs
+        for (mixer, ffn), w in zip(kinds, group_w):
+            h = L.apply_norm(cfg, y, w["mixer_norm"])
+            if mixer == "attn":
+                out, ncache = L.decode_attention_block(
+                    cfg, h, w["attn"], {"k": ck, "v": cv}, index)
+                nk, nv = ncache["k"], ncache["v"]
+            else:
+                st = {"conv": conv[mi], "h": hs[mi]}
+                out, st2 = ssm.mamba_decode(
+                    cfg, h, jax.tree_util.tree_map(lambda p: p, w["mamba"]),
+                    st)
+                nconv = nconv.at[mi].set(st2["conv"])
+                nh = nh.at[mi].set(st2["h"])
+                mi += 1
+            y = y + out
+            h = L.apply_norm(cfg, y, w["ffn_norm"])
+            if ffn == "moe":
+                out, _ = moe_lib.moe_block(cfg, h, w["moe"])
+            else:
+                out = L.mlp_block(cfg, h, w["mlp"])
+            y = y + out
+        return y, (nk, nv, nconv, nh)
+
+    xs = (params["slots"], state["kv"]["k"], state["kv"]["v"],
+          state["mamba"]["conv"], state["mamba"]["h"])
+    x, (nk, nv, nconv, nh) = jax.lax.scan(step, x, xs,
+                                          unroll=cfg.scan_unroll)
+    x = L.rms_norm(x, params["final_norm"]["scale"])
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    new_state = {"kv": {"k": nk, "v": nv},
+                 "mamba": {"conv": nconv, "h": nh}}
+    return L.unembed(x, table, cfg.vocab_size), new_state

@@ -1,0 +1,137 @@
+"""Mixture-of-Experts FFN (GShard-style capacity dispatch, expert-parallel).
+
+Top-k routing with per-(row, chunk) capacity: the sequence is processed in
+chunks via ``lax.scan`` so the dispatch/combine one-hot tensors stay small
+(VMEM/HBM friendly), while expert weights are sharded over the 'model'
+mesh axis (EP).  GSPMD inserts the token all-to-all at the
+batch-sharded -> expert-sharded einsum boundary.
+
+Supports DeepSeek-MoE style *shared experts* (always-on) next to the
+routed ones, and emits the standard load-balancing auxiliary loss.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.params import ParamDef
+from repro.models.sharding import shard
+
+
+def moe_defs(cfg: ModelConfig, n: int) -> Dict[str, ParamDef]:
+    m = cfg.moe
+    d = cfg.d_model
+    f = m.d_expert or cfg.d_ff
+    e = m.n_experts
+    defs: Dict[str, ParamDef] = {
+        "router": ParamDef((n, d, e), (None, "fsdp", None), fan_in_dims=(1,)),
+        "w_gate": ParamDef((n, e, d, f), (None, "model", "fsdp", None),
+                           fan_in_dims=(2,)),
+        "w_up": ParamDef((n, e, d, f), (None, "model", "fsdp", None),
+                         fan_in_dims=(2,)),
+        "w_down": ParamDef((n, e, f, d), (None, "model", None, "fsdp"),
+                           fan_in_dims=(2,)),
+    }
+    if m.n_shared:
+        fs = f * m.n_shared
+        defs["shared_gate"] = ParamDef((n, d, fs), (None, "fsdp", "model"),
+                                       fan_in_dims=(1,))
+        defs["shared_up"] = ParamDef((n, d, fs), (None, "fsdp", "model"),
+                                     fan_in_dims=(1,))
+        defs["shared_down"] = ParamDef((n, fs, d), (None, "model", "fsdp"),
+                                       fan_in_dims=(1,))
+    return defs
+
+
+def _route(cfg: ModelConfig, x: jax.Array, router: jax.Array,
+           ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x (b, s, d) -> combine (b, s, e, c) f32, dispatch (same, model dtype),
+    aux load-balance loss (scalar)."""
+    m = cfg.moe
+    e, k = m.n_experts, m.top_k
+    s = x.shape[1]
+    capacity = max(k, int(m.capacity_factor * s * k / e))
+
+    logits = jnp.einsum("bsd,de->bse", x, router,
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                     # (b, s, e)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)             # (b, s, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)       # renormalize
+
+    # Load-balance aux loss (Switch/GShard): e * Σ_e fraction_e · meanprob_e
+    assign1 = jax.nn.one_hot(expert_idx[..., 0], e, dtype=jnp.float32)
+    frac = jnp.mean(assign1, axis=(0, 1))
+    meanp = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(frac * meanp)
+
+    # Position-in-expert per (row, chunk) group, k slots in priority order.
+    combine = jnp.zeros((x.shape[0], s, e, capacity), jnp.float32)
+    base = jnp.zeros((x.shape[0], 1, e), jnp.float32)           # used slots
+    for j in range(k):
+        onehot_e = jax.nn.one_hot(expert_idx[..., j], e,
+                                  dtype=jnp.float32)            # (b, s, e)
+        pos = jnp.cumsum(onehot_e, axis=1) - onehot_e + base    # (b, s, e)
+        within = (pos < capacity) & (onehot_e > 0)
+        pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), capacity,
+                                dtype=jnp.float32)              # (b,s,e,c)
+        combine = combine + (gate_vals[..., j][..., None, None]
+                             * within[..., None] * pos_oh * onehot_e[..., None])
+        base = base + jnp.sum(onehot_e, axis=1, keepdims=True)
+    dispatch = (combine > 0).astype(x.dtype)
+    return combine, dispatch, aux
+
+
+def _expert_ffn(cfg: ModelConfig, xe: jax.Array, w: Dict[str, Any]) -> jax.Array:
+    """xe (e, b, c, d) expert-sharded -> (e, b, c, d)."""
+    gate = jnp.einsum("ebcd,edf->ebcf", xe, w["w_gate"])
+    up = jnp.einsum("ebcd,edf->ebcf", xe, w["w_up"])
+    h = jax.nn.silu(gate.astype(jnp.float32)).astype(xe.dtype) * up
+    h = shard(h, "model", "batch", None, None)
+    return jnp.einsum("ebcf,efd->ebcd", h, w["w_down"])
+
+
+def _moe_chunk(cfg: ModelConfig, x: jax.Array, w: Dict[str, Any],
+               ) -> Tuple[jax.Array, jax.Array]:
+    """Route+dispatch+compute+combine for one (b, chunk, d) slab."""
+    combine, dispatch, aux = _route(cfg, x, w["router"])
+    # batch-sharded -> expert-sharded (GSPMD all-to-all happens here)
+    xe = jnp.einsum("bsd,bsec->ebcd", x, dispatch)
+    xe = shard(xe, "model", "batch", None, None)
+    ye = _expert_ffn(cfg, xe, w)
+    y = jnp.einsum("ebcd,bsec->bsd", ye, combine.astype(x.dtype))
+    return shard(y, "batch", None, None), aux
+
+
+def moe_block(cfg: ModelConfig, x: jax.Array, w: Dict[str, Any],
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x (b, l, d) -> (y (b, l, d), aux scalar). Scans over seq chunks."""
+    m = cfg.moe
+    b, l, d = x.shape
+    chunk = min(cfg.moe_chunk, l) if cfg.moe_chunk > 0 else l
+    out_shared = jnp.zeros_like(x)
+    if m.n_shared:
+        gate = jnp.einsum("bld,df->blf", x, w["shared_gate"])
+        up = jnp.einsum("bld,df->blf", x, w["shared_up"])
+        h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+        h = shard(h, "batch", None, "model")
+        out_shared = jnp.einsum("blf,fd->bld", h, w["shared_down"])
+
+    if chunk >= l or l % chunk != 0:   # decode / cost-mode: single dispatch
+        y, aux = _moe_chunk(cfg, x, w)
+        return y + out_shared, aux
+
+    n_chunks = l // chunk
+    xs = x.reshape(b, n_chunks, chunk, d).transpose(1, 0, 2, 3)
+
+    def step(_, xc):
+        y, aux = _moe_chunk(cfg, xc, w)
+        return (), (y, aux)
+
+    _, (ys, auxs) = jax.lax.scan(step, (), xs)
+    y = ys.transpose(1, 0, 2, 3).reshape(b, l, d)
+    return y + out_shared, jnp.mean(auxs)

@@ -1,0 +1,175 @@
+"""Logical-axis sharding: one place that maps logical axes -> mesh axes.
+
+Model code annotates params/activations with *logical* axes
+('batch', 'model', 'fsdp', 'cache_seq', ...).  ``AxisRules`` maps them
+onto physical mesh axes (('pod','data','model')) **size-aware**: a
+mapping is dropped for a tensor dimension the mesh axes do not evenly
+divide (e.g. qwen1.5-32b's 40 heads over a 16-way model axis, batch=1
+long-context decode over the data axis, whisper's 51865 vocab).  With no
+rules installed every annotation is a no-op, so identical model code runs
+on 1 CPU device in smoke tests and on the 512-chip mesh in the dry-run.
+
+This indirection is also what lets the perf loop re-shard without touching
+model code: hillclimb iterations swap the rule set only.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+class AxisRules:
+    """logical-axis -> mesh-axes mapping + mesh axis sizes for div checks."""
+
+    def __init__(self, rules: Dict[str, MeshAxes],
+                 axis_sizes: Optional[Dict[str, int]] = None,
+                 mesh: Optional[jax.sharding.Mesh] = None):
+        self.rules = dict(rules)
+        self.axis_sizes = dict(axis_sizes or {})
+        self.mesh = mesh
+        self.attn_mode = "tp"   # 'tp' | 'sp', set by the rule builders
+
+    def _mesh_axes(self, logical: Optional[str]) -> Tuple[str, ...]:
+        m = self.rules.get(logical) if logical else None
+        if m is None:
+            return ()
+        return (m,) if isinstance(m, str) else tuple(m)
+
+    def _divides(self, dim: Optional[int], axes: Sequence[str]) -> bool:
+        if dim is None or not self.axis_sizes:
+            return True     # unknown shape: trust the caller
+        n = 1
+        for a in axes:
+            n *= self.axis_sizes.get(a, 1)
+        return n > 0 and dim % n == 0
+
+    def spec(self, logical: Sequence[Optional[str]],
+             shape: Optional[Sequence[int]] = None) -> P:
+        dims = list(shape) if shape is not None else [None] * len(logical)
+        if shape is not None and len(dims) != len(logical):
+            raise ValueError(f"rank mismatch: shape {shape} vs axes {logical}")
+        phys, used = [], set()
+        for ax, dim in zip(logical, dims):
+            ms = tuple(a for a in self._mesh_axes(ax) if a not in used)
+            # prefix fallback: a dim that does not divide the full tuple
+            # may still divide a prefix (e.g. batch 32 over
+            # ('data','model') = 256 -> shard over 'data' = 16 only)
+            while ms and not self._divides(dim, ms):
+                ms = ms[:-1]
+            if ms:
+                used.update(ms)
+                phys.append(ms if len(ms) > 1 else ms[0])
+            else:
+                phys.append(None)
+        while phys and phys[-1] is None:
+            phys.pop()
+        return P(*phys)
+
+
+_state = threading.local()
+
+
+def current_rules() -> Optional[AxisRules]:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[AxisRules]):
+    prev = current_rules()
+    _state.rules = rules
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def logical_spec(logical: Sequence[Optional[str]],
+                 shape: Optional[Sequence[int]] = None) -> P:
+    r = current_rules()
+    return P() if r is None else r.spec(logical, shape)
+
+
+def shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """with_sharding_constraint on logical axes; no-op without rules."""
+    r = current_rules()
+    if r is None or r.mesh is None:
+        return x
+    spec = r.spec(logical, x.shape)
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(r.mesh, spec))
+
+
+# -- standard rule sets -------------------------------------------------------
+def _base_rules(batch_axes, *, fsdp: bool, sp: bool,
+                role: str = "tp") -> Dict[str, MeshAxes]:
+    """Shared logical->mesh mapping.
+
+    sp=False (Megatron-TP attention): attention heads shard over 'model',
+    activations replicated on 'model' between blocks.
+    sp=True (sequence-parallel attention, the measured winner on the
+    dry-run — EXPERIMENTS.md §Perf it.8-9): the activation seq dim is the
+    canonical 'model' sharding; attention runs with heads UNsharded and
+    queries seq-sharded (no l<->h layout transitions, no wo psum); the
+    MLP keeps Megatron f-sharding with AG/RS at its boundary; attention
+    weights replicate over 'model' but stay FSDP-sharded over 'data'.
+    """
+    if role == "dp":
+        # small models: the 'model' axis joins data parallelism; params
+        # and optimizer state ZeRO-shard over BOTH axes
+        return {
+            "batch": tuple(batch_axes) + ("model",),
+            "model": None,
+            "heads": None,
+            "kv_heads": None,
+            "fsdp": ("data", "model") if fsdp else None,
+            "cache_seq": ("data", "model"),
+            "seq": None,
+            "attn_mode": None,
+        }
+    return {
+        "batch": batch_axes,
+        "model": "model",               # TP dim (ffn/vocab/experts)
+        "heads": None if sp else "model",
+        "kv_heads": None if sp else "model",
+        "fsdp": "data" if fsdp else None,
+        "cache_seq": ("data", "model"),  # decode KV-cache sequence shards
+        "seq": "model" if sp else None,  # activation sequence dim
+        "attn_mode": None,               # marker, read via .rules
+    }
+
+
+def single_pod_rules(axis_sizes: Optional[Dict[str, int]] = None, *,
+                     fsdp: bool = True, sp: bool = True, role: str = "tp",
+                     mesh: Optional[jax.sharding.Mesh] = None) -> AxisRules:
+    """mesh ('data','model'): DP over data, TP/EP over model; params
+    FSDP-sharded over data on a non-TP dim (ZeRO-3 style)."""
+    r = AxisRules(_base_rules(("data",), fsdp=fsdp, sp=sp, role=role),
+                  axis_sizes, mesh)
+    r.attn_mode = "sp" if (sp and role == "tp") else "tp"
+    return r
+
+
+def multi_pod_rules(axis_sizes: Optional[Dict[str, int]] = None, *,
+                    fsdp: bool = True, sp: bool = True, role: str = "tp",
+                    mesh: Optional[jax.sharding.Mesh] = None) -> AxisRules:
+    """mesh ('pod','data','model'): batch over pod×data; params replicated
+    across pods (cross-pod traffic = grad all-reduce only, DCN-friendly —
+    this is where DSSP's dynamic-period sync applies)."""
+    r = AxisRules(_base_rules(("pod", "data"), fsdp=fsdp, sp=sp, role=role),
+                  axis_sizes, mesh)
+    r.attn_mode = "sp" if (sp and role == "tp") else "tp"
+    return r
+
+
+def rules_for_mesh(mesh: jax.sharding.Mesh, **kw) -> AxisRules:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    multi = "pod" in mesh.axis_names
+    return (multi_pod_rules(sizes, mesh=mesh, **kw) if multi
+            else single_pod_rules(sizes, mesh=mesh, **kw))

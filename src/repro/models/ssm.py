@@ -1,0 +1,440 @@
+"""State-space / recurrent families: xLSTM (mLSTM + sLSTM) and Mamba (S6).
+
+TPU adaptation notes (see DESIGN.md §3):
+  * mLSTM trains with the stabilized *parallel* (quadratic) form — an
+    attention-shaped einsum that maps onto the MXU — and decodes with the
+    O(1) matrix-memory recurrence.
+  * Mamba's selective scan uses a *chunked associative scan*: parallel
+    within chunks (``jax.lax.associative_scan``), sequential across chunk
+    boundaries (``lax.scan`` carry), which bounds the materialized state
+    to (chunk, d_inner, d_state) instead of (L, d_inner, d_state).
+  * sLSTM is inherently sequential (true recurrence on the hidden state);
+    it runs as ``lax.scan`` over time.  This does not parallelize over
+    the sequence — an acknowledged property of the architecture, noted in
+    the xLSTM paper itself.
+
+Decode state (per layer) is the analogue of a KV cache:
+  mLSTM: C (b,h,d,d), n (b,h,d), m (b,h)
+  sLSTM: c,n,h̃ (b,h,d) + m (b,h)
+  Mamba: conv tail (b, d_conv-1, d_inner) + ssm state (b, d_inner, d_state)
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.params import ParamDef
+from repro.models.sharding import shard
+
+
+# ====================================================================== mLSTM
+def mlstm_defs(cfg: ModelConfig, n: int) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    h = cfg.n_heads
+    hd = d // h
+    return {
+        "w_in": ParamDef((n, d, 2 * d), (None, "fsdp", "model"),
+                         fan_in_dims=(1,)),            # x branch + gate
+        "wq": ParamDef((n, d, h, hd), (None, "fsdp", "model", None),
+                       fan_in_dims=(1,)),
+        "wk": ParamDef((n, d, h, hd), (None, "fsdp", "model", None),
+                       fan_in_dims=(1,)),
+        "wv": ParamDef((n, d, h, hd), (None, "fsdp", "model", None),
+                       fan_in_dims=(1,)),
+        "w_if": ParamDef((n, d, 2 * h), (None, "fsdp", None),
+                         fan_in_dims=(1,)),            # input+forget gates
+        "b_if": ParamDef((n, 2 * h), (None, None), init="zeros"),
+        "w_out": ParamDef((n, d, d), (None, "model", "fsdp"),
+                          fan_in_dims=(1,)),
+    }
+
+
+def _mlstm_parallel(q: jax.Array, k: jax.Array, v: jax.Array,
+                    i_gate: jax.Array, f_gate: jax.Array) -> jax.Array:
+    """Stabilized parallel mLSTM (xLSTM paper eq. 19-27).
+
+    q/k/v (b, l, h, d);  i/f (b, l, h) pre-activations.
+    """
+    b, l, h, d = q.shape
+    logf = jax.nn.log_sigmoid(f_gate.astype(jnp.float32))       # (b,l,h)
+    cum = jnp.cumsum(logf, axis=1)
+    # F[t,s] = cum[t] - cum[s]  (decay applied strictly after step s)
+    fmat = cum[:, :, None, :] - cum[:, None, :, :]              # (b,t,s,h)
+    dmat = fmat + i_gate.astype(jnp.float32)[:, None, :, :]     # + i[s]
+    tri = jnp.tril(jnp.ones((l, l), bool))
+    dmat = jnp.where(tri[None, :, :, None], dmat, -jnp.inf)
+    m = jnp.max(dmat, axis=2, keepdims=True)                    # (b,t,1,h)
+    dexp = jnp.exp(dmat - m)                                    # stabilized
+    scores = jnp.einsum("blhd,bshd->blsh", q, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / math.sqrt(d) * dexp
+    norm = jnp.maximum(jnp.abs(jnp.sum(scores, axis=2)),
+                       jnp.exp(-m[:, :, 0, :]))                 # (b,l,h)
+    out = jnp.einsum("blsh,bshd->blhd", scores.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return (out / norm[..., None]).astype(v.dtype)
+
+
+def mlstm_block(cfg: ModelConfig, x: jax.Array, w: Dict[str, Any]) -> jax.Array:
+    b, l, d = x.shape
+    h = cfg.n_heads
+    hd = d // h
+    inner = jnp.einsum("bld,de->ble", x, w["w_in"])
+    xin, gate = jnp.split(inner, 2, axis=-1)
+    q = jnp.einsum("bld,dhk->blhk", xin, w["wq"])
+    k = jnp.einsum("bld,dhk->blhk", xin, w["wk"]) / math.sqrt(hd)
+    v = jnp.einsum("bld,dhk->blhk", xin, w["wv"])
+    gates = jnp.einsum("bld,dg->blg", xin, w["w_if"]) + w["b_if"]
+    i_gate, f_gate = jnp.split(gates, 2, axis=-1)
+    out = _mlstm_parallel(q, k, v, i_gate, f_gate)
+    out = out.reshape(b, l, d) * jax.nn.silu(gate.astype(jnp.float32)
+                                             ).astype(x.dtype)
+    return jnp.einsum("bld,de->ble", out, w["w_out"])
+
+
+def mlstm_decode(cfg: ModelConfig, x: jax.Array, w: Dict[str, Any],
+                 state: Dict[str, jax.Array],
+                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x (b, 1, d); state C (b,h,d,d), n (b,h,d), m (b,h)."""
+    b, _, d = x.shape
+    h = cfg.n_heads
+    hd = d // h
+    inner = jnp.einsum("bld,de->ble", x, w["w_in"])
+    xin, gate = jnp.split(inner, 2, axis=-1)
+    q = jnp.einsum("bd,dhk->bhk", xin[:, 0], w["wq"])
+    k = jnp.einsum("bd,dhk->bhk", xin[:, 0], w["wk"]) / math.sqrt(hd)
+    v = jnp.einsum("bd,dhk->bhk", xin[:, 0], w["wv"])
+    gates = jnp.einsum("bd,dg->bg", xin[:, 0], w["w_if"]) + w["b_if"]
+    i_pre, f_pre = jnp.split(gates, 2, axis=-1)                 # (b, h)
+    i_pre = i_pre.astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))
+    m_new = jnp.maximum(logf + state["m"], i_pre)
+    a = jnp.exp(logf + state["m"] - m_new)                      # (b, h)
+    bb = jnp.exp(i_pre - m_new)
+    kf, vf, qf = (t.astype(jnp.float32) for t in (k, v, q))
+    c_new = (a[..., None, None] * state["C"]
+             + bb[..., None, None] * kf[..., :, None] * vf[..., None, :])
+    n_new = a[..., None] * state["n"] + bb[..., None] * kf
+    num = jnp.einsum("bhkd,bhk->bhd", c_new, qf)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n_new, qf)),
+                      jnp.exp(-m_new))
+    out = (num / den[..., None]).reshape(b, 1, d).astype(x.dtype)
+    out = out * jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype)
+    return (jnp.einsum("bld,de->ble", out, w["w_out"]),
+            {"C": c_new, "n": n_new, "m": m_new})
+
+
+# ====================================================================== sLSTM
+def slstm_defs(cfg: ModelConfig, n: int) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    return {
+        # 4 gates (z, i, f, o), input + per-head recurrent weights
+        "w_x": ParamDef((n, d, 4 * d), (None, "fsdp", "model"),
+                        fan_in_dims=(1,)),
+        "w_h": ParamDef((n, cfg.n_heads, d // cfg.n_heads, 4 * d // cfg.n_heads),
+                        (None, "model", None, None), fan_in_dims=(2,)),
+        "bias": ParamDef((n, 4 * d), (None, "model"), init="zeros"),
+        "w_out": ParamDef((n, d, d), (None, "model", "fsdp"),
+                          fan_in_dims=(1,)),
+    }
+
+
+def _slstm_cell(carry, gx, head_dim):
+    """One timestep. carry: (c, n, h, m) each (b, H, hd) / m (b, H)."""
+    c, n, h, m = carry
+    # gx (b, H, 4*hd) = W_x·x_t (+ bias); add recurrent term outside
+    z_pre, i_pre, f_pre, o_pre = jnp.split(gx, 4, axis=-1)
+    # exponential gating with stabilizer state m (scalar per head)
+    i_max = jnp.max(i_pre, axis=-1)
+    logf = jax.nn.log_sigmoid(jnp.mean(f_pre, axis=-1))        # (b, H)
+    m_new = jnp.maximum(logf + m, i_max)
+    i_g = jnp.exp(i_pre - m_new[..., None])
+    f_g = jnp.exp(logf + m - m_new)[..., None]
+    z = jnp.tanh(z_pre)
+    o = jax.nn.sigmoid(o_pre)
+    c_new = f_g * c + i_g * z
+    n_new = f_g * n + i_g
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, h_new, m_new)
+
+
+def slstm_block(cfg: ModelConfig, x: jax.Array, w: Dict[str, Any]) -> jax.Array:
+    """Sequential scan over time; block-diagonal (per-head) recurrence."""
+    b, l, d = x.shape
+    H = cfg.n_heads
+    hd = d // H
+    gx_all = (jnp.einsum("bld,dg->blg", x, w["w_x"]) + w["bias"]
+              ).astype(jnp.float32).reshape(b, l, H, 4 * hd)
+
+    def step(carry, gx_t):
+        c, n, h, m = carry
+        rec = jnp.einsum("bhk,hkg->bhg", h, w["w_h"].astype(jnp.float32))
+        new = _slstm_cell((c, n, h, m), gx_t + rec, hd)
+        return new, new[2]
+
+    zeros = jnp.zeros((b, H, hd), jnp.float32)
+    m0 = jnp.full((b, H), -1e30, jnp.float32)
+    (_, _, _, _), hs = jax.lax.scan(step, (zeros, zeros, zeros, m0),
+                                    gx_all.transpose(1, 0, 2, 3))
+    out = hs.transpose(1, 0, 2, 3).reshape(b, l, d).astype(x.dtype)
+    return jnp.einsum("bld,de->ble", out, w["w_out"])
+
+
+def slstm_decode(cfg: ModelConfig, x: jax.Array, w: Dict[str, Any],
+                 state: Dict[str, jax.Array],
+                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    b, _, d = x.shape
+    H = cfg.n_heads
+    hd = d // H
+    gx = (jnp.einsum("bd,dg->bg", x[:, 0], w["w_x"]) + w["bias"]
+          ).astype(jnp.float32).reshape(b, H, 4 * hd)
+    rec = jnp.einsum("bhk,hkg->bhg", state["h"], w["w_h"].astype(jnp.float32))
+    c, n, h, m = _slstm_cell((state["c"], state["n"], state["h"], state["m"]),
+                             gx + rec, hd)
+    out = h.reshape(b, 1, d).astype(x.dtype)
+    return (jnp.einsum("bld,de->ble", out, w["w_out"]),
+            {"c": c, "n": n, "h": h, "m": m})
+
+
+# ====================================================================== Mamba
+def mamba_defs(cfg: ModelConfig, n: int) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    di = cfg.expand * d
+    ds = cfg.d_state
+    dt_rank = max(1, d // 16)
+    return {
+        "w_in": ParamDef((n, d, 2 * di), (None, "fsdp", "model"),
+                         fan_in_dims=(1,)),
+        "conv_w": ParamDef((n, cfg.d_conv, di), (None, None, "model"),
+                           scale=1.0, fan_in_dims=(1,)),
+        "conv_b": ParamDef((n, di), (None, "model"), init="zeros"),
+        "w_bcdt": ParamDef((n, di, 2 * ds + dt_rank), (None, "model", None),
+                           fan_in_dims=(1,)),
+        "dt_proj": ParamDef((n, dt_rank, di), (None, None, "model"),
+                            fan_in_dims=(1,)),
+        "dt_bias": ParamDef((n, di), (None, "model"), init="zeros"),
+        "a_log": ParamDef((n, di, ds), (None, "model", None), init="ones"),
+        "d_skip": ParamDef((n, di), (None, "model"), init="ones"),
+        "w_out": ParamDef((n, di, d), (None, "model", "fsdp"),
+                          fan_in_dims=(1,)),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 tail: jax.Array = None) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv. x (b, l, di), w (k, di). Returns (y, new_tail)."""
+    k = w.shape[0]
+    pad = tail if tail is not None else jnp.zeros(
+        (x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(k)) + b
+    new_tail = xp[:, -(k - 1):, :] if k > 1 else pad
+    return y.astype(x.dtype), new_tail
+
+
+def _ssm_chunked(u: jax.Array, delta: jax.Array, a: jax.Array, bmat: jax.Array,
+                 cmat: jax.Array, h0: jax.Array, chunk: int,
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Selective scan h_t = Ā_t h_{t-1} + B̄_t u_t ; y_t = C_t·h_t.
+
+    u/delta (b, l, di); a (di, ds); b/c (b, l, ds); h0 (b, di, ds).
+    Chunked: associative scan within chunks, carry across chunks.
+    """
+    b, l, di = u.shape
+    ds = a.shape[-1]
+    da = delta[..., None] * a[None, None]                       # (b,l,di,ds)
+    abar = jnp.exp(da)
+    bbar = delta[..., None] * bmat[:, :, None, :] * u[..., None]
+
+    nc = max(1, l // chunk)
+    abar = abar.reshape(b, nc, chunk, di, ds)
+    bbar = bbar.reshape(b, nc, chunk, di, ds)
+    cseq = cmat.reshape(b, nc, chunk, ds)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a2 * a1, a2 * b1 + b2
+
+    def chunk_step(h, xs):
+        ac, bc, cc = xs                       # (b, chunk, di, ds), ..., (b, chunk, ds)
+        acc_a, acc_b = jax.lax.associative_scan(combine, (ac, bc), axis=1)
+        hs = acc_a * h[:, None] + acc_b       # (b, chunk, di, ds)
+        y = jnp.einsum("bcds,bcs->bcd", hs, cc)
+        return hs[:, -1], y
+
+    h_last, ys = jax.lax.scan(
+        chunk_step, h0,
+        (abar.transpose(1, 0, 2, 3, 4), bbar.transpose(1, 0, 2, 3, 4),
+         cseq.transpose(1, 0, 2, 3)))
+    y = ys.transpose(1, 0, 2, 3).reshape(b, l, di)
+    return y, h_last
+
+
+def mamba_block(cfg: ModelConfig, x: jax.Array, w: Dict[str, Any],
+                ) -> jax.Array:
+    b, l, d = x.shape
+    di = cfg.expand * d
+    ds = cfg.d_state
+    dt_rank = max(1, d // 16)
+    xin, z = jnp.split(jnp.einsum("bld,de->ble", x, w["w_in"]), 2, axis=-1)
+    xin = shard(xin, "batch", None, "model")
+    xc, _ = _causal_conv(xin, w["conv_w"], w["conv_b"])
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+    bcdt = jnp.einsum("bld,dg->blg", xc, w["w_bcdt"])
+    bmat, cmat, dt = jnp.split(bcdt.astype(jnp.float32),
+                               [ds, 2 * ds], axis=-1)
+    delta = jax.nn.softplus(
+        jnp.einsum("blr,rd->bld", dt, w["dt_proj"].astype(jnp.float32))
+        + w["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(w["a_log"].astype(jnp.float32))
+    h0 = jnp.zeros((b, di, ds), jnp.float32)
+    chunk = min(cfg.mamba_chunk, l) if cfg.mamba_chunk > 0 else l
+    if l % chunk:
+        chunk = l
+    y, _ = _ssm_chunked(xc.astype(jnp.float32), delta, a, bmat, cmat, h0,
+                        chunk)
+    y = y + xc.astype(jnp.float32) * w["d_skip"].astype(jnp.float32)
+    y = (y.astype(x.dtype)
+         * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype))
+    y = shard(y, "batch", None, "model")
+    return jnp.einsum("bld,de->ble", y, w["w_out"])
+
+
+def mamba_decode(cfg: ModelConfig, x: jax.Array, w: Dict[str, Any],
+                 state: Dict[str, jax.Array],
+                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x (b, 1, d); state: conv_tail (b, k-1, di), h (b, di, ds)."""
+    b, _, d = x.shape
+    ds = cfg.d_state
+    xin, z = jnp.split(jnp.einsum("bld,de->ble", x, w["w_in"]), 2, axis=-1)
+    xc, new_tail = _causal_conv(xin, w["conv_w"], w["conv_b"],
+                                tail=state["conv"])
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+    bcdt = jnp.einsum("bld,dg->blg", xc, w["w_bcdt"])
+    bmat, cmat, dt = jnp.split(bcdt.astype(jnp.float32),
+                               [ds, 2 * ds], axis=-1)
+    delta = jax.nn.softplus(
+        jnp.einsum("blr,rd->bld", dt, w["dt_proj"].astype(jnp.float32))
+        + w["dt_bias"].astype(jnp.float32))                    # (b,1,di)
+    a = -jnp.exp(w["a_log"].astype(jnp.float32))
+    abar = jnp.exp(delta[..., None] * a[None, None])[:, 0]     # (b,di,ds)
+    bbar = (delta[..., None] * bmat[:, :, None, :]
+            * xc.astype(jnp.float32)[..., None])[:, 0]
+    h = abar * state["h"] + bbar
+    y = jnp.einsum("bds,bs->bd", h, cmat[:, 0])
+    y = y + xc[:, 0].astype(jnp.float32) * w["d_skip"].astype(jnp.float32)
+    y = (y[:, None].astype(x.dtype)
+         * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype))
+    return (jnp.einsum("bld,de->ble", y, w["w_out"]),
+            {"conv": new_tail, "h": h})
+
+
+# =============================================================== xLSTM LM
+def xlstm_param_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    """xLSTM[m:s] language model: mLSTM blocks with sLSTM at
+    ``cfg.slstm_layers`` (unrolled — 12 layers, HLO stays small)."""
+    n_s = len(cfg.slstm_layers)
+    n_m = cfg.n_layers - n_s
+    d = cfg.d_model
+    defs: Dict[str, Any] = {
+        "embed": ParamDef((cfg.padded_vocab, d), ("model", "fsdp"),
+                          init="embed", fan_in_dims=(1,)),
+        "final_norm": {"scale": ParamDef((d,), (None,), init="ones")},
+        "mlstm": mlstm_defs(cfg, n_m),
+        "mlstm_norm": {"scale": ParamDef((n_m, d), (None, None), init="ones")},
+    }
+    if n_s:
+        defs["slstm"] = slstm_defs(cfg, n_s)
+        defs["slstm_norm"] = {"scale": ParamDef((n_s, d), (None, None),
+                                                init="ones")}
+    if not cfg.tie_embeddings:
+        defs["unembed"] = ParamDef((cfg.padded_vocab, d), ("model", "fsdp"),
+                                   fan_in_dims=(1,))
+    return defs
+
+
+def _xlstm_layer_plan(cfg: ModelConfig):
+    """[(kind, index-within-kind)] per layer."""
+    plan, im, is_ = [], 0, 0
+    for i in range(cfg.n_layers):
+        if i in cfg.slstm_layers:
+            plan.append(("slstm", is_)); is_ += 1
+        else:
+            plan.append(("mlstm", im)); im += 1
+    return plan
+
+
+def _slice_layer(tree: Any, i: int) -> Any:
+    return jax.tree_util.tree_map(lambda x: x[i], tree)
+
+
+def xlstm_forward(cfg: ModelConfig, params: Dict[str, Any],
+                  tokens: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    from repro.models import layers as L
+    x = L.embed(tokens, params["embed"]).astype(jnp.dtype(cfg.dtype))
+    for kind, j in _xlstm_layer_plan(cfg):
+        w = _slice_layer(params[kind], j)
+        nrm = _slice_layer(params[f"{kind}_norm"], j)
+        blk = mlstm_block if kind == "mlstm" else slstm_block
+
+        def layer_fn(y, w_=w, nrm_=nrm, blk_=blk):
+            return y + blk_(cfg, L.rms_norm(y, nrm_["scale"]), w_)
+
+        if cfg.remat == "full":
+            # per-layer remat: the mLSTM parallel form materializes an
+            # (l x l) decay/score block per layer -- without remat the
+            # unrolled 12-layer backward keeps all of them live
+            layer_fn = jax.checkpoint(layer_fn)
+        x = layer_fn(x)
+    x = L.rms_norm(x, params["final_norm"]["scale"])
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    return L.unembed(x, table, cfg.vocab_size), jnp.zeros((), jnp.float32)
+
+
+def xlstm_init_state(cfg: ModelConfig, batch: int) -> Dict[str, Any]:
+    d = cfg.d_model
+    H = cfg.n_heads
+    hd = d // H
+    n_s = len(cfg.slstm_layers)
+    n_m = cfg.n_layers - n_s
+    state: Dict[str, Any] = {
+        "mlstm": {
+            "C": jnp.zeros((n_m, batch, H, hd, hd), jnp.float32),
+            "n": jnp.zeros((n_m, batch, H, hd), jnp.float32),
+            "m": jnp.full((n_m, batch, H), -1e30, jnp.float32),
+        }
+    }
+    if n_s:
+        z = jnp.zeros((n_s, batch, H, hd), jnp.float32)
+        state["slstm"] = {"c": z, "n": z, "h": z,
+                          "m": jnp.full((n_s, batch, H), -1e30, jnp.float32)}
+    return state
+
+
+def xlstm_decode(cfg: ModelConfig, params: Dict[str, Any], token: jax.Array,
+                 state: Dict[str, Any], index: jax.Array,
+                 ) -> Tuple[jax.Array, Dict[str, Any]]:
+    from repro.models import layers as L
+    x = L.embed(token, params["embed"]).astype(jnp.dtype(cfg.dtype))
+    new_state = jax.tree_util.tree_map(lambda v: v, state)  # shallow copy
+    for kind, j in _xlstm_layer_plan(cfg):
+        w = _slice_layer(params[kind], j)
+        nrm = _slice_layer(params[f"{kind}_norm"], j)
+        h = L.rms_norm(x, nrm["scale"])
+        st = _slice_layer(state[kind], j)
+        if kind == "mlstm":
+            out, st2 = mlstm_decode(cfg, h, w, st)
+        else:
+            out, st2 = slstm_decode(cfg, h, w, st)
+        x = x + out
+        for key, val in st2.items():
+            new_state[kind][key] = new_state[kind][key].at[j].set(val)
+    x = L.rms_norm(x, params["final_norm"]["scale"])
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    return L.unembed(x, table, cfg.vocab_size), new_state

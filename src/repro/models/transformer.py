@@ -1,0 +1,285 @@
+"""Dense decoder-only transformer (llama / qwen / mistral / chameleon
+families) with scan-over-layers, GQA(+SWA) attention, optional QKV bias
+and qk-norm, SwiGLU MLP, and an optional MoE FFN (see moe.py).
+
+Three entry points per model:
+  ``forward``        (b, l) tokens -> (b, l, v) logits        [train/prefill]
+  ``forward_prefill``  also returns the populated KV cache     [serving]
+  ``forward_decode``  (b, 1) token + cache -> logits + cache   [serving]
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models.config import ModelConfig
+from repro.models.params import ParamDef
+from repro.models.sharding import shard
+
+
+# --------------------------------------------------------------- param defs
+def attn_defs(cfg: ModelConfig, n: int) -> Dict[str, ParamDef]:
+    d, hq, hkv, hd = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                      cfg.resolved_head_dim)
+    defs: Dict[str, ParamDef] = {
+        "wq": ParamDef((n, d, hq, hd), (None, "fsdp", "heads", None),
+                       fan_in_dims=(1,)),
+        "wk": ParamDef((n, d, hkv, hd), (None, "fsdp", "kv_heads", None),
+                       fan_in_dims=(1,)),
+        "wv": ParamDef((n, d, hkv, hd), (None, "fsdp", "kv_heads", None),
+                       fan_in_dims=(1,)),
+        "wo": ParamDef((n, hq, hd, d), (None, "heads", None, "fsdp"),
+                       fan_in_dims=(1, 2)),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = ParamDef((n, hq, hd), (None, "heads", None),
+                              init="zeros")
+        defs["bk"] = ParamDef((n, hkv, hd), (None, "kv_heads", None),
+                              init="zeros")
+        defs["bv"] = ParamDef((n, hkv, hd), (None, "kv_heads", None),
+                              init="zeros")
+    if cfg.qk_norm:
+        defs["q_norm"] = ParamDef((n, hd), (None, None), init="ones")
+        defs["k_norm"] = ParamDef((n, hd), (None, None), init="ones")
+    return defs
+
+
+def mlp_defs(cfg: ModelConfig, n: int) -> Dict[str, ParamDef]:
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.act == "silu":
+        return {
+            "w_gate": ParamDef((n, d, f), (None, "fsdp", "model"),
+                               fan_in_dims=(1,)),
+            "w_up": ParamDef((n, d, f), (None, "fsdp", "model"),
+                             fan_in_dims=(1,)),
+            "w_down": ParamDef((n, f, d), (None, "model", "fsdp"),
+                               fan_in_dims=(1,)),
+        }
+    return {
+        "w_up": ParamDef((n, d, f), (None, "fsdp", "model"), fan_in_dims=(1,)),
+        "b_up": ParamDef((n, f), (None, "model"), init="zeros"),
+        "w_down": ParamDef((n, f, d), (None, "model", "fsdp"),
+                           fan_in_dims=(1,)),
+        "b_down": ParamDef((n, d), (None, None), init="zeros"),
+    }
+
+
+def norm_defs(cfg: ModelConfig, n: int) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    defs = {"scale": ParamDef((n, d), (None, None), init="ones")}
+    if cfg.norm == "layernorm":
+        defs["bias"] = ParamDef((n, d), (None, None), init="zeros")
+    return defs
+
+
+def param_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    n = cfg.n_layers
+    layer: Dict[str, Any] = {
+        "attn": attn_defs(cfg, n),
+        "attn_norm": norm_defs(cfg, n),
+        "mlp_norm": norm_defs(cfg, n),
+    }
+    if cfg.moe is not None:
+        layer["moe"] = moe_lib.moe_defs(cfg, n)
+    else:
+        layer["mlp"] = mlp_defs(cfg, n)
+    defs: Dict[str, Any] = {
+        "embed": ParamDef((cfg.padded_vocab, cfg.d_model), ("model", "fsdp"),
+                          init="embed", fan_in_dims=(1,)),
+        "final_norm": _unstack_norm(cfg),
+        "layers": layer,
+    }
+    if not cfg.tie_embeddings:
+        defs["unembed"] = ParamDef((cfg.padded_vocab, cfg.d_model),
+                                   ("model", "fsdp"), fan_in_dims=(1,))
+    return defs
+
+
+def _unstack_norm(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    defs = {"scale": ParamDef((d,), (None,), init="ones")}
+    if cfg.norm == "layernorm":
+        defs["bias"] = ParamDef((d,), (None,), init="zeros")
+    return defs
+
+
+# --------------------------------------------------------------- layer body
+def _layer(cfg: ModelConfig, x: jax.Array, w: Dict[str, Any],
+           cos: jax.Array, sin: jax.Array, mask: jax.Array,
+           collect_kv: bool = False):
+    """Pre-norm residual block. Returns (x, aux_loss[, (k, v)])."""
+    # pin the carry layout: without this GSPMD propagates whatever layout
+    # the embed gather preferred into the scan carry and re-shards every
+    # dot (measured: 671 MB activation all-gathers per layer, §Perf it.1)
+    x = shard(x, "batch", "seq", None)
+    h = L.apply_norm(cfg, x, w["attn_norm"])
+    att = L.attention_block(cfg, h, w["attn"], cos, sin, mask,
+                            collect_kv=collect_kv)
+    kv = None
+    if collect_kv:
+        att, kv = att
+    x = x + att
+    h = L.apply_norm(cfg, x, w["mlp_norm"])
+    if "moe" in w:
+        out, aux = moe_lib.moe_block(cfg, h, w["moe"])
+    else:
+        out, aux = L.mlp_block(cfg, h, w["mlp"]), jnp.zeros((), jnp.float32)
+    if collect_kv:
+        return x + out, aux, kv
+    return x + out, aux
+
+
+def _scan_layers(cfg: ModelConfig, x: jax.Array, layer_params: Any,
+                 body) -> Tuple[jax.Array, jax.Array]:
+    """lax.scan over stacked layer params with optional remat."""
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+
+    def step(carry, w):
+        y, aux = body(carry, w)
+        return y, aux
+
+    x, auxs = jax.lax.scan(step, x, layer_params,
+                           unroll=cfg.scan_unroll)
+    return x, jnp.sum(auxs)
+
+
+# --------------------------------------------------------------- forward
+def forward(cfg: ModelConfig, params: Dict[str, Any], tokens: jax.Array,
+            ) -> Tuple[jax.Array, jax.Array]:
+    """Training forward. tokens (b, l) -> logits (b, l, v), aux."""
+    b, l = tokens.shape
+    x = L.embed(tokens, params["embed"]).astype(jnp.dtype(cfg.dtype))
+    positions = jnp.arange(l)
+    cos, sin = L.rotary_embedding(positions, cfg.resolved_head_dim,
+                                  cfg.rope_theta)
+    mask = L.causal_window_mask(l, l, window=cfg.sliding_window)
+
+    body = functools.partial(_layer, cfg, cos=cos, sin=sin, mask=mask)
+    x, aux = _scan_layers(cfg, x, params["layers"],
+                          lambda c, w: body(c, w))
+    x = L.apply_norm(cfg, x, params["final_norm"])
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    return L.unembed(x, table, cfg.vocab_size), aux
+
+
+def forward_prefill(cfg: ModelConfig, params: Dict[str, Any],
+                    tokens: jax.Array,
+                    ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Serving prefill: last-position logits + populated KV cache.
+
+    Only the final position is unembedded (the rest would be dead code in
+    a real serving stack); the per-layer post-rotary K/V are stacked into
+    the decode cache layout (n_layers, b, l, hkv, hd)."""
+    b, l = tokens.shape
+    x = L.embed(tokens, params["embed"]).astype(jnp.dtype(cfg.dtype))
+    positions = jnp.arange(l)
+    cos, sin = L.rotary_embedding(positions, cfg.resolved_head_dim,
+                                  cfg.rope_theta)
+    mask = L.causal_window_mask(l, l, window=cfg.sliding_window)
+
+    quantized = cfg.kv_cache_dtype == "int8"
+
+    def body(carry, w):
+        y, _, (k, v) = _layer(cfg, carry, w, cos, sin, mask,
+                              collect_kv=True)
+        if quantized:
+            kq, ks_ = L.quantize_kv(k)
+            vq, vs_ = L.quantize_kv(v)
+            return y, (kq, ks_, vq, vs_)
+        return y, (k.astype(jnp.dtype(cfg.dtype)),
+                   v.astype(jnp.dtype(cfg.dtype)))
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    x, kv_out = jax.lax.scan(body, x, params["layers"],
+                             unroll=cfg.scan_unroll)
+    x = L.apply_norm(cfg, x[:, -1:], params["final_norm"])
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = L.unembed(x, table, cfg.vocab_size)
+    if quantized:
+        kq, ks_, vq, vs_ = kv_out
+        return logits, {"k": kq, "k_scale": ks_, "v": vq, "v_scale": vs_}
+    ks, vs = kv_out
+    return logits, {"k": ks, "v": vs}
+
+
+def loss_fn(cfg: ModelConfig, params: Dict[str, Any],
+            batch: Dict[str, jax.Array]) -> Tuple[jax.Array, Dict[str, Any]]:
+    logits, aux = forward(cfg, params, batch["tokens"])
+    nll = L.cross_entropy(logits, batch["labels"])
+    weight = cfg.moe.aux_loss_weight if cfg.moe else 0.0
+    return nll + weight * aux, {"loss": nll, "aux_loss": aux}
+
+
+# --------------------------------------------------------------- serving
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               dtype: Optional[str] = None) -> Dict[str, jax.Array]:
+    """Stacked per-layer KV cache. SWA models cap the ring at the window;
+    ``cfg.kv_cache_dtype == 'int8'`` stores quantized K/V with
+    per-(token, head) f32 scales (layers.quantize_kv)."""
+    if cfg.sliding_window is not None:
+        max_seq = min(max_seq, cfg.sliding_window)
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads,
+             cfg.resolved_head_dim)
+    if cfg.kv_cache_dtype == "int8":
+        sshape = shape[:-1]
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(sshape, jnp.float32),
+                "v_scale": jnp.zeros(sshape, jnp.float32)}
+    dt = jnp.dtype(dtype or cfg.dtype)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_seq: int, rules,
+                dtype: Optional[str] = None) -> Dict[str, Any]:
+    from jax.sharding import PartitionSpec as P
+    if cfg.sliding_window is not None:
+        max_seq = min(max_seq, cfg.sliding_window)
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads,
+             cfg.resolved_head_dim)
+    axes = (None, "batch", "cache_seq", None, None)
+    spec = P() if rules is None else rules.spec(axes, shape)
+    out = {"k": spec, "v": spec}
+    if cfg.kv_cache_dtype == "int8":
+        sspec = (P() if rules is None
+                 else rules.spec(axes[:-1], shape[:-1]))
+        out["k_scale"] = sspec
+        out["v_scale"] = sspec
+    return out
+
+
+def forward_decode(cfg: ModelConfig, params: Dict[str, Any],
+                   token: jax.Array, cache: Dict[str, jax.Array],
+                   index: jax.Array) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One decode step. token (b, 1); cache leaves (n_layers, ...)."""
+    x = L.embed(token, params["embed"]).astype(jnp.dtype(cfg.dtype))
+    keys = sorted(cache)  # k, k_scale?, v, v_scale?
+
+    def body(carry, xs):
+        w = xs[0]
+        layer_cache = dict(zip(keys, xs[1:]))
+        h = L.apply_norm(cfg, carry, w["attn_norm"])
+        att, new_cache = L.decode_attention_block(
+            cfg, h, w["attn"], layer_cache, index)
+        y = carry + att
+        h = L.apply_norm(cfg, y, w["mlp_norm"])
+        if "moe" in w:
+            out, _ = moe_lib.moe_block(cfg, h, w["moe"])
+        else:
+            out = L.mlp_block(cfg, h, w["mlp"])
+        return y + out, tuple(new_cache[k] for k in keys)
+
+    xs = (params["layers"],) + tuple(cache[k] for k in keys)
+    x, new_leaves = jax.lax.scan(body, x, xs, unroll=cfg.scan_unroll)
+    x = L.apply_norm(cfg, x, params["final_norm"])
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    return (L.unembed(x, table, cfg.vocab_size),
+            dict(zip(keys, new_leaves)))

@@ -1,0 +1,24 @@
+"""Optimizers, schedules and gradient compression."""
+
+from repro.optim.compression import (
+    Compressor,
+    int8_compressor,
+    make_compressor,
+    topk_compressor,
+)
+from repro.optim.optimizers import (
+    AdafactorState,
+    AdamState,
+    Optimizer,
+    adafactor,
+    adamw,
+    make_optimizer,
+    momentum,
+    sgd,
+)
+
+__all__ = [
+    "Optimizer", "sgd", "momentum", "adamw", "adafactor", "make_optimizer",
+    "AdamState", "AdafactorState",
+    "Compressor", "make_compressor", "int8_compressor", "topk_compressor",
+]

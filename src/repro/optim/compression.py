@@ -1,0 +1,100 @@
+"""Gradient compression for the cross-pod (DCN) hop.
+
+Two schemes, both with error feedback so the compression bias does not
+accumulate (Seide et al. / Karimireddy et al.):
+
+  * ``int8``  — per-tensor symmetric linear quantization (4x smaller than
+    f32, 2x smaller than bf16 on the wire).
+  * ``topk``  — magnitude top-k sparsification (k as a fraction), dense
+    mask representation (JAX-native; a real DCN transport would send
+    indices+values — the *information* reduction is what matters for the
+    convergence experiments, and the byte reduction is reported by the
+    roofline module for the collective term).
+
+The DSSP cross-pod mode composes with either: compress the pod-averaged
+gradient before the cross-pod all-reduce.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Tree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Compressor:
+    name: str
+    # (grads, error_state) -> (compressed-but-decoded grads, new_error)
+    apply: Callable[[Tree, Tree], Tuple[Tree, Tree]]
+    init_error: Callable[[Tree], Tree]
+    wire_bytes_per_value: float      # for the roofline collective term
+
+
+def _zeros_like_f32(tree: Tree) -> Tree:
+    return jax.tree_util.tree_map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), tree)
+
+
+def int8_compressor() -> Compressor:
+    def one(g: jax.Array, e: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        gf = g.astype(jnp.float32) + e
+        scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+        deq = q.astype(jnp.float32) * scale
+        return deq.astype(g.dtype), gf - deq
+
+    def apply(grads, err):
+        outs = jax.tree_util.tree_map(one, grads, err)
+        new_g = jax.tree_util.tree_map(lambda o: o[0], outs,
+                                       is_leaf=lambda x: isinstance(x, tuple))
+        new_e = jax.tree_util.tree_map(lambda o: o[1], outs,
+                                       is_leaf=lambda x: isinstance(x, tuple))
+        return new_g, new_e
+
+    return Compressor("int8", apply, _zeros_like_f32, 1.0)
+
+
+def topk_compressor(fraction: float = 0.05) -> Compressor:
+    if not 0.0 < fraction <= 1.0:
+        raise ValueError("fraction in (0, 1]")
+
+    def one(g: jax.Array, e: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        gf = g.astype(jnp.float32) + e
+        flat = gf.reshape(-1)
+        k = max(1, int(fraction * flat.size))
+        thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+        mask = (jnp.abs(gf) >= thresh).astype(jnp.float32)
+        kept = gf * mask
+        return kept.astype(g.dtype), gf - kept
+
+    def apply(grads, err):
+        outs = jax.tree_util.tree_map(one, grads, err)
+        new_g = jax.tree_util.tree_map(lambda o: o[0], outs,
+                                       is_leaf=lambda x: isinstance(x, tuple))
+        new_e = jax.tree_util.tree_map(lambda o: o[1], outs,
+                                       is_leaf=lambda x: isinstance(x, tuple))
+        return new_g, new_e
+
+    # indices (4B) + values (2B) per kept value, k fraction of tensor
+    return Compressor(f"topk({fraction})", apply, _zeros_like_f32,
+                      6.0 * fraction)
+
+
+def make_compressor(name: str, **kw) -> Compressor:
+    if name in ("none", "", None):
+        ident = Compressor(
+            "none",
+            lambda g, e: (g, e),
+            lambda tree: (),
+            2.0)
+        return ident
+    if name == "int8":
+        return int8_compressor()
+    if name == "topk":
+        return topk_compressor(**kw)
+    raise ValueError(f"unknown compressor {name!r}")

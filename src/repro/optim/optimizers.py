@@ -1,0 +1,254 @@
+"""Optimizers (pure-pytree, optax-like minimal API) + staleness awareness.
+
+``init(params) -> state``; ``update(grads, state, params, *, staleness=0)
+-> (new_params, new_state)``.  All states are pytrees that shard exactly
+like their parameters (the dry-run passes them as inputs).
+
+* ``sgd`` / ``momentum``  — the paper's server update rule.
+* ``adamw``               — standard training baseline.
+* ``adafactor``           — factored second moment; chosen for the >100B
+  assigned configs where Adam state would not fit 16 GB/chip (DESIGN.md).
+* Every rule accepts ``staleness`` and optionally damps the step by
+  1/(1+s) — the Omnivore-style mitigation the paper cites (§II); used by
+  the DSSP-SPMD delayed-gradient pipeline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+Grads = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable[[Params], Any]
+    update: Callable[..., Tuple[Params, Any]]
+
+
+def _tree_map(fn, *trees):
+    return jax.tree_util.tree_map(fn, *trees)
+
+
+def _staleness_scale(staleness, damping: bool):
+    if not damping:
+        return jnp.float32(1.0)
+    return 1.0 / (1.0 + jnp.asarray(staleness, jnp.float32))
+
+
+# ------------------------------------------------------------------ SGD
+def sgd(lr: float, *, staleness_damping: bool = False) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params, *, staleness=0, lr_scale=1.0):
+        s = lr * lr_scale * _staleness_scale(staleness, staleness_damping)
+        new = _tree_map(lambda p, g: (p.astype(jnp.float32)
+                                      - s * g.astype(jnp.float32)
+                                      ).astype(p.dtype), params, grads)
+        return new, state
+
+    return Optimizer("sgd", init, update)
+
+
+def momentum(lr: float, beta: float = 0.9, *, nesterov: bool = False,
+             staleness_damping: bool = False) -> Optimizer:
+    def init(params):
+        return _tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def update(grads, state, params, *, staleness=0, lr_scale=1.0):
+        scale = _staleness_scale(staleness, staleness_damping)
+        new_v = _tree_map(lambda v, g: beta * v
+                          + g.astype(jnp.float32) * scale, state, grads)
+        if nesterov:
+            step = _tree_map(lambda v, g: beta * v
+                             + g.astype(jnp.float32) * scale, new_v, grads)
+        else:
+            step = new_v
+        new_p = _tree_map(lambda p, st: (p.astype(jnp.float32)
+                                         - lr * lr_scale * st
+                                         ).astype(p.dtype), params, step)
+        return new_p, new_v
+
+    return Optimizer("momentum", init, update)
+
+
+# ------------------------------------------------------------------ AdamW
+class AdamState(NamedTuple):
+    mu: Any
+    nu: Any
+    count: jax.Array
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0, *,
+          staleness_damping: bool = False) -> Optimizer:
+    def init(params):
+        z = _tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return AdamState(mu=z, nu=_tree_map(jnp.zeros_like, z),
+                         count=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params, *, staleness=0, lr_scale=1.0):
+        count = state.count + 1
+        scale = _staleness_scale(staleness, staleness_damping)
+        mu = _tree_map(lambda m, g: b1 * m + (1 - b1)
+                       * g.astype(jnp.float32) * scale, state.mu, grads)
+        nu = _tree_map(lambda v, g: b2 * v + (1 - b2)
+                       * jnp.square(g.astype(jnp.float32)), state.nu, grads)
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+
+        def step(p, m, v):
+            upd = (m / c1) / (jnp.sqrt(v / c2) + eps)
+            pf = p.astype(jnp.float32)
+            pf = pf - lr * lr_scale * (upd + weight_decay * pf)
+            return pf.astype(p.dtype)
+
+        new_p = _tree_map(step, params, mu, nu)
+        return new_p, AdamState(mu=mu, nu=nu, count=count)
+
+    return Optimizer("adamw", init, update)
+
+
+# ------------------------------------------------------------------ Adafactor
+class AdafactorState(NamedTuple):
+    v_row: Any       # factored second moment (rank>=2 leaves)
+    v_col: Any
+    v_full: Any      # unfactored for vectors
+    count: jax.Array
+
+
+def adafactor(lr: float = 1e-2, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0, *,
+              staleness_damping: bool = False) -> Optimizer:
+    """Factored Adafactor (Shazeer & Stern 2018) without update clipping
+    schedules; factored along the last two dims of every rank>=2 leaf."""
+
+    def init(params):
+        def rows(p):
+            if p.ndim < 2:
+                return jnp.zeros((), jnp.float32)
+            return jnp.zeros(p.shape[:-1], jnp.float32)
+
+        def cols(p):
+            if p.ndim < 2:
+                return jnp.zeros((), jnp.float32)
+            return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+
+        def full(p):
+            if p.ndim < 2:
+                return jnp.zeros(p.shape, jnp.float32)
+            return jnp.zeros((), jnp.float32)
+
+        return AdafactorState(v_row=_tree_map(rows, params),
+                              v_col=_tree_map(cols, params),
+                              v_full=_tree_map(full, params),
+                              count=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params, *, staleness=0, lr_scale=1.0):
+        count = state.count + 1
+        t = count.astype(jnp.float32)
+        beta = 1.0 - t ** (-decay)
+        scale = _staleness_scale(staleness, staleness_damping)
+
+        def upd(p, g, vr, vc, vf):
+            gf = g.astype(jnp.float32) * scale
+            g2 = jnp.square(gf) + eps
+            if p.ndim < 2:
+                nvf = beta * vf + (1 - beta) * g2
+                u = gf * jax.lax.rsqrt(nvf + eps)
+                nvr, nvc = vr, vc
+            else:
+                nvr = beta * vr + (1 - beta) * jnp.mean(g2, axis=-1)
+                nvc = beta * vc + (1 - beta) * jnp.mean(g2, axis=-2)
+                # normalized row factor keeps the factored product an
+                # unbiased estimate of the full second moment
+                r = nvr / jnp.maximum(
+                    jnp.mean(nvr, axis=-1, keepdims=True), eps)
+                denom = (jnp.sqrt(r)[..., :, None]
+                         * jnp.sqrt(nvc)[..., None, :] + eps)
+                u = gf / denom
+                nvf = vf
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            pf = p.astype(jnp.float32) - lr * lr_scale * u
+            return pf.astype(p.dtype), nvr, nvc, nvf
+
+        flat_p, tdef = jax.tree_util.tree_flatten(params)
+        flat_g = jax.tree_util.tree_leaves(grads)
+        flat_vr = jax.tree_util.tree_leaves(state.v_row)
+        flat_vc = jax.tree_util.tree_leaves(state.v_col)
+        flat_vf = jax.tree_util.tree_leaves(state.v_full)
+        outs = [upd(p, g, vr, vc, vf) for p, g, vr, vc, vf
+                in zip(flat_p, flat_g, flat_vr, flat_vc, flat_vf)]
+        new_p = tdef.unflatten([o[0] for o in outs])
+        new_state = AdafactorState(
+            v_row=tdef.unflatten([o[1] for o in outs]),
+            v_col=tdef.unflatten([o[2] for o in outs]),
+            v_full=tdef.unflatten([o[3] for o in outs]),
+            count=count)
+        return new_p, new_state
+
+    return Optimizer("adafactor", init, update)
+
+
+def make_optimizer(name: str, lr: float = 1e-3, **kw) -> Optimizer:
+    name = name.lower()
+    if name == "sgd":
+        return sgd(lr, **kw)
+    if name == "momentum":
+        return momentum(lr, **kw)
+    if name == "adamw":
+        return adamw(lr, **kw)
+    if name == "adafactor":
+        return adafactor(lr, **kw)
+    raise ValueError(f"unknown optimizer {name!r}")
+
+
+# ---------------------------------------------------------- sharding specs
+def state_partition_specs(opt: Optimizer, param_specs: Any,
+                          param_sds: Any) -> Any:
+    """PartitionSpec tree for ``opt``'s state, derived from the params'
+    specs (optimizer state shards exactly like its parameter; factored
+    Adafactor moments inherit the surviving dims' spec)."""
+    from jax.sharding import PartitionSpec as P
+
+    def norm(spec, rank):
+        dims = list(spec) + [None] * (rank - len(spec))
+        return dims[:rank]
+
+    if opt.name in ("sgd",):
+        return ()
+    if opt.name == "momentum":
+        return param_specs
+    if opt.name == "adamw":
+        return AdamState(mu=param_specs, nu=param_specs, count=P())
+
+    if opt.name == "adafactor":
+        flat_specs = jax.tree_util.tree_leaves(
+            param_specs, is_leaf=lambda x: isinstance(x, P))
+        flat_sds, tdef = jax.tree_util.tree_flatten(param_sds)
+
+        rows, cols, fulls = [], [], []
+        for spec, sds in zip(flat_specs, flat_sds):
+            rank = len(sds.shape)
+            dims = norm(spec, rank)
+            if rank < 2:
+                rows.append(P())
+                cols.append(P())
+                fulls.append(P(*dims))
+            else:
+                rows.append(P(*dims[:-1]))
+                cols.append(P(*(dims[:-2] + [dims[-1]])))
+                fulls.append(P())
+        return AdafactorState(v_row=tdef.unflatten(rows),
+                              v_col=tdef.unflatten(cols),
+                              v_full=tdef.unflatten(fulls),
+                              count=P())
+    raise ValueError(f"no spec rule for optimizer {opt.name!r}")

@@ -1,0 +1,19 @@
+"""Parameter-server substrate: discrete-event simulator + threaded runtime."""
+
+from repro.ps.metrics import RunMetrics, compare
+from repro.ps.server import ParameterServer, ServerOptimizer
+from repro.ps.simulator import (
+    PSSimulator,
+    constant_intervals,
+    jittered_intervals,
+    phase_shift_intervals,
+    run_policy,
+)
+from repro.ps.worker import PSWorker, run_cluster
+
+__all__ = [
+    "ParameterServer", "ServerOptimizer", "PSWorker", "run_cluster",
+    "PSSimulator", "run_policy", "constant_intervals",
+    "jittered_intervals", "phase_shift_intervals",
+    "RunMetrics", "compare",
+]

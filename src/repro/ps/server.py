@@ -1,0 +1,147 @@
+"""Threaded parameter server — the runnable counterpart of the simulator.
+
+Holds the globally shared weights, applies pushed gradients under a lock
+(paper Alg. 1 line 2: concurrent pushes are serialized/aggregated), and
+gates workers through the configured ``SyncPolicy``.  Workers are threads
+executing real jitted JAX train steps (see ``repro.ps.worker``); the GIL
+is released inside XLA compute and inside ``time.sleep`` so heterogeneity
+injection behaves like genuinely slower devices.
+
+The server optimizer is pluggable; the paper uses plain SGD on the server
+(workers send raw gradients).  A staleness-aware variant scales the step
+by 1/(1+staleness) (Omnivore-style momentum tempering, §II related work).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policies import SyncPolicy
+from repro.core.staleness import StalenessTracker
+from repro.ps.metrics import RunMetrics
+
+Params = Any  # pytree
+Grads = Any   # pytree
+
+
+class ServerOptimizer:
+    """SGD with optional momentum + staleness-aware damping."""
+
+    def __init__(self, lr: float, momentum: float = 0.0,
+                 staleness_damping: bool = False):
+        self.lr = lr
+        self.momentum = momentum
+        self.staleness_damping = staleness_damping
+        self._velocity: Optional[Params] = None
+        self._apply = jax.jit(self._apply_impl)
+
+    def _apply_impl(self, params, grads, velocity, scale):
+        new_v = jax.tree_util.tree_map(
+            lambda v, g: self.momentum * v + g * scale, velocity, grads)
+        new_p = jax.tree_util.tree_map(
+            lambda p, v: p - self.lr * v, params, new_v)
+        return new_p, new_v
+
+    def step(self, params: Params, grads: Grads, staleness: int) -> Params:
+        if self._velocity is None:
+            self._velocity = jax.tree_util.tree_map(jnp.zeros_like, grads)
+        scale = 1.0 / (1.0 + staleness) if self.staleness_damping else 1.0
+        params, self._velocity = self._apply(
+            params, grads, self._velocity, jnp.asarray(scale, jnp.float32))
+        return params
+
+
+class ParameterServer:
+    """Global weight store + Algorithm-1 gating.  Thread-safe."""
+
+    def __init__(self, params: Params, policy: SyncPolicy,
+                 optimizer: ServerOptimizer, n_workers: int,
+                 clock: Callable[[], float] = time.monotonic):
+        self._params = params
+        self.policy = policy
+        self.optimizer = optimizer
+        self.tracker = StalenessTracker(range(n_workers))
+        self.metrics = RunMetrics(policy=policy.name, n_workers=n_workers)
+        self._cond = threading.Condition()
+        self._clock = clock
+        self._t0 = clock()
+        self.version = 0          # number of applied updates
+        self.stopped = False
+
+    # -- worker API -----------------------------------------------------------
+    def pull(self, worker: int) -> Params:
+        """Fetch the latest global weights (jax arrays are immutable ⇒ a
+        reference snapshot is consistent)."""
+        with self._cond:
+            return self._params
+
+    def push(self, worker: int, grads: Grads) -> None:
+        """Alg. 1 server block: update weights, then gate.  Blocks the
+        calling worker thread until the policy releases it."""
+        with self._cond:
+            now = self._clock() - self._t0
+            rec = self.tracker.record_push(worker, now)
+            dec = self.policy.on_push(self.tracker, worker, now)
+            if dec.apply_update:
+                self._params = self.optimizer.step(
+                    self._params, grads, rec.staleness)
+                self.version += 1
+            self.metrics.record_push(
+                worker, rec.staleness, applied=dec.apply_update,
+                credit=dec.credit_used, time=now)
+            self._cond.notify_all()
+            if dec.release_now:
+                return
+            arrival = self._clock()
+            while (not self.stopped
+                   and not self.policy.may_release(self.tracker, worker)):
+                self._cond.wait(timeout=0.5)
+            waited = self._clock() - arrival
+            rec.waited = waited
+            self.metrics.record_wait(worker, waited)
+
+    def record_loss(self, step: int, loss: float) -> None:
+        """Record (wall_time, applied_update_count, loss).  Keying the
+        curve by *applied updates* (server version) lets benchmarks
+        compose it with virtual-time update schedules from the
+        discrete-event simulator (single-core wall time cannot exhibit
+        asynchrony wins — see benchmarks/paper_tables.py)."""
+        with self._cond:
+            now = self._clock() - self._t0
+            self.metrics.loss_trajectory.append(
+                (now, self.version, float(loss)))
+
+    # -- elastic membership ---------------------------------------------------
+    def add_worker(self, worker: int) -> None:
+        with self._cond:
+            self.tracker.add_worker(worker)
+            self.metrics.n_workers = len(self.tracker.workers)
+
+    def remove_worker(self, worker: int) -> None:
+        """A departing/failed worker must not stall the barrier: drop it
+        from the tracker so gap computations ignore it, then wake waiters."""
+        with self._cond:
+            self.tracker.remove_worker(worker)
+            self.metrics.n_workers = len(self.tracker.workers)
+            self._cond.notify_all()
+
+    def stop(self) -> None:
+        """Unblock everything (end of training / fault injection)."""
+        with self._cond:
+            self.stopped = True
+            self._cond.notify_all()
+
+    # -- inspection ----------------------------------------------------------
+    @property
+    def params(self) -> Params:
+        with self._cond:
+            return self._params
+
+    def staleness_profile(self) -> Dict[int, int]:
+        with self._cond:
+            return self.tracker.staleness_profile()

@@ -1,0 +1,94 @@
+"""Worker threads for the parameter-server layer.
+
+Each worker runs the paper's loop (Alg. 1 worker block):
+
+    pull w_s  →  replace local weights  →  compute grads on a mini-batch
+    →  push grads  →  (blocked until the server sends OK)
+
+``step_fn`` is any jitted ``(params, batch) -> (grads, aux)`` function;
+batches come from a per-worker data shard (data parallelism, §I).  A
+``speed_factor > 1`` makes the worker proportionally slower by sleeping
+``(speed_factor − 1) × measured_compute`` per iteration — this emulates
+the paper's heterogeneous cluster (GTX1060 vs GTX1080Ti) on one machine
+without depending on scheduler noise.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Callable, Iterator, Optional
+
+from repro.ps.server import ParameterServer
+
+StepFn = Callable[[Any, Any], Any]  # (params, batch) -> (grads, aux)
+
+
+class PSWorker(threading.Thread):
+    def __init__(self, worker_id: int, server: ParameterServer,
+                 step_fn: StepFn, batches: Iterator[Any], n_iterations: int,
+                 *, speed_factor: float = 1.0,
+                 loss_from_aux: Optional[Callable[[Any], float]] = None,
+                 name: Optional[str] = None):
+        super().__init__(name=name or f"ps-worker-{worker_id}", daemon=True)
+        self.worker_id = worker_id
+        self.server = server
+        self.step_fn = step_fn
+        self.batches = batches
+        self.n_iterations = n_iterations
+        self.speed_factor = speed_factor
+        self.loss_from_aux = loss_from_aux
+        self.iterations_done = 0
+        self.failure: Optional[BaseException] = None
+        self._abort = threading.Event()
+
+    def abort(self) -> None:
+        """Simulate a node failure: the worker exits before its next pull."""
+        self._abort.set()
+
+    def run(self) -> None:
+        try:
+            for it in range(self.n_iterations):
+                if self._abort.is_set() or self.server.stopped:
+                    break
+                params = self.server.pull(self.worker_id)
+                t0 = time.monotonic()
+                grads, aux = self.step_fn(params, next(self.batches))
+                grads = _block(grads)
+                compute = time.monotonic() - t0
+                if self.speed_factor > 1.0:
+                    time.sleep(compute * (self.speed_factor - 1.0))
+                if self.loss_from_aux is not None:
+                    self.server.record_loss(it, self.loss_from_aux(aux))
+                self.server.push(self.worker_id, grads)
+                self.iterations_done += 1
+        except BaseException as e:  # surfaced by join_all
+            self.failure = e
+        finally:
+            # Leave the barrier group on ANY exit — completion, abort or
+            # crash.  A departed worker must not gate survivors (fault
+            # tolerance) nor stall late joiners (elasticity).
+            self.server.remove_worker(self.worker_id)
+
+
+def _block(tree: Any) -> Any:
+    import jax
+    return jax.block_until_ready(tree)
+
+
+def run_cluster(server: ParameterServer, workers: list[PSWorker],
+                timeout: float = 600.0) -> None:
+    """Start all workers, join them, re-raise the first worker failure."""
+    for w in workers:
+        w.start()
+    deadline = time.monotonic() + timeout
+    for w in workers:
+        w.join(timeout=max(0.0, deadline - time.monotonic()))
+    server.stop()
+    for w in workers:
+        w.join(timeout=5.0)
+        if w.failure is not None:
+            raise w.failure
+    alive = [w.name for w in workers if w.is_alive()]
+    if alive:
+        raise TimeoutError(f"workers did not finish: {alive}")

@@ -1,0 +1,19 @@
+"""Roofline analysis from compiled dry-run artifacts."""
+
+from repro.roofline.analysis import (
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS,
+    CollectiveStats,
+    RooflineTerms,
+    extract,
+    format_row,
+    HEADER,
+    model_flops,
+    parse_collectives,
+    shape_bytes,
+)
+
+__all__ = ["extract", "RooflineTerms", "CollectiveStats",
+           "parse_collectives", "shape_bytes", "model_flops",
+           "format_row", "HEADER", "PEAK_FLOPS", "HBM_BW", "ICI_BW"]

@@ -1,0 +1,126 @@
+"""Unit + property tests for Algorithm 2 (synchronization controller)."""
+
+import math
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.controller import (
+    IntervalEstimator,
+    SynchronizationController,
+    optimal_extra_iterations,
+    simulate_push_times,
+)
+from repro.core.staleness import StalenessTracker
+
+
+def test_simulate_push_times_fast_worker():
+    # Sim_p[0] = A[p][0]; Sim_p[i] = Sim_p[0] + i * I_p   (Alg. 2 line 6)
+    assert simulate_push_times(10.0, 2.0, 3) == [10.0, 12.0, 14.0, 16.0]
+
+
+def test_simulate_push_times_slowest_leads_by_one():
+    # Sim_slowest[0] = A[s][0] + I_s                       (Alg. 2 line 7)
+    assert simulate_push_times(10.0, 5.0, 2, lead=1) == [15.0, 20.0, 25.0]
+
+
+def test_figure2_scenario_returns_r_star_3():
+    """Figure 2: fast worker interval 1, slowest interval 4.4, r_max = 4.
+
+    The slowest worker's next pushes land at ~4.4, 8.8...; the fast worker
+    just pushed at t=5.0 with interval 1.0 ⇒ its simulated pushes are
+    5,6,7,8,9.  Waiting now (r=0) costs |8.8-5|=3.8; continuing to r=3
+    (t=8) costs 0.8; r=4 (t=9) costs 0.2 — but the paper stops at the
+    argmin over the full table; with these numbers r*=4.  Shift slightly
+    so the interior optimum r*=3 of the figure emerges.
+    """
+    sim_fast = simulate_push_times(5.0, 1.0, 4)          # 5,6,7,8,9
+    sim_slow = simulate_push_times(3.6, 4.4, 4, lead=1)  # 8.0, 12.4, ...
+    assert optimal_extra_iterations(sim_fast, sim_slow) == 3
+
+
+def test_argmin_tie_breaks_to_smaller_r():
+    # equal distance to a slow push from r=1 and r=3 -> pick r=1
+    sim_fast = [0.0, 4.0, 6.0, 8.0]
+    sim_slow = [6.0, 100.0, 200.0, 300.0]
+    # |6-4| == 2 at r=1 and |6-8| == 2 at r=3; r=2 gives 0 so adjust:
+    sim_fast = [0.0, 4.0, 8.0, 12.0]
+    # gaps: 6, 2, 2, 6 -> tie between r=1 and r=2 -> r=1
+    assert optimal_extra_iterations(sim_fast, sim_slow) == 1
+
+
+@given(
+    start_fast=st.floats(0, 1e3),
+    i_fast=st.floats(0.01, 100),
+    start_slow=st.floats(0, 1e3),
+    i_slow=st.floats(0.01, 100),
+    r_max=st.integers(0, 32),
+)
+@settings(max_examples=300, deadline=None)
+def test_r_star_is_argmin_property(start_fast, i_fast, start_slow, i_slow, r_max):
+    sim_fast = simulate_push_times(start_fast, i_fast, r_max)
+    sim_slow = simulate_push_times(start_slow, i_slow, r_max, lead=1)
+    r = optimal_extra_iterations(sim_fast, sim_slow)
+    assert 0 <= r <= r_max
+    best = min(min(abs(ts - tp) for ts in sim_slow) for tp in sim_fast)
+    got = min(abs(ts - sim_fast[r]) for ts in sim_slow)
+    assert math.isclose(got, best, rel_tol=1e-9, abs_tol=1e-9)
+
+
+def _push(tracker, ctrl, worker, ts):
+    tracker.record_push(worker, ts)
+    ctrl.observe_push(tracker, worker)
+
+
+def test_controller_cold_start_returns_zero():
+    tracker = StalenessTracker(range(2))
+    ctrl = SynchronizationController(r_max=4)
+    _push(tracker, ctrl, 0, 1.0)   # only one push: no interval yet
+    assert ctrl(tracker, 0, 1.0) == 0
+
+
+def test_controller_grants_when_slow_worker_far_out():
+    """Fast worker interval 1s, slow interval 10s: the controller should
+    grant extra iterations instead of blocking for ~10 s."""
+    tracker = StalenessTracker(range(2))
+    ctrl = SynchronizationController(r_max=8)
+    _push(tracker, ctrl, 1, 0.0)
+    _push(tracker, ctrl, 1, 10.0)   # slow: interval 10 -> next push ~20.0
+    for t in (0.5, 1.5, 3.5):
+        _push(tracker, ctrl, 0, t)  # fast: latest interval 2, count ahead
+    r = ctrl(tracker, 0, 3.5)
+    # Fast simulated pushes 3.5, 5.5 ... 19.5; slow frees it at 20.0:
+    # running all 8 extra iterations lands 0.5 s before the sync point.
+    assert r == 8
+    assert ctrl.decisions[-1].predicted_wait <= 0.5 + 1e-9
+
+
+def test_estimator_modes():
+    est_last = IntervalEstimator("last")
+    est_med = IntervalEstimator("median", window=5)
+    est_ema = IntervalEstimator("ema", ema_alpha=0.5)
+    for v in [1.0, 1.0, 9.0]:
+        est_last.observe(0, v)
+        est_med.observe(0, v)
+        est_ema.observe(0, v)
+    assert est_last.predict(0) == 9.0          # paper: last interval
+    assert est_med.predict(0) == 1.0           # robust to the spike
+    assert 1.0 < est_ema.predict(0) < 9.0
+    assert est_last.predict(1) is None
+
+
+def test_estimator_rejects_unknown_mode():
+    with pytest.raises(ValueError):
+        IntervalEstimator("quantum")
+
+
+@given(vals=st.lists(st.floats(0.01, 100), min_size=1, max_size=20))
+@settings(max_examples=100, deadline=None)
+def test_estimator_predictions_within_observed_range(vals):
+    for mode in ("last", "ema", "median"):
+        est = IntervalEstimator(mode, window=32)
+        for v in vals:
+            est.observe(0, v)
+        p = est.predict(0)
+        assert min(vals) - 1e-9 <= p <= max(vals) + 1e-9

@@ -1,0 +1,149 @@
+"""Multi-device SPMD tests (subprocess: the main process locked 1 device).
+
+Each test runs a python snippet under XLA_FLAGS=--xla_force_host_platform
+_device_count=8 and asserts on its output, covering:
+  * sharded train_step execution on a real (2, 4) mesh (not just compile),
+  * DSSP delayed-grad equivalence sharded vs single-device,
+  * elastic remesh 8 -> 4 devices,
+  * cross-pod parameter averaging (shard_map manual over 'pod').
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO_SRC = os.path.join(os.path.dirname(os.path.dirname(__file__)), "src")
+
+
+def run_snippet(body: str) -> str:
+    code = ("import os\n"
+            "os.environ['XLA_FLAGS'] = "
+            "'--xla_force_host_platform_device_count=8'\n"
+            + textwrap.dedent(body))
+    env = dict(os.environ, PYTHONPATH=REPO_SRC)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nERR:\n{out.stderr}"
+    return out.stdout
+
+
+def test_sharded_train_step_executes_and_matches_single_device():
+    out = run_snippet("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_smoke_config
+        from repro.launch.mesh import make_mesh
+        from repro.models import registry
+        from repro.models.params import spec_tree, sds_tree
+        from repro.models.sharding import rules_for_mesh, use_rules
+        from jax.sharding import NamedSharding
+
+        cfg = get_smoke_config('h2o-danube-1.8b')
+        params = registry.init_params(cfg, jax.random.PRNGKey(0))
+        toks = jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0,
+                                  cfg.vocab_size)
+        batch = {'tokens': toks, 'labels': toks}
+        lfn = registry.loss_fn(cfg)
+
+        # single device reference
+        ref_loss, ref_grads = jax.value_and_grad(
+            lambda p: lfn(p, batch)[0])(params)
+
+        mesh = make_mesh((2, 4), ('data', 'model'))
+        rules = rules_for_mesh(mesh)
+        specs = spec_tree(registry.param_defs(cfg), rules)
+        sp = jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s), specs,
+            is_leaf=lambda x: hasattr(x, '_normalized_spec') or
+                              type(x).__name__ == 'PartitionSpec')
+        params_sh = jax.device_put(params, sp)
+
+        def loss_fn(p, b):
+            with use_rules(rules):
+                return lfn(p, b)[0]
+
+        loss, grads = jax.jit(jax.value_and_grad(loss_fn))(params_sh, batch)
+        np.testing.assert_allclose(float(loss), float(ref_loss), rtol=1e-4)
+        g1 = jax.tree_util.tree_leaves(ref_grads)
+        g2 = jax.tree_util.tree_leaves(grads)
+        worst = max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(g1, g2))
+        assert worst < 5e-3, worst
+        print('SHARDED_OK', float(loss))
+    """)
+    assert "SHARDED_OK" in out
+
+
+def test_elastic_remesh_preserves_values():
+    out = run_snippet("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_smoke_config
+        from repro.launch.elastic import rescale_params
+        from repro.models import registry
+
+        cfg = get_smoke_config('h2o-danube-1.8b')
+        params = registry.init_params(cfg, jax.random.PRNGKey(0))
+        p8, mesh8 = rescale_params(cfg, params, 8, model_parallel=4)
+        assert mesh8.devices.size == 8, mesh8
+        p4, mesh4 = rescale_params(cfg, p8, 4, model_parallel=2)
+        assert mesh4.devices.size == 4
+        for a, b in zip(jax.tree_util.tree_leaves(params),
+                        jax.tree_util.tree_leaves(p4)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        print('ELASTIC_OK')
+    """)
+    assert "ELASTIC_OK" in out
+
+
+def test_cross_pod_sync_averages_parameters():
+    out = run_snippet("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.core.dssp_spmd import cross_pod_sync
+        from repro.launch.mesh import make_mesh
+
+        mesh = make_mesh((2, 2, 2), ('pod', 'data', 'model'))
+        # params replicated within pod, DIFFERENT across pods: emulate by
+        # a pod-indexed array then sync must average them
+        x = jnp.stack([jnp.full((4, 4), 1.0), jnp.full((4, 4), 3.0)])
+        sh = NamedSharding(mesh, P('pod', None, None))
+        xs = jax.device_put(x, sh)
+
+        def sync(t):
+            return cross_pod_sync(t, mesh, P('pod', None, None))
+
+        out = jax.jit(sync)(xs)
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.full((2, 4, 4), 2.0))
+        print('XPOD_OK')
+    """)
+    assert "XPOD_OK" in out
+
+
+def test_dssp_multidevice_matches_single_device_semantics():
+    out = run_snippet("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import dssp_spmd
+        from repro.launch.mesh import make_mesh
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        mesh = make_mesh((8,), ('data',))
+        g_like = {'w': jnp.zeros((16, 8))}
+        st = dssp_spmd.init_pipeline(g_like, depth=3)
+        sh = NamedSharding(mesh, P(None, 'data', None))
+        st = dssp_spmd.PipelineState(
+            buffer=jax.tree_util.tree_map(
+                lambda b: jax.device_put(b, sh), st.buffer),
+            step=st.step)
+
+        outs = []
+        for t in range(4):
+            g = {'w': jnp.full((16, 8), float(t + 1))}
+            out, valid, st = dssp_spmd.push_pop(st, g, jnp.int32(2))
+            outs.append((float(out['w'][0, 0]), float(valid)))
+        assert outs[2] == (1.0, 1.0) and outs[3] == (2.0, 1.0), outs
+        print('PIPE_OK')
+    """)
+    assert "PIPE_OK" in out

@@ -1,0 +1,173 @@
+"""Pallas kernels vs. pure-jnp oracles: shape/dtype sweeps + hypothesis.
+
+All kernels run in interpret mode on CPU (the TPU lowering is exercised
+by the same pallas_call on real hardware)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.fused_update import fused_update
+from repro.kernels.rmsnorm import rmsnorm
+
+
+# ----------------------------------------------------------- flash attn
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 32),
+                                           (False, None)])
+@pytest.mark.parametrize("b,lq,lk,hq,hkv,d", [
+    (1, 128, 128, 2, 2, 64),      # MHA square
+    (2, 256, 256, 4, 2, 64),      # GQA
+    (1, 128, 256, 4, 1, 128),     # MQA, lk > lq (suffix decode-ish)
+])
+def test_flash_attention_matches_ref(dtype, causal, window, b, lq, lk,
+                                     hq, hkv, d):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, lq, hq, d)).astype(dtype)
+    k = jax.random.normal(ks[1], (b, lk, hkv, d)).astype(dtype)
+    v = jax.random.normal(ks[2], (b, lk, hkv, d)).astype(dtype)
+    out = flash_attention_fwd(q, k, v, causal=causal, window=window,
+                              block_q=64, block_k=64, interpret=True)
+    expected = ref.flash_attention_ref(q, k, v, causal=causal,
+                                       window=window)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expected, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_attention_block_shape_invariance():
+    """Output must not depend on the chosen BlockSpec tiling."""
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, 256, 2, 64))
+    k = jax.random.normal(ks[1], (1, 256, 2, 64))
+    v = jax.random.normal(ks[2], (1, 256, 2, 64))
+    outs = [flash_attention_fwd(q, k, v, causal=True, block_q=bq,
+                                block_k=bk, interpret=True)
+            for bq, bk in ((64, 64), (128, 64), (64, 128), (256, 256))]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], atol=1e-5, rtol=1e-5)
+
+
+def test_flash_attention_custom_vjp_grads():
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (1, 128, 2, 64))
+    k = jax.random.normal(ks[1], (1, 128, 1, 64))
+    v = jax.random.normal(ks[2], (1, 128, 1, 64))
+
+    def loss_kernel(q, k, v):
+        return jnp.sum(ops.flash_attention(q, k, v) ** 2)
+
+    def loss_ref(q, k, v):
+        return jnp.sum(ref.flash_attention_ref(q, k, v) ** 2)
+
+    g1 = jax.grad(loss_kernel, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, atol=1e-4, rtol=1e-4)
+
+
+@given(
+    lq_blocks=st.integers(1, 3),
+    heads=st.sampled_from([(2, 2), (4, 2), (8, 1)]),
+    d=st.sampled_from([64, 128]),
+    seed=st.integers(0, 2**16),
+)
+@settings(max_examples=12, deadline=None)
+def test_flash_attention_property(lq_blocks, heads, d, seed):
+    hq, hkv = heads
+    lq = 64 * lq_blocks
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (1, lq, hq, d))
+    k = jax.random.normal(ks[1], (1, lq, hkv, d))
+    v = jax.random.normal(ks[2], (1, lq, hkv, d))
+    out = flash_attention_fwd(q, k, v, causal=True, block_q=64,
+                              block_k=64, interpret=True)
+    expected = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(out, expected, atol=3e-5, rtol=3e-5)
+
+
+# ----------------------------------------------------------- rmsnorm
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(4, 256), (2, 16, 512), (8, 3, 128)])
+def test_rmsnorm_matches_ref(dtype, shape):
+    x = jax.random.normal(jax.random.PRNGKey(0), shape).astype(dtype)
+    w = jax.random.normal(jax.random.PRNGKey(1), shape[-1:]).astype(dtype)
+    out = rmsnorm(x, w, interpret=True)
+    expected = ref.rmsnorm_ref(x, w)
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expected, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@given(rows=st.integers(1, 17), d=st.sampled_from([128, 384, 768]),
+       seed=st.integers(0, 2**16))
+@settings(max_examples=15, deadline=None)
+def test_rmsnorm_property(rows, d, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (rows, d))
+    w = jnp.ones((d,))
+    out = rmsnorm(x, w, interpret=True)
+    np.testing.assert_allclose(out, ref.rmsnorm_ref(x, w),
+                               atol=1e-5, rtol=1e-5)
+    # invariant: rmsnorm output has unit RMS when weight == 1
+    rms = np.sqrt(np.mean(np.square(np.asarray(out)), axis=-1))
+    np.testing.assert_allclose(rms, 1.0, atol=1e-3)
+
+
+# ----------------------------------------------------------- fused update
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(4096,), (300,), (17, 129), (2, 3, 5)])
+def test_fused_update_matches_ref(dtype, shape):
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    p = jax.random.normal(ks[0], shape).astype(dtype)
+    m = jax.random.normal(ks[1], shape, jnp.float32)
+    g = jax.random.normal(ks[2], shape).astype(dtype)
+    po, mo = fused_update(p, m, g, lr=0.1, beta=0.9, scale=0.5,
+                          interpret=True)
+    pe, me = ref.fused_update_ref(p, m, g, lr=0.1, beta=0.9, scale=0.5)
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(po, np.float32),
+                               np.asarray(pe, np.float32), atol=tol,
+                               rtol=tol)
+    np.testing.assert_allclose(mo, me, atol=1e-5, rtol=1e-5)
+
+
+def test_fused_update_traced_scalars_no_recompile():
+    """lr/scale are data, not constants: one jit trace serves all values."""
+    traces = 0
+
+    @jax.jit
+    def step(p, m, g, lr, scale):
+        nonlocal traces
+        traces += 1
+        return fused_update(p, m, g, lr=lr, beta=0.9, scale=scale,
+                            interpret=True)
+
+    p = jnp.ones((1024,))
+    m = jnp.zeros((1024,))
+    g = jnp.ones((1024,))
+    for lr, sc in ((0.1, 1.0), (0.2, 0.0), (0.01, 0.5)):
+        po, mo = step(p, m, g, jnp.float32(lr), jnp.float32(sc))
+        pe, me = ref.fused_update_ref(p, m, g, lr=lr, beta=0.9, scale=sc)
+        np.testing.assert_allclose(po, pe, atol=1e-6)
+    assert traces == 1
+
+
+@given(n=st.integers(1, 5000), seed=st.integers(0, 2**16),
+       beta=st.floats(0.0, 0.999))
+@settings(max_examples=15, deadline=None)
+def test_fused_update_property(n, seed, beta):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    p = jax.random.normal(ks[0], (n,))
+    m = jax.random.normal(ks[1], (n,))
+    g = jax.random.normal(ks[2], (n,))
+    po, mo = fused_update(p, m, g, lr=0.05, beta=beta, interpret=True)
+    pe, me = ref.fused_update_ref(p, m, g, lr=0.05, beta=beta)
+    np.testing.assert_allclose(po, pe, atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(mo, me, atol=1e-5, rtol=1e-5)

@@ -1,0 +1,176 @@
+"""Policy semantics (Alg. 1) + simulator invariants, incl. property tests."""
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.policies import (
+    ASPPolicy, BackupWorkersBSP, BSPPolicy, DSSPPolicy, SSPPolicy, make_policy,
+)
+from repro.core.staleness import StalenessTracker, regret_bound_constant
+from repro.ps.simulator import (
+    PSSimulator, constant_intervals, jittered_intervals, run_policy,
+)
+
+
+# ---------------------------------------------------------------- unit level
+def test_ssp_releases_within_threshold():
+    tr = StalenessTracker(range(3))
+    pol = SSPPolicy(2)
+    # worker 0 pushes 3 times while others idle: gaps 1,2,3
+    assert pol.on_push(tr, 0, tr.record_push(0, 0.0).timestamp).release_now
+    assert pol.on_push(tr, 0, tr.record_push(0, 1.0).timestamp).release_now
+    assert not pol.on_push(tr, 0, tr.record_push(0, 2.0).timestamp).release_now
+    # slowest catching up releases it
+    tr.record_push(1, 3.0)
+    assert not pol.may_release(tr, 0)   # worker 2 still at 0
+    tr.record_push(2, 3.5)
+    tr.record_push(1, 4.0), tr.record_push(2, 4.5)
+    assert pol.may_release(tr, 0)
+
+
+def test_asp_never_blocks():
+    tr = StalenessTracker(range(2))
+    pol = ASPPolicy()
+    for i in range(50):
+        d = pol.on_push(tr, 0, tr.record_push(0, float(i)).timestamp)
+        assert d.release_now and d.apply_update
+
+
+def test_dssp_grants_and_spends_credits():
+    tr = StalenessTracker(range(2))
+    pol = DSSPPolicy(1, 5)
+    # Build interval history: worker 1 slow (interval 10), worker 0 fast (1).
+    tr.record_push(1, 0.0); pol.controller.observe_push(tr, 1)
+    tr.record_push(1, 10.0); pol.controller.observe_push(tr, 1)
+    t = 10.0
+    # worker 0 sprints: gap grows past s_L=1 -> controller consulted
+    released, blocked = 0, 0
+    for k in range(8):
+        t += 1.0
+        rec = tr.record_push(0, t)
+        d = pol.on_push(tr, 0, t)
+        if d.release_now:
+            released += 1
+        else:
+            blocked += 1
+            break
+    assert released >= 2            # got extra iterations beyond s_L
+    assert pol.credits_granted > 0
+    assert blocked == 1             # eventually blocks (bounded staleness)
+    assert tr.gap(0) <= pol.s_upper + 1
+
+
+def test_dssp_max_staleness_bounded_by_upper():
+    m = run_policy(DSSPPolicy(2, 6), [0.1, 1.0], max_pushes=600)
+    # push-time gap can exceed the *run* bound by one (the blocked push)
+    assert m.max_staleness <= 6 + 1
+
+
+def test_backup_workers_drops_stragglers():
+    m = run_policy(BackupWorkersBSP(4, 1), [1.0, 1.0, 1.0, 3.0],
+                   max_pushes=400)
+    assert m.dropped_updates > 0
+    assert m.applied_updates + m.dropped_updates == m.total_pushes
+    # the slow worker is never blocked by the committed rounds
+    assert m.wait_time.get(3, 0.0) == 0.0
+
+
+def test_make_policy_factory():
+    assert make_policy("bsp").name == "bsp"
+    assert make_policy("asp").name == "asp"
+    assert "ssp" in make_policy("ssp", staleness=4).name
+    assert "dssp" in make_policy("dssp", s_lower=2, s_upper=8).name
+    assert "backup" in make_policy("backup", n_workers=4, backups=1).name
+    with pytest.raises(ValueError):
+        make_policy("nope")
+
+
+def test_regret_bound_monotone_in_staleness():
+    assert regret_bound_constant(15, 4) > regret_bound_constant(3, 4)
+
+
+# ------------------------------------------------------------- simulator level
+def test_bsp_lockstep_counts():
+    sim = PSSimulator(BSPPolicy(), 4, constant_intervals([1.0, 1.3, 1.7, 2.9]))
+    m = sim.run(max_pushes=200)
+    # lockstep: every worker pushed within 1 round of each other
+    counts = sorted(m.pushes.values())
+    assert counts[-1] - counts[0] <= 1
+    assert m.max_staleness <= 1
+
+
+def test_asp_zero_wait():
+    m = run_policy(ASPPolicy(), [1.0, 2.0, 4.0], max_pushes=300)
+    assert m.total_wait == 0.0
+
+
+def test_throughput_ordering_heterogeneous():
+    """Paper §V.C / Table I: ASP >= DSSP >= SSP(s_L) >= BSP in a
+    heterogeneous cluster (iteration throughput)."""
+    intervals = [1.0, 1.1, 1.2, 3.0]     # one straggler (mixed GPUs)
+    n_pushes = 2000
+    th = {}
+    for pol in (ASPPolicy(), DSSPPolicy(3, 15), SSPPolicy(3), BSPPolicy()):
+        m = run_policy(pol, intervals, max_pushes=n_pushes)
+        th[pol.name] = m.throughput
+    assert th["asp"] >= th["dssp(s_L=3,s_U=15,last)"] * 0.999
+    assert th["dssp(s_L=3,s_U=15,last)"] > th["ssp(s=3)"]
+    assert th["ssp(s=3)"] > th["bsp"]
+
+
+def test_dssp_reduces_wait_vs_ssp_lower_bound():
+    """The paper's core claim: dynamically extending the threshold reduces
+    fast-worker waiting versus SSP pinned at s_L."""
+    intervals = [1.0, 2.6]
+    ssp = run_policy(SSPPolicy(3), intervals, max_pushes=1500)
+    dssp = run_policy(DSSPPolicy(3, 15), intervals, max_pushes=1500)
+    assert dssp.total_wait < ssp.total_wait
+    assert dssp.throughput >= ssp.throughput
+
+
+def test_dssp_staleness_adapts_homogeneous_vs_hetero():
+    """C3: in a homogeneous cluster DSSP stays near s_L; with a straggler
+    it exploits the range."""
+    homog = run_policy(DSSPPolicy(2, 12), [1.0, 1.0, 1.0, 1.0],
+                       max_pushes=1000)
+    heter = run_policy(DSSPPolicy(2, 12), [1.0, 1.0, 1.0, 4.0],
+                       max_pushes=1000)
+    assert heter.mean_staleness > homog.mean_staleness
+
+
+# ------------------------------------------------------------ property tests
+policy_strategy = st.sampled_from(["bsp", "asp", "ssp", "dssp"])
+
+
+@given(
+    name=policy_strategy,
+    n=st.integers(2, 6),
+    seed=st.integers(0, 2**16),
+    jitter=st.floats(0.0, 0.4),
+)
+@settings(max_examples=60, deadline=None)
+def test_no_deadlock_and_bounded_staleness(name, n, seed, jitter):
+    import random
+    rng = random.Random(seed)
+    intervals = [rng.uniform(0.2, 3.0) for _ in range(n)]
+    pol = make_policy(name, staleness=3, s_lower=2, s_upper=7, n_workers=n)
+    sim = PSSimulator(pol, n, jittered_intervals(intervals, jitter, seed))
+    m = sim.run(max_pushes=50 * n)
+    assert m.total_pushes >= 50 * n      # progressed: no deadlock
+    bound = pol.effective_staleness_bound(sim.tracker)
+    if bound != float("inf"):
+        # push-time gap exceeds the run bound by at most 1 (blocked push)
+        assert m.max_staleness <= bound + 1
+
+
+@given(n=st.integers(2, 5), seed=st.integers(0, 2**16))
+@settings(max_examples=40, deadline=None)
+def test_updates_conserved(n, seed):
+    import random
+    rng = random.Random(seed)
+    intervals = [rng.uniform(0.5, 2.0) for _ in range(n)]
+    m = run_policy(make_policy("dssp", s_lower=1, s_upper=6),
+                   intervals, max_pushes=40 * n)
+    assert m.applied_updates == m.total_pushes       # DSSP drops nothing
+    assert sum(m.pushes.values()) == m.total_pushes

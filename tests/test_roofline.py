@@ -1,0 +1,114 @@
+"""Roofline extraction unit tests: HLO shape parsing, wire-byte model,
+affine depth fit, model-flops accounting."""
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.shapes import SHAPES, cell_applicable
+from repro.roofline import analysis as R
+
+
+def test_shape_bytes():
+    assert R.shape_bytes("bf16[16,256,512]{2,1,0}") == 16 * 256 * 512 * 2
+    assert R.shape_bytes("f32[]") == 4
+    assert R.shape_bytes("(f32[8], bf16[4,4])") == 8 * 4 + 16 * 2
+    assert R.shape_bytes("pred[10]") == 10
+    assert R.shape_bytes("token[]") == 0      # unknown dtype ignored
+
+
+HLO = """
+ENTRY %main {
+  %ar = f32[16,1024]{1,0} all-reduce(%x), replica_groups=[16,16]<=[256], to_apply=%add
+  %arp = f32[16,1024]{1,0} all-reduce(%y), replica_groups=[16,16]<=[256], to_apply=%add.clone_promoted
+  %ag = bf16[32,2048]{1,0} all-gather(%z), replica_groups=[8,32]<=[256], dimensions={1}
+  %rs = f32[4,64]{1,0} reduce-scatter(%w), replica_groups={{0,1,2,3}}, dimensions={0}
+  %cp = bf16[128]{0} collective-permute(%v), source_target_pairs={{0,1}}
+  %aa = f32[8,8]{1,0} all-to-all(%u), replica_groups=[2,128]<=[256]
+}
+"""
+
+
+def test_parse_collectives_wire_model():
+    st = R.parse_collectives(HLO)
+    s_ar = 16 * 1024 * 4
+    # plain AR: 2*S*(n-1)/n with n=16; promoted AR counted at half size
+    expected_ar = 2 * s_ar * 15 / 16 + 2 * (s_ar // 2) * 15 / 16
+    assert st.bytes_by_kind["all-reduce"] == int(expected_ar)
+    s_ag = 32 * 2048 * 2
+    assert st.bytes_by_kind["all-gather"] == int(s_ag * 31 / 32)
+    s_rs = 4 * 64 * 4
+    assert st.bytes_by_kind["reduce-scatter"] == s_rs * 3
+    assert st.bytes_by_kind["collective-permute"] == 128 * 2
+    assert st.count_by_kind["all-reduce"] == 2
+    assert st.total_bytes > 0
+
+
+def test_affine_fit():
+    # c(d) = 10 + 7d measured at d=1,2 -> extrapolate to 24
+    assert R.affine_fit(17.0, 24.0, 1, 2, 24) == pytest.approx(10 + 7 * 24)
+
+
+def test_model_flops_train_vs_decode():
+    cfg = get_config("h2o-danube-1.8b")
+    tr = R.model_flops(cfg, SHAPES["train_4k"])
+    de = R.model_flops(cfg, SHAPES["decode_32k"])
+    n = cfg.param_count()
+    assert tr == pytest.approx(6.0 * n * 4096 * 256)
+    assert de == pytest.approx(2.0 * n * 128)
+
+
+def test_model_flops_moe_uses_active_params():
+    cfg = get_config("qwen3-moe-235b-a22b")
+    total = cfg.param_count()
+    active = cfg.active_param_count()
+    assert active < 0.2 * total          # 22B active of 235B
+    assert R.model_flops(cfg, SHAPES["train_4k"]) == pytest.approx(
+        6.0 * active * 4096 * 256)
+
+
+def test_cell_applicability_matrix():
+    full_attn = ["qwen1.5-110b", "qwen1.5-32b", "mistral-large-123b",
+                 "qwen3-moe-235b-a22b", "deepseek-moe-16b",
+                 "whisper-tiny", "chameleon-34b"]
+    subq = ["h2o-danube-1.8b", "xlstm-125m", "jamba-v0.1-52b"]
+    for a in full_attn:
+        assert not cell_applicable(a, "long_500k")
+        assert cell_applicable(a, "train_4k")
+    for a in subq:
+        assert cell_applicable(a, "long_500k")
+
+
+def test_cost_configs_families():
+    for arch, expect_none in (("xlstm-125m", True),
+                              ("h2o-danube-1.8b", False),
+                              ("jamba-v0.1-52b", False),
+                              ("whisper-tiny", False)):
+        cc = R.cost_configs(get_config(arch))
+        assert (cc is None) == expect_none
+        if cc is not None:
+            c1, c2, d1, d2, L = cc
+            assert c1.scan_unroll and c2.scan_unroll
+            assert c1.attn_chunk == 0 and c1.grad_accum == 1
+            assert d2 > d1 and L >= d2
+
+
+def test_slstm_correction_only_for_xlstm():
+    x = R.slstm_correction_flops(get_config("xlstm-125m"),
+                                 SHAPES["train_4k"])
+    assert x > 0
+    assert R.slstm_correction_flops(get_config("h2o-danube-1.8b"),
+                                    SHAPES["train_4k"]) == 0.0
+
+
+def test_roofline_terms_dominant_and_fraction():
+    t = R.RooflineTerms(
+        arch="a", shape="train_4k", mesh="16x16",
+        flops=1e12, hbm_bytes=1e11, collective_bytes=1e9,
+        t_compute=1e12 / R.PEAK_FLOPS, t_memory=1e11 / R.HBM_BW,
+        t_collective=1e9 / R.ICI_BW,
+        model_flops=6e14, per_device_argument_bytes=1e9,
+        peak_memory_bytes=2e9, collective_counts={})
+    assert t.dominant == "memory"
+    assert 0 < t.roofline_fraction < 1
+    assert t.useful_flops_ratio == pytest.approx(6e14 / (1e12 * 256))

@@ -1,0 +1,104 @@
+"""Serving-path correctness: prefill == forward, decode continues the
+prefill cache exactly, int8 KV quantization stays within tolerance."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import registry, transformer
+from repro.models.config import ModelConfig
+
+
+def _cfg(**kw):
+    base = dict(name="t", family="dense", n_layers=2, d_model=64,
+                n_heads=4, n_kv_heads=2, d_ff=160, vocab_size=256,
+                dtype="float32", remat="none")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def _setup(cfg, b=2, l=12, seed=0):
+    params = registry.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(seed), (b, l), 0,
+                              cfg.vocab_size)
+    return params, toks
+
+
+def test_prefill_last_logits_match_forward():
+    cfg = _cfg()
+    params, toks = _setup(cfg)
+    full, _ = transformer.forward(cfg, params, toks)
+    pre, cache = transformer.forward_prefill(cfg, params, toks)
+    np.testing.assert_allclose(np.asarray(pre[:, 0]),
+                               np.asarray(full[:, -1]), atol=2e-4,
+                               rtol=2e-4)
+    assert cache["k"].shape == (cfg.n_layers, 2, 12, cfg.n_kv_heads,
+                                cfg.resolved_head_dim)
+
+
+@pytest.mark.parametrize("kv_dtype", ["", "int8"])
+def test_decode_continues_prefill_cache(kv_dtype):
+    """Teacher-forced decode from the prefill cache must reproduce the
+    full-forward logits position by position (exactly for bf16/f32
+    caches, within quantization tolerance for int8)."""
+    cfg = _cfg(kv_cache_dtype=kv_dtype)
+    b, l_prompt, l_total = 2, 6, 12
+    params, toks = _setup(cfg, b=b, l=l_total)
+    full, _ = transformer.forward(cfg, params, toks)
+
+    _, cache = transformer.forward_prefill(cfg, params,
+                                           toks[:, :l_prompt])
+    pad = l_total - l_prompt
+    cache = {k: jnp.pad(v, ((0, 0), (0, 0), (0, pad))
+                        + ((0, 0),) * (v.ndim - 3))
+             for k, v in cache.items()}
+    tol = 2e-4 if kv_dtype == "" else 0.12
+    for i in range(l_prompt, l_total):
+        logits, cache = transformer.forward_decode(
+            cfg, params, toks[:, i:i + 1], cache, jnp.int32(i))
+        np.testing.assert_allclose(np.asarray(logits[:, 0]),
+                                   np.asarray(full[:, i]),
+                                   atol=tol, rtol=tol)
+
+
+def test_sliding_window_ring_cache_matches_forward():
+    """Ring-buffer decode with window < context must equal the windowed
+    full forward at every position past the window."""
+    cfg = _cfg(sliding_window=4)
+    b, l = 2, 10
+    params, toks = _setup(cfg, b=b, l=l)
+    full, _ = transformer.forward(cfg, params, toks)
+
+    fam = registry.family(cfg)
+    cache = fam.init_state(cfg, b, l)          # capped at window=4
+    assert cache["k"].shape[2] == 4
+    for i in range(l):
+        logits, cache = transformer.forward_decode(
+            cfg, params, toks[:, i:i + 1], cache, jnp.int32(i))
+        np.testing.assert_allclose(np.asarray(logits[:, 0]),
+                                   np.asarray(full[:, i]),
+                                   atol=3e-4, rtol=3e-4,
+                                   err_msg=f"pos {i}")
+
+
+def test_int8_quantize_roundtrip_error_bound():
+    from repro.models.layers import dequantize_kv, quantize_kv
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 7, 2, 32)) * 3.0
+    q, s = quantize_kv(x)
+    back = dequantize_kv(q, s, jnp.float32)
+    # symmetric int8: error bounded by scale/2 = max|row| / 254
+    bound = np.asarray(jnp.max(jnp.abs(x), axis=-1) / 254.0 + 1e-6)
+    err = np.asarray(jnp.abs(back - x))
+    assert (err <= bound[..., None] + 1e-7).all()
+
+
+def test_padded_vocab_never_sampled():
+    cfg = _cfg(vocab_size=250)     # pads to 256
+    assert cfg.padded_vocab == 256
+    params, toks = _setup(cfg, l=8)
+    logits, _ = transformer.forward(cfg, params, toks)
+    assert logits.shape[-1] == 256
+    assert np.asarray(logits[..., 250:]).max() <= -1e29
+    assert int(jnp.argmax(logits, -1).max()) < 250

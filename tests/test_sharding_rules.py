@@ -1,0 +1,104 @@
+"""Size-aware logical-axis sharding rules + param spec derivation."""
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.models import registry
+from repro.models.params import sds_tree, spec_tree
+from repro.models.sharding import AxisRules, multi_pod_rules, \
+    single_pod_rules
+from repro.optim import make_optimizer
+from repro.optim.optimizers import state_partition_specs
+
+SIZES = {"data": 16, "model": 16}
+SIZES3 = {"pod": 2, "data": 16, "model": 16}
+
+
+def test_divisible_dims_shard():
+    r = single_pod_rules(SIZES)
+    assert r.spec(("batch", None, None), (256, 4096, 2560)) == P("data")
+    assert r.spec((None, "fsdp", "model"), (24, 2560, 6912)) == \
+        P(None, "data", "model")
+
+
+def test_non_divisible_dims_drop():
+    r = single_pod_rules(SIZES)
+    # 40 heads don't divide 16 -> model mapping dropped
+    assert r.spec((None, "fsdp", "model", None),
+                  (64, 5120, 40, 128)) == P(None, "data")
+    # batch=1 (long_500k) -> batch mapping dropped
+    assert r.spec(("batch", None), (1, 524288)) == P()
+
+
+def test_multi_axis_mapping_and_dedup():
+    r = multi_pod_rules(SIZES3)
+    # batch maps to (pod, data) jointly
+    assert r.spec(("batch", None), (256, 4096)) == P(("pod", "data"))
+    # cache_seq takes (data, model); a later 'fsdp' may not reuse 'data'
+    s = r.spec((None, "cache_seq", "fsdp"), (8, 32768, 4096))
+    assert s == P(None, ("data", "model"))
+
+
+def test_partial_multi_axis_divisibility():
+    r = multi_pod_rules(SIZES3)
+    # batch 32 divides pod*data=32 exactly
+    assert r.spec(("batch",), (32,)) == P(("pod", "data"))
+    # batch 16 does not divide 32 -> prefix fallback shards over 'pod'
+    assert r.spec(("batch",), (16,)) == P("pod")
+    # batch 1 (long_500k) cannot shard at all
+    assert r.spec(("batch",), (1,)) == P()
+
+
+@pytest.mark.parametrize("arch", ["qwen1.5-110b", "qwen3-moe-235b-a22b",
+                                  "jamba-v0.1-52b", "whisper-tiny"])
+def test_param_specs_align_with_shapes(arch):
+    cfg = get_config(arch)
+    rules = single_pod_rules(SIZES)
+    defs = registry.param_defs(cfg)
+    sds = sds_tree(defs, cfg.dtype)
+    specs = spec_tree(defs, rules)
+    flat_s = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    flat_a = jax.tree_util.tree_leaves(sds)
+    assert len(flat_s) == len(flat_a)
+    for spec, arr in zip(flat_s, flat_a):
+        assert len(spec) <= len(arr.shape)
+        for dim, ax in zip(arr.shape, tuple(spec)):
+            if ax is None:
+                continue
+            n = 1
+            for a in ((ax,) if isinstance(ax, str) else ax):
+                n *= SIZES.get(a, 1)
+            assert dim % n == 0, (arch, arr.shape, spec)
+
+
+def test_whisper_padded_vocab_shards():
+    cfg = get_config("whisper-tiny")
+    assert cfg.vocab_size == 51865
+    assert cfg.padded_vocab == 51872 and cfg.padded_vocab % 16 == 0
+    rules = single_pod_rules(SIZES)
+    defs = registry.param_defs(cfg)
+    specs = spec_tree(defs, rules)
+    assert tuple(specs["embed"])[0] == "model"   # vocab dim now shards
+
+
+def test_opt_state_specs_follow_params():
+    cfg = get_config("h2o-danube-1.8b")
+    rules = single_pod_rules(SIZES)
+    defs = registry.param_defs(cfg)
+    p_sds = sds_tree(defs, cfg.dtype)
+    p_spec = spec_tree(defs, rules)
+
+    adam = make_optimizer("adamw", 1e-3)
+    st = state_partition_specs(adam, p_spec, p_sds)
+    assert st.mu == p_spec and st.nu == p_spec and st.count == P()
+
+    af = make_optimizer("adafactor")
+    st = state_partition_specs(af, p_spec, p_sds)
+    # v_row of w_gate (L, d, f) spec (None,'data','model') -> (None,'data')
+    wg_row = st.v_row["layers"]["mlp"]["w_gate"]
+    assert wg_row == P(None, "data")
+    wg_col = st.v_col["layers"]["mlp"]["w_gate"]
+    assert wg_col == P(None, "model")

@@ -1,0 +1,169 @@
+"""Trainer + checkpoint/restart + data determinism + DSSP-SPMD semantics."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import get_smoke_config
+from repro.core import dssp_spmd
+from repro.data.synthetic import DataConfig, batches, loss_floor
+from repro.launch.train import Trainer
+
+
+def _mk_trainer(tmp_path=None, sync="dssp", arch="h2o-danube-1.8b", **kw):
+    cfg = get_smoke_config(arch)
+    data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                          global_batch=4)
+    return Trainer(cfg, data_cfg, sync=sync, lr=5e-3,
+                   checkpoint_dir=str(tmp_path) if tmp_path else None,
+                   save_every=5, **kw)
+
+
+# ------------------------------------------------------------------ data
+def test_data_deterministic_and_host_sharded():
+    cfg = get_smoke_config("h2o-danube-1.8b")
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=16, global_batch=8)
+    a = next(batches(cfg, dc))
+    b = next(batches(cfg, dc))
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    # two hosts' shards tile the single-host batch
+    h0 = next(batches(cfg, dc, host_index=0, n_hosts=2))
+    h1 = next(batches(cfg, dc, host_index=1, n_hosts=2))
+    np.testing.assert_array_equal(a["tokens"][0::2], h0["tokens"])
+    np.testing.assert_array_equal(a["tokens"][1::2], h1["tokens"])
+    # labels are next-token shifted
+    np.testing.assert_array_equal(a["tokens"][:, 1:], a["labels"][:, :-1])
+
+
+def test_data_resume_cursor():
+    cfg = get_smoke_config("h2o-danube-1.8b")
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=16, global_batch=4)
+    it = batches(cfg, dc)
+    seq = [next(it)["tokens"] for _ in range(5)]
+    it2 = batches(cfg, dc, start_step=3)
+    np.testing.assert_array_equal(next(it2)["tokens"], seq[3])
+
+
+# ------------------------------------------------------------- checkpoint
+def test_checkpoint_atomic_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    tree = {"a": jnp.arange(6.0).reshape(2, 3), "b": {"c": jnp.ones(4)}}
+    mgr.save(3, tree, extras={"next_step": 3})
+    mgr.save(7, tree, extras={"next_step": 7})
+    mgr.save(9, tree, extras={"next_step": 9})
+    assert mgr.steps() == [7, 9]          # keep=2 GC'd step 3
+    restored, extras = mgr.restore(9, tree)
+    np.testing.assert_array_equal(restored["a"], tree["a"])
+    assert extras["next_step"] == 9
+
+
+def test_checkpoint_rejects_shape_mismatch(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(1, {"a": jnp.ones((2, 2))})
+    with pytest.raises(ValueError):
+        mgr.restore(1, {"a": jnp.ones((3, 3))})
+
+
+def test_trainer_restart_is_bit_exact(tmp_path):
+    """Crash/restart must reproduce the uninterrupted run exactly."""
+    t1 = _mk_trainer(tmp_path / "a", sync="dssp")
+    log1 = t1.train(12, verbose=False)
+
+    t2 = _mk_trainer(tmp_path / "b", sync="dssp")
+    t2.train(5, verbose=False)
+    t2.ckpt.wait()
+    t3 = _mk_trainer(tmp_path / "b", sync="dssp")
+    assert t3.resume()
+    assert t3.step_idx == 5
+    log3 = t3.train(7, verbose=False)
+    np.testing.assert_allclose(log1.losses[-1], log3.losses[-1],
+                               rtol=1e-5)
+    flat1 = jax.tree_util.tree_leaves(t1.params)
+    flat3 = jax.tree_util.tree_leaves(t3.params)
+    for a, b in zip(flat1, flat3):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-6)
+
+
+# --------------------------------------------------------------- training
+@pytest.mark.parametrize("sync", ["bsp", "ssp", "dssp"])
+def test_trainer_converges_under_each_sync(sync):
+    t = _mk_trainer(sync=sync, s_lower=0 if sync == "bsp" else 1,
+                    s_upper=3)
+    log = t.train(40, verbose=False)
+    assert log.losses[-1] < log.losses[0] * 0.98
+    if sync == "dssp":
+        assert all(1 <= d <= 3 for d in log.delays[1:])
+
+
+def test_dssp_delay_zero_equals_bsp():
+    """push_pop(delay=0) must reproduce BSP exactly."""
+    cfg = get_smoke_config("h2o-danube-1.8b")
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=16, global_batch=2)
+    a = Trainer(cfg, dc, sync="bsp", lr=1e-2, staleness_damping=False)
+    b = Trainer(cfg, dc, sync="ssp", s_lower=0, s_upper=2, lr=1e-2,
+                staleness_damping=False)
+    # force ssp's fixed delay to 0 by monkeypatching the loop constant
+    b.s_lower = 0
+    la = a.train(5, verbose=False)
+
+    # manual loop with delay=0 through b's pipeline step
+    from repro.data.synthetic import batches as mkb
+    it = mkb(cfg, dc)
+    for i in range(5):
+        batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+        (b.params, b.opt_state, b.pipeline, b.err_state, loss) = \
+            b._jit_step(b.params, b.opt_state, b.pipeline, b.err_state,
+                        batch, jnp.int32(0))
+    for x, y in zip(jax.tree_util.tree_leaves(a.params),
+                    jax.tree_util.tree_leaves(b.params)):
+        np.testing.assert_allclose(np.asarray(x, np.float32),
+                                   np.asarray(y, np.float32), atol=1e-6)
+
+
+def test_gradient_compression_still_converges():
+    t = _mk_trainer(sync="dssp", compressor="int8")
+    log = t.train(40, verbose=False)
+    assert log.losses[-1] < log.losses[0] * 0.98
+
+
+# ------------------------------------------------------- pipeline semantics
+def test_push_pop_ring_semantics():
+    g1 = {"w": jnp.ones(3)}
+    st = dssp_spmd.init_pipeline(g1, depth=3)
+    # delay 2: first two steps invalid, then grads from t-2 emerge
+    outs = []
+    for t in range(4):
+        g = {"w": jnp.full(3, float(t + 1))}
+        out, valid, st = dssp_spmd.push_pop(st, g, jnp.int32(2))
+        outs.append((float(out["w"][0]), float(valid)))
+    assert outs[0][1] == 0.0 and outs[1][1] == 0.0
+    assert outs[2] == (1.0, 1.0)      # step 2 applies grad from step 0
+    assert outs[3] == (2.0, 1.0)
+
+
+def test_controller_delay_tracks_collective_time():
+    c = dssp_spmd.DsspScheduleController(1, 8)
+    for _ in range(3):
+        c.observe(step_time=0.1, collective_time=0.25)
+    assert c.delay() == 3                  # ceil(0.25 / 0.1)
+    for _ in range(8):
+        c.observe(step_time=0.1, collective_time=1.5)
+    assert c.delay() == 8                  # clamped at s_upper
+    for _ in range(8):
+        c.observe(step_time=0.1, collective_time=0.0)
+    assert c.delay() == 1                  # never below s_lower
+
+
+def test_controller_period_from_pod_skew():
+    c = dssp_spmd.DsspScheduleController(2, 10)
+    # homogeneous pods: Alg-2 alignment = one extra local step (the next
+    # push of the slowest pod lands exactly one interval later)
+    homog = c.period([1.0, 1.0])
+    assert homog == 3                       # s_lower + 1
+    # a 3x slower pod: the fast pod runs more extra local steps
+    skewed = c.period([1.0, 3.0])
+    assert skewed > homog
+    assert skewed <= 10                     # bounded by s_upper
