@@ -16,12 +16,14 @@ from typing import List
 def main() -> None:
     t0 = time.monotonic()
     rows: List[str] = []
-    from benchmarks import paper_tables, roofline_table
+    from benchmarks import paper_tables, roofline_table, sharded_ps
 
     paper_tables.threshold_sweep(rows)          # Fig. 3b (virtual time)
     paper_tables.wait_time_accounting(rows)     # §V.C     (virtual time)
     paper_tables.finite_budget_updates(rows)    # Table I systems term
     paper_tables.transient_straggler(rows)      # §VI future-work scenario
+    sharded_table = sharded_ps.sharded_comparison(rows)  # shards 1/4/16
+    sharded_ps.hot_shard_sweep(rows)            # skewed shard load
     paper_tables.paradigm_convergence(rows)     # Fig. 3a  (threaded PS)
     paper_tables.hetero_time_to_target(rows)    # Table I  (composed)
     roofline_table.csv_rows(rows)               # §Roofline (dry-run)
@@ -29,6 +31,9 @@ def main() -> None:
     print("name,us_per_call,derived")
     for r in rows:
         print(r)
+    print("# sharded_ps comparison (RunMetrics.compare):")
+    for line in sharded_table.splitlines():
+        print(f"# {line}")
     print(f"# total_bench_wall_s={time.monotonic() - t0:.1f}",
           file=sys.stderr)
 

@@ -1,0 +1,60 @@
+"""Sharded-PS comparison: shard counts {1, 4, 16} x policies {BSP, SSP,
+DSSP} in virtual time (ShardedPSSimulator), the paper's heterogeneous
+4-worker profile.
+
+Emits the standard CSV rows plus the ``RunMetrics.compare`` table (as
+``#``-prefixed comment lines, one aggregate row per (policy, S) cell) so
+the Table-I ordering can be read per shard count.  A second sweep prices
+skewed shard load — one hot shard with non-zero service time — a
+scenario the paper's monolithic server cannot express.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from repro.core.policies import make_policy_factory
+from repro.ps.metrics import RunMetrics, compare
+from repro.ps.sharded import hot_shard_service, run_sharded_policy
+
+SPEEDS = [1.0, 1.0, 1.0, 4.0]
+SHARD_COUNTS = (1, 4, 16)
+POLICIES = (("bsp", {}),
+            ("ssp", {"staleness": 3}),
+            ("dssp", {"s_lower": 3, "s_upper": 15}))
+
+
+def sharded_comparison(rows: List[str], max_pushes: int = 2000) -> str:
+    """CSV rows + compare() table for the shards x policies grid."""
+    aggregates: List[RunMetrics] = []
+    for name, kw in POLICIES:
+        for s in SHARD_COUNTS:
+            sim = run_sharded_policy(
+                make_policy_factory(name, n_workers=len(SPEEDS), **kw),
+                SPEEDS, s, max_pushes=max_pushes)
+            m = sim.metrics
+            aggregates.append(m)
+            per_shard_max = max(sim.max_staleness_per_shard())
+            rows.append(
+                f"sharded_ps_{name}_S{s},0,"
+                f"vthroughput={m.throughput:.3f}"
+                f";wait={m.total_wait:.1f}"
+                f";mean_stale={m.mean_staleness:.2f}"
+                f";max_stale_any_shard={per_shard_max}")
+    return compare(aggregates)
+
+
+def hot_shard_sweep(rows: List[str], max_pushes: int = 1000) -> None:
+    """Skewed shard load: shard 0 costs 0.2 virtual seconds per visit."""
+    for name, kw in POLICIES:
+        for s in (4, 16):
+            sim = run_sharded_policy(
+                make_policy_factory(name, n_workers=len(SPEEDS), **kw),
+                SPEEDS, s, max_pushes=max_pushes,
+                shard_service_fn=hot_shard_service(0, 0.2))
+            m = sim.metrics
+            rows.append(
+                f"sharded_ps_hot0_{name}_S{s},0,"
+                f"vthroughput={m.throughput:.3f}"
+                f";wait={m.total_wait:.1f}"
+                f";max_stale_any_shard={max(sim.max_staleness_per_shard())}")

@@ -7,17 +7,32 @@ differs.  Reported: updates applied, waiting time, staleness profile,
 final loss, plus the virtual-time Table-I composition.
 
 Run:  PYTHONPATH=src python examples/heterogeneous_ps.py
+      PYTHONPATH=src python examples/heterogeneous_ps.py --ps-shards 4
+
+With ``--ps-shards N > 1`` the same experiment runs through the
+partitioned ``ShardedParameterServer``: per-shard locks/versions and
+per-shard DSSP gating, so pushes to different shards proceed
+concurrently (ps/sharded/).
 """
+
+import argparse
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.policies import make_policy
+from repro.core.policies import make_policy, make_policy_factory
 from repro.ps.metrics import compare
 from repro.ps.server import ParameterServer, ServerOptimizer
+from repro.ps.sharded import ShardedParameterServer, run_sharded_policy
 from repro.ps.simulator import run_policy
 from repro.ps.worker import PSWorker, run_cluster
+
+
+# one grid for the threaded AND virtual-time views — keep in lockstep
+POLICIES = (("bsp", {}), ("asp", {}),
+            ("ssp", dict(staleness=3)),
+            ("dssp", dict(s_lower=3, s_upper=15)))
 
 
 def make_problem(seed=0, dim=16, n=2048, classes=4):
@@ -29,6 +44,15 @@ def make_problem(seed=0, dim=16, n=2048, classes=4):
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--ps-shards", type=int, default=1, metavar="N",
+                    help="partition the weights across N server shards "
+                         "(1 = the monolithic server)")
+    ap.add_argument("--ps-apply", default="tree",
+                    choices=["tree", "fused"])
+    args = ap.parse_args()
+    n_shards = max(1, args.ps_shards)
+
     x, y, classes = make_problem()
 
     def loss_fn(params, batch):
@@ -49,15 +73,22 @@ def main() -> None:
             yield sx[i], sy[i]
 
     speeds = [1.0, 1.0, 1.0, 4.0]
-    print(f"4 workers, speed factors {speeds}, 80 iterations each\n")
+    print(f"4 workers, speed factors {speeds}, 80 iterations each, "
+          f"{n_shards} server shard(s)\n")
     runs = []
-    for name, kw in (("bsp", {}), ("asp", {}),
-                     ("ssp", dict(staleness=3)),
-                     ("dssp", dict(s_lower=3, s_upper=15))):
+    shard_runs = []
+    for name, kw in POLICIES:
         params = {"w": jnp.zeros((x.shape[1], classes)),
                   "b": jnp.zeros((classes,))}
-        server = ParameterServer(params, make_policy(name, n_workers=4, **kw),
-                                 ServerOptimizer(lr=0.3), 4)
+        if n_shards > 1:
+            server = ShardedParameterServer(
+                params, make_policy_factory(name, n_workers=4, **kw),
+                lambda: ServerOptimizer(lr=0.3), 4, n_shards,
+                apply_mode=args.ps_apply)
+        else:
+            server = ParameterServer(
+                params, make_policy(name, n_workers=4, **kw),
+                ServerOptimizer(lr=0.3), 4)
         workers = [PSWorker(w, server, step, batches(w), 80,
                             speed_factor=speeds[w])
                    for w in range(4)]
@@ -67,14 +98,24 @@ def main() -> None:
         acc = float((np.argmax(logits, -1) == y).mean())
         server.metrics.policy += f"  acc={acc:.3f}"
         runs.append(server.metrics)
+        if n_shards > 1:
+            shard_runs.append((name, server.shard_metrics()))
     print(compare(runs))
+    if shard_runs:
+        print("\nPer-shard view (threaded):")
+        for name, sms in shard_runs:
+            print(compare(sms))
 
     print("\nVirtual-time view (same speeds, 2000 pushes):")
-    vruns = [run_policy(make_policy(n, n_workers=4, **kw), speeds,
-                        max_pushes=2000)
-             for n, kw in (("bsp", {}), ("asp", {}),
-                           ("ssp", dict(staleness=3)),
-                           ("dssp", dict(s_lower=3, s_upper=15)))]
+    if n_shards > 1:
+        vruns = [run_sharded_policy(
+                     make_policy_factory(n, n_workers=4, **kw), speeds,
+                     n_shards, max_pushes=2000).metrics
+                 for n, kw in POLICIES]
+    else:
+        vruns = [run_policy(make_policy(n, n_workers=4, **kw), speeds,
+                            max_pushes=2000)
+                 for n, kw in POLICIES]
     print(compare(vruns))
     print("\nReading: with a PERSISTENT straggler the steady-state rate "
           "of every bounded\nscheme converges to the straggler's (BSP ~ "

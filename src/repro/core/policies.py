@@ -29,7 +29,7 @@ the controller's predicted minimum-wait boundary.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Callable, Dict, Optional
 
 from repro.core.controller import SynchronizationController
 from repro.core.staleness import StalenessTracker, dssp_effective_bound
@@ -234,3 +234,19 @@ def make_policy(name: str, *, n_workers: int = 0, staleness: int = 3,
     if name in ("backup", "bsp+backup"):
         return BackupWorkersBSP(n_workers, backups)
     raise ValueError(f"unknown sync policy {name!r}")
+
+
+def make_policy_factory(name: str, **kw) -> Callable[[], SyncPolicy]:
+    """Zero-arg factory of *fresh, independent* policy instances.
+
+    Policies are stateful (credits, controller interval tables, backup
+    rounds), so anything that runs several gates concurrently — one per
+    parameter-server shard in the ``sharded`` gating mode — must construct
+    one instance per gate: each shard's DSSP Algorithm-2 controller then
+    reads its own per-shard interval table instead of a shared one.
+    """
+    def factory() -> SyncPolicy:
+        return make_policy(name, **kw)
+
+    factory.__name__ = f"policy_factory[{name}]"
+    return factory

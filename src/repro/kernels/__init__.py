@@ -4,13 +4,17 @@ mode on CPU against the ref.py jnp oracles; native lowering on TPU).
   flash_attention  causal / sliding-window / GQA, online softmax in VMEM
   rmsnorm          fused single-pass RMSNorm
   fused_update     DSSP delayed-gradient apply + momentum in one HBM pass
+  fused_update_shard  same update over a whole PS shard's packed leaf list
+                      (one pallas_call per shard instead of per leaf)
 
 Use via repro.kernels.ops (jit wrappers + custom_vjp).
 """
 
 from repro.kernels import ops, ref
 from repro.kernels.flash_attention import flash_attention_fwd
-from repro.kernels.fused_update import fused_update
+from repro.kernels.fused_update import (fused_update, fused_update_shard,
+                                        pack_shard, unpack_shard)
 from repro.kernels.rmsnorm import rmsnorm
 
-__all__ = ["ops", "ref", "flash_attention_fwd", "fused_update", "rmsnorm"]
+__all__ = ["ops", "ref", "flash_attention_fwd", "fused_update",
+           "fused_update_shard", "pack_shard", "unpack_shard", "rmsnorm"]

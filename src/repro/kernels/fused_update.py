@@ -20,7 +20,8 @@ Tiles: (8, 512) f32 — lane-dim multiple of 128, 16 KiB per operand tile.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+import math
+from typing import List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -79,3 +80,63 @@ def fused_update(p: jax.Array, m: jax.Array, g: jax.Array, *,
     po = po.reshape(-1)[:n].reshape(orig_shape)
     mo = mo.reshape(-1)[:n].reshape(orig_shape)
     return po, mo
+
+
+# ---------------------------------------------------------- shard batching
+# A parameter-server shard holds many small leaves (slices of the model's
+# pytree).  Calling ``fused_update`` per leaf issues one ``pallas_call``
+# per leaf — grid-launch overhead dominates for the tail of small tensors.
+# Instead the shard's leaves are packed once into a single (rows, 512)
+# buffer and the WHOLE shard updates in one kernel launch; momentum can
+# stay resident in the packed layout between steps (see
+# ``repro.ps.sharded.server``).
+
+def pack_shard(leaves: Sequence[jax.Array],
+               dtype=jnp.float32) -> jax.Array:
+    """Flatten + concatenate leaves into one lane-aligned (rows, 512) buffer."""
+    if not leaves:
+        return jnp.zeros((0, _LANES), dtype)
+    flats = [x.reshape(-1).astype(dtype) for x in leaves]
+    flat = flats[0] if len(flats) == 1 else jnp.concatenate(flats)
+    pad = (-flat.size) % _LANES
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, _LANES)
+
+
+def unpack_shard(buf: jax.Array, shapes: Sequence[Tuple[int, ...]],
+                 dtypes: Sequence) -> List[jax.Array]:
+    """Inverse of ``pack_shard`` given the original leaf shapes/dtypes."""
+    flat = buf.reshape(-1)
+    out: List[jax.Array] = []
+    off = 0
+    for shape, dt in zip(shapes, dtypes):
+        size = math.prod(shape) if shape else 1
+        out.append(flat[off:off + size].reshape(shape).astype(dt))
+        off += size
+    return out
+
+
+def fused_update_shard(ps: Sequence[jax.Array], ms: Sequence[jax.Array],
+                       gs: Sequence[jax.Array], *, lr, beta: float = 0.9,
+                       scale=1.0, interpret: bool = False,
+                       ) -> Tuple[List[jax.Array], List[jax.Array]]:
+    """One fused momentum step over a whole shard's leaf list.
+
+    Packs (p, m, g) into three (rows, 512) buffers, runs a single
+    ``pallas_call`` over the concatenation, and unpacks back to the input
+    shapes/dtypes.  Numerically identical to per-leaf ``fused_update``
+    (the kernel is elementwise).
+    """
+    if len(ps) != len(ms) or len(ps) != len(gs):
+        raise ValueError("p/m/g leaf lists must align")
+    if not ps:
+        return [], []
+    shapes = [p.shape for p in ps]
+    p_dtypes = [p.dtype for p in ps]
+    m_dtypes = [m.dtype for m in ms]
+    po, mo = fused_update(pack_shard(ps), pack_shard(ms), pack_shard(gs),
+                          lr=lr, beta=beta, scale=scale,
+                          interpret=interpret)
+    return (unpack_shard(po, shapes, p_dtypes),
+            unpack_shard(mo, shapes, m_dtypes))

@@ -64,6 +64,13 @@ def fused_update(p: jax.Array, m: jax.Array, g: jax.Array, *,
                             interpret=not on_tpu())
 
 
+def fused_update_shard(ps, ms, gs, *, lr, beta: float = 0.9, scale=1.0):
+    """Batched shard apply: all leaves through ONE pallas_call (packed
+    (rows, 512) layout) — the sharded PS's per-shard update kernel."""
+    return _fu.fused_update_shard(ps, ms, gs, lr=lr, beta=beta, scale=scale,
+                                  interpret=not on_tpu())
+
+
 def fused_update_tree(params, momenta, grads, *, lr, beta: float = 0.9,
                       scale=1.0):
     """Tree-mapped fused update (the DSSP pipeline's apply phase)."""

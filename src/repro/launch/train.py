@@ -90,7 +90,10 @@ class Trainer:
             self.pipeline = dssp_spmd.init_pipeline(zero, s_upper + 1)
         else:
             self.pipeline = ()
-        self.err_state = self.compressor.init_error(self.params)
+        # identity compressor: keep the jitted step's error operand empty
+        # instead of threading a dead params-sized buffer through it
+        self.err_state = (self.compressor.init_error(self.params)
+                          if self.compressor.name != "none" else ())
         self.step_idx = 0
 
         self.ckpt = (CheckpointManager(checkpoint_dir, keep=keep)
@@ -184,6 +187,69 @@ class Trainer:
                    "data_seed": self.data_cfg.seed})
 
 
+# ----------------------------------------------------- sharded-PS path
+def train_ps(cfg, data_cfg: DataConfig, *, sync: str, n_steps: int,
+             lr: float, n_shards: int, n_workers: int = 4,
+             s_lower: int = 0, s_upper: int = 3,
+             compressor: str = "none", apply_mode: str = "tree",
+             gating: str = "sharded", straggler: float = 1.0,
+             verbose: bool = False):
+    """Real-training path through the sharded threaded parameter server.
+
+    ``n_workers`` threads run the same jitted value_and_grad step on
+    worker-seeded shards of the synthetic stream and push raw gradients
+    into a ``ShardedParameterServer`` (``--ps-shards N``); per-shard wire
+    compression and the batched fused apply are selectable.  This is the
+    Algorithm-1 execution model (the SPMD ``Trainer`` is the
+    delayed-gradient emulation of it).
+    """
+    from repro.core.policies import make_policy_factory
+    from repro.data.synthetic import batches as data_batches
+    from repro.ps.server import ServerOptimizer
+    from repro.ps.sharded import ShardedParameterServer
+    from repro.ps.worker import PSWorker, run_cluster
+
+    loss_fn = registry.loss_fn(cfg)
+    params = registry.init_params(cfg, jax.random.PRNGKey(0))
+
+    @jax.jit
+    def step(p, batch):
+        (loss, _), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(p, batch)
+        return grads, {"loss": loss}
+
+    def worker_batches(w: int):
+        wcfg = dataclasses.replace(data_cfg, seed=data_cfg.seed + 1 + w)
+        for b in data_batches(cfg, wcfg):
+            yield {k: jnp.asarray(v) for k, v in b.items()}
+
+    policy_factory = make_policy_factory(
+        sync, n_workers=n_workers, staleness=max(s_lower, 1),
+        s_lower=s_lower, s_upper=s_upper)
+    server = ShardedParameterServer(
+        params, policy_factory, lambda: ServerOptimizer(lr=lr),
+        n_workers, n_shards, gating=gating, apply_mode=apply_mode,
+        compressor=make_compressor(compressor))
+    if verbose:
+        print(server.plan.describe())
+    iters = max(1, n_steps // n_workers)
+    workers = [PSWorker(w, server, step, worker_batches(w), iters,
+                        speed_factor=(straggler if w == n_workers - 1
+                                      else 1.0),
+                        loss_from_aux=lambda a: float(a["loss"]))
+               for w in range(n_workers)]
+    run_cluster(server, workers, timeout=1200.0)
+    if verbose:
+        m = server.metrics
+        print(f"pushes={m.total_pushes} applied_shard_updates="
+              f"{server.version} wait_s={m.total_wait:.2f} "
+              f"max_stale={m.max_staleness}")
+        for sm in server.shard_metrics():
+            print(f"  {sm.policy}: max_stale={sm.max_staleness} "
+                  f"wait_s={sm.total_wait:.2f}")
+    return server
+
+
 # -------------------------------------------------------------------- CLI
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
@@ -192,7 +258,8 @@ def main() -> None:
                     help="reduced config (full configs need a TPU mesh)")
     ap.add_argument("--full", dest="smoke", action="store_false")
     ap.add_argument("--sync", default="dssp",
-                    choices=["bsp", "ssp", "dssp"])
+                    choices=["bsp", "ssp", "dssp", "asp"],
+                    help="asp is valid only with --ps-shards (PS layer)")
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=64)
@@ -205,11 +272,52 @@ def main() -> None:
     ap.add_argument("--checkpoint-dir", default="")
     ap.add_argument("--save-every", type=int, default=100)
     ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--ps-shards", type=int, default=0, metavar="N",
+                    help="train through a sharded threaded parameter "
+                         "server with N shards (0 = SPMD pipeline path)")
+    ap.add_argument("--ps-workers", type=int, default=4)
+    ap.add_argument("--ps-apply", default="tree", choices=["tree", "fused"],
+                    help="per-shard apply: tree_map or one fused Pallas "
+                         "launch over the packed shard (fused runs in "
+                         "interpret mode on CPU — correctness validation "
+                         "only; native speed needs TPU)")
+    ap.add_argument("--ps-gating", default="sharded",
+                    choices=["sharded", "global"])
+    ap.add_argument("--ps-straggler", type=float, default=1.0,
+                    help="speed factor of the last PS worker (>1 = slower)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
                           global_batch=args.batch)
+
+    if args.ps_shards >= 1:
+        ignored = [flag for flag, on in (
+            ("--checkpoint-dir", bool(args.checkpoint_dir)),
+            ("--resume", args.resume),
+            ("--optimizer", args.optimizer is not None)) if on]
+        if ignored:
+            print(f"warning: {', '.join(ignored)} only apply to the SPMD "
+                  "path and are ignored with --ps-shards (the PS server "
+                  "optimizer is SGD/momentum; checkpointing the sharded "
+                  "store is future work)")
+        print(f"arch={cfg.name} sync={args.sync} "
+              f"ps_shards={args.ps_shards} workers={args.ps_workers} "
+              f"params={registry.count_params(cfg):,}")
+        server = train_ps(cfg, data_cfg, sync=args.sync,
+                          n_steps=args.steps, lr=args.lr,
+                          n_shards=args.ps_shards,
+                          n_workers=args.ps_workers,
+                          s_lower=args.s_lower, s_upper=args.s_upper,
+                          compressor=args.compress,
+                          apply_mode=args.ps_apply,
+                          gating=args.ps_gating,
+                          straggler=args.ps_straggler, verbose=True)
+        losses = [l for _, _, l in server.metrics.loss_trajectory]
+        if losses:
+            print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f})")
+        return
+
     trainer = Trainer(cfg, data_cfg, sync=args.sync, lr=args.lr,
                       optimizer=args.optimizer,
                       s_lower=args.s_lower, s_upper=args.s_upper,

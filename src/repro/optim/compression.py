@@ -40,6 +40,24 @@ def _zeros_like_f32(tree: Tree) -> Tree:
         lambda x: jnp.zeros(x.shape, jnp.float32), tree)
 
 
+def _transpose_apply(one: Callable) -> Callable:
+    """Lift a per-leaf ``(g, e) -> (g', e')`` into a tree apply.
+
+    ``tree_map(one, ...)`` yields a grads-shaped tree of (g', e') pairs;
+    ``tree_transpose`` flips it into the ((g' tree), (e' tree)) pair the
+    Compressor contract wants — structurally, instead of the fragile
+    double tree_map with an ``is_leaf`` tuple sniff.
+    """
+    inner = jax.tree_util.tree_structure((0, 0))
+
+    def apply(grads, err):
+        outer = jax.tree_util.tree_structure(grads)
+        outs = jax.tree_util.tree_map(one, grads, err)
+        return jax.tree_util.tree_transpose(outer, inner, outs)
+
+    return apply
+
+
 def int8_compressor() -> Compressor:
     def one(g: jax.Array, e: jax.Array) -> Tuple[jax.Array, jax.Array]:
         gf = g.astype(jnp.float32) + e
@@ -48,15 +66,7 @@ def int8_compressor() -> Compressor:
         deq = q.astype(jnp.float32) * scale
         return deq.astype(g.dtype), gf - deq
 
-    def apply(grads, err):
-        outs = jax.tree_util.tree_map(one, grads, err)
-        new_g = jax.tree_util.tree_map(lambda o: o[0], outs,
-                                       is_leaf=lambda x: isinstance(x, tuple))
-        new_e = jax.tree_util.tree_map(lambda o: o[1], outs,
-                                       is_leaf=lambda x: isinstance(x, tuple))
-        return new_g, new_e
-
-    return Compressor("int8", apply, _zeros_like_f32, 1.0)
+    return Compressor("int8", _transpose_apply(one), _zeros_like_f32, 1.0)
 
 
 def topk_compressor(fraction: float = 0.05) -> Compressor:
@@ -72,25 +82,20 @@ def topk_compressor(fraction: float = 0.05) -> Compressor:
         kept = gf * mask
         return kept.astype(g.dtype), gf - kept
 
-    def apply(grads, err):
-        outs = jax.tree_util.tree_map(one, grads, err)
-        new_g = jax.tree_util.tree_map(lambda o: o[0], outs,
-                                       is_leaf=lambda x: isinstance(x, tuple))
-        new_e = jax.tree_util.tree_map(lambda o: o[1], outs,
-                                       is_leaf=lambda x: isinstance(x, tuple))
-        return new_g, new_e
-
     # indices (4B) + values (2B) per kept value, k fraction of tensor
-    return Compressor(f"topk({fraction})", apply, _zeros_like_f32,
-                      6.0 * fraction)
+    return Compressor(f"topk({fraction})", _transpose_apply(one),
+                      _zeros_like_f32, 6.0 * fraction)
 
 
 def make_compressor(name: str, **kw) -> Compressor:
     if name in ("none", "", None):
+        # Identity — but with a *real* grads-shaped error state so code
+        # that round-trips (grads, err) through any compressor works
+        # unchanged when compression is switched off.
         ident = Compressor(
             "none",
             lambda g, e: (g, e),
-            lambda tree: (),
+            _zeros_like_f32,
             2.0)
         return ident
     if name == "int8":

@@ -1,7 +1,15 @@
-"""Parameter-server substrate: discrete-event simulator + threaded runtime."""
+"""Parameter-server substrate: discrete-event simulator + threaded runtime
+(monolithic in ``server.py``/``simulator.py``, partitioned in ``sharded/``)."""
 
 from repro.ps.metrics import RunMetrics, compare
 from repro.ps.server import ParameterServer, ServerOptimizer
+from repro.ps.sharded import (
+    ShardedParameterServer,
+    ShardedPSSimulator,
+    ShardPlan,
+    build_shard_plan,
+    run_sharded_policy,
+)
 from repro.ps.simulator import (
     PSSimulator,
     constant_intervals,
@@ -16,4 +24,6 @@ __all__ = [
     "PSSimulator", "run_policy", "constant_intervals",
     "jittered_intervals", "phase_shift_intervals",
     "RunMetrics", "compare",
+    "ShardedParameterServer", "ShardedPSSimulator", "ShardPlan",
+    "build_shard_plan", "run_sharded_policy",
 ]

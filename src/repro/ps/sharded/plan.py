@@ -1,0 +1,184 @@
+"""Shard planning: partition a parameter pytree across S server shards.
+
+A ``ShardPlan`` is a static, deterministic description of which pieces of
+which pytree leaves live on which shard.  The plan format (also in
+``ps/sharded/README.md``):
+
+  * the pytree is flattened once (``jax.tree_util.tree_flatten`` order is
+    the canonical leaf numbering),
+  * every leaf is cut into one or more ``LeafSlice``s.  A slice is either
+    the *whole* leaf, or a contiguous ``[start, stop)`` range along the
+    leaf's **leading axis** (only leaves bigger than the per-shard target
+    are split, and scalars / single-row leaves are never split),
+  * slices are greedily bin-packed into ``n_shards`` size-balanced
+    ``Shard``s: largest piece first, always into the currently lightest
+    shard (ties toward the lowest shard index) — the classic LPT
+    heuristic, ≤ 4/3·OPT imbalance,
+  * within a shard, slices are kept sorted by ``(leaf, start)`` so the
+    shard's wire layout is deterministic and reproducible across runs.
+
+The plan is pure metadata: ``split`` / ``assemble`` do the actual data
+movement (slicing on push, ``jnp.concatenate`` on pull) and are each
+other's inverse for any tree matching the plan's structure.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Tree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSlice:
+    """One contiguous piece of one pytree leaf."""
+
+    leaf: int        # index into the canonical flattened-leaf list
+    start: int       # leading-axis start row (0 for whole leaves)
+    stop: int        # leading-axis stop row (shape[0], or 1 for scalars)
+    whole: bool      # the entire leaf (no slicing needed on the wire)
+    size: int        # element count of the piece
+
+
+@dataclasses.dataclass(frozen=True)
+class Shard:
+    index: int
+    slices: Tuple[LeafSlice, ...]
+    size: int        # total element count
+
+    def __len__(self) -> int:
+        return len(self.slices)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardPlan:
+    n_shards: int
+    treedef: Any
+    leaf_shapes: Tuple[Tuple[int, ...], ...]
+    shards: Tuple[Shard, ...]
+
+    # -- data movement -----------------------------------------------------
+    def split(self, tree: Tree) -> List[List[jax.Array]]:
+        """Cut ``tree`` (params or grads) into per-shard piece lists."""
+        leaves = jax.tree_util.tree_leaves(tree)
+        if len(leaves) != len(self.leaf_shapes):
+            raise ValueError(
+                f"tree has {len(leaves)} leaves, plan was built for "
+                f"{len(self.leaf_shapes)}")
+        out: List[List[jax.Array]] = []
+        for shard in self.shards:
+            pieces = []
+            for sl in shard.slices:
+                leaf = leaves[sl.leaf]
+                pieces.append(leaf if sl.whole else leaf[sl.start:sl.stop])
+            out.append(pieces)
+        return out
+
+    def shard_pieces(self, tree: Tree, shard: int) -> List[jax.Array]:
+        """``split`` restricted to one shard (what a worker pushes to it)."""
+        leaves = jax.tree_util.tree_leaves(tree)
+        return [leaves[sl.leaf] if sl.whole
+                else leaves[sl.leaf][sl.start:sl.stop]
+                for sl in self.shards[shard].slices]
+
+    def assemble(self, pieces_per_shard: Sequence[Sequence[jax.Array]]) -> Tree:
+        """Inverse of ``split``: rebuild the full pytree from shard pieces."""
+        parts: Dict[int, Dict[int, jax.Array]] = {}
+        for shard, pieces in zip(self.shards, pieces_per_shard):
+            if len(pieces) != len(shard.slices):
+                raise ValueError(
+                    f"shard {shard.index}: got {len(pieces)} pieces, "
+                    f"plan has {len(shard.slices)} slices")
+            for sl, piece in zip(shard.slices, pieces):
+                parts.setdefault(sl.leaf, {})[sl.start] = piece
+        leaves = []
+        for i, shape in enumerate(self.leaf_shapes):
+            by_start = parts.get(i)
+            if by_start is None:
+                raise ValueError(f"leaf {i} missing from shard pieces")
+            if len(by_start) == 1:
+                (leaf,) = by_start.values()
+            else:
+                leaf = jnp.concatenate(
+                    [by_start[s] for s in sorted(by_start)], axis=0)
+            leaves.append(leaf)
+        return self.treedef.unflatten(leaves)
+
+    # -- introspection -------------------------------------------------------
+    @property
+    def total_size(self) -> int:
+        return sum(s.size for s in self.shards)
+
+    def imbalance(self) -> float:
+        """max shard size / mean shard size (1.0 = perfectly balanced)."""
+        sizes = [s.size for s in self.shards]
+        mean = sum(sizes) / len(sizes)
+        return max(sizes) / mean if mean else 1.0
+
+    def describe(self) -> str:
+        lines = [f"ShardPlan: {self.n_shards} shards, "
+                 f"{len(self.leaf_shapes)} leaves, "
+                 f"{self.total_size:,} elements, "
+                 f"imbalance {self.imbalance():.3f}"]
+        for s in self.shards:
+            split = sum(1 for sl in s.slices if not sl.whole)
+            lines.append(f"  shard {s.index}: {s.size:,} elements in "
+                         f"{len(s.slices)} pieces ({split} split)")
+        return "\n".join(lines)
+
+
+def _leaf_pieces(leaf_idx: int, shape: Tuple[int, ...], target: int,
+                 split_oversized: bool) -> List[LeafSlice]:
+    size = math.prod(shape) if shape else 1
+    lead = shape[0] if shape else 1
+    row = size // lead if lead else size
+    can_split = (split_oversized and len(shape) >= 1 and lead > 1
+                 and size > target and row > 0)
+    if not can_split:
+        return [LeafSlice(leaf_idx, 0, lead, whole=True, size=size)]
+    rows_per_piece = max(1, target // row)
+    pieces = []
+    for start in range(0, lead, rows_per_piece):
+        stop = min(lead, start + rows_per_piece)
+        pieces.append(LeafSlice(leaf_idx, start, stop,
+                                whole=False, size=(stop - start) * row))
+    return pieces
+
+
+def build_shard_plan(tree: Tree, n_shards: int, *,
+                     split_oversized: bool = True) -> ShardPlan:
+    """Greedy LPT bin-packing of pytree leaves into size-balanced shards."""
+    if n_shards < 1:
+        raise ValueError("n_shards must be >= 1")
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    if not leaves:
+        raise ValueError("cannot shard an empty pytree")
+    shapes = tuple(tuple(x.shape) for x in leaves)
+    total = sum(math.prod(s) if s else 1 for s in shapes)
+    target = max(1, -(-total // n_shards))  # ceil
+
+    pieces: List[LeafSlice] = []
+    for i, shape in enumerate(shapes):
+        pieces.extend(_leaf_pieces(i, shape, target, split_oversized))
+
+    # Largest-first into the lightest shard; deterministic tie-breaks.
+    pieces.sort(key=lambda sl: (-sl.size, sl.leaf, sl.start))
+    bins: List[List[LeafSlice]] = [[] for _ in range(n_shards)]
+    sizes = [0] * n_shards
+    for sl in pieces:
+        j = min(range(n_shards), key=lambda k: (sizes[k], k))
+        bins[j].append(sl)
+        sizes[j] += sl.size
+
+    shards = tuple(
+        Shard(index=j,
+              slices=tuple(sorted(bins[j], key=lambda sl: (sl.leaf, sl.start))),
+              size=sizes[j])
+        for j in range(n_shards))
+    return ShardPlan(n_shards=n_shards, treedef=treedef,
+                     leaf_shapes=shapes, shards=shards)

@@ -1,0 +1,357 @@
+"""Sharded (partitioned) parameter server — per-shard locks and gating.
+
+The monolithic ``ParameterServer`` serializes *every* push on one lock
+and one version counter: the exact single-machine bottleneck the PS
+framework exists to avoid.  Here the weight pytree is partitioned by a
+``ShardPlan`` into S size-balanced shards, and every shard owns its own
+
+  * lock (condition variable)      — pushes to distinct shards overlap,
+  * version counter                — per-shard applied-update count,
+  * ``ServerOptimizer`` state      — momentum lives with its slice,
+  * ``SyncPolicy`` + ``StalenessTracker`` — per-shard Algorithm-1 gating,
+  * ``RunMetrics``                 — per-shard staleness/wait accounting.
+
+Gating modes
+------------
+``sharded`` (default)  every shard gates independently with its own
+    policy instance; a DSSP shard's Algorithm-2 controller reads that
+    shard's interval table (table A), so skewed shard load produces
+    per-shard credit schedules.  A worker's push returns when the LAST
+    shard releases it.
+``global``  one policy/tracker gates the worker exactly once per push
+    (the monolithic semantics) while the weight store stays partitioned —
+    the ablation that isolates lock-granularity wins from gating wins.
+
+Wire compression (``optim/compression.py``) runs per shard with
+per-(worker, shard) error-feedback state, emulating worker-side
+compression of each shard RPC.
+
+The apply path is pluggable: ``apply_mode='tree'`` steps the shard's
+piece list through its ``ServerOptimizer`` (bitwise-identical to the
+monolithic server), ``apply_mode='fused'`` keeps params+momentum packed
+in one lane-aligned (rows, 512) buffer and folds the whole shard through
+a single Pallas ``fused_update`` launch per push.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policies import Decision, SyncPolicy
+from repro.core.staleness import StalenessTracker
+from repro.optim.compression import Compressor
+from repro.ps.metrics import RunMetrics
+from repro.ps.server import ServerOptimizer
+from repro.ps.sharded.plan import ShardPlan, build_shard_plan
+
+Params = Any
+Grads = Any
+
+
+class _ShardState:
+    """Everything one shard owns.  All mutation under ``self.cond``."""
+
+    def __init__(self, index: int, pieces: List[jax.Array],
+                 policy: SyncPolicy, optimizer: ServerOptimizer,
+                 workers: Sequence[int], apply_mode: str):
+        self.index = index
+        self.cond = threading.Condition()
+        self.policy = policy
+        self.optimizer = optimizer
+        self.tracker = StalenessTracker(workers)
+        self.metrics = RunMetrics(policy=f"{policy.name}/shard{index}",
+                                  n_workers=len(list(workers)))
+        self.version = 0
+        self.apply_mode = apply_mode
+        self.shapes = [p.shape for p in pieces]
+        self.dtypes = [p.dtype for p in pieces]
+        if apply_mode == "fused":
+            # Kernel imports stay local to the fused path so plain
+            # `import repro.ps` never pulls in the Pallas kernel stack.
+            from repro.kernels.fused_update import pack_shard
+            # Params + momentum stay resident in the packed kernel layout;
+            # unpacked pieces are a cache rebuilt at most once per version.
+            self._packed_p = pack_shard(pieces)
+            self._packed_m = jnp.zeros_like(self._packed_p)
+            self._pieces: Optional[List[jax.Array]] = list(pieces)
+        else:
+            self._pieces = list(pieces)
+
+    # -- weight access (call under self.cond) -------------------------------
+    def pieces(self) -> List[jax.Array]:
+        if self._pieces is None:  # fused mode, invalidated by an apply
+            from repro.kernels.fused_update import unpack_shard
+            self._pieces = unpack_shard(self._packed_p, self.shapes,
+                                        self.dtypes)
+        return self._pieces
+
+    def apply(self, grad_pieces: List[jax.Array], staleness: int) -> None:
+        if not grad_pieces:
+            # Empty shard (more shards than pieces): the gate/version
+            # bookkeeping stays uniform, there is just nothing to fold in
+            # (a zero-row pallas_call would reject its (8, 512) tile).
+            self.version += 1
+            return
+        if self.apply_mode == "fused":
+            from repro.kernels import ops as kops
+            from repro.kernels.fused_update import pack_shard
+            opt = self.optimizer
+            scale = (1.0 / (1.0 + staleness)
+                     if opt.staleness_damping else 1.0)
+            self._packed_p, self._packed_m = kops.fused_update(
+                self._packed_p, self._packed_m, pack_shard(grad_pieces),
+                lr=opt.lr, beta=opt.momentum, scale=scale)
+            self._pieces = None
+        else:
+            self._pieces = self.optimizer.step(self.pieces(), grad_pieces,
+                                               staleness)
+        self.version += 1
+
+
+class ShardedParameterServer:
+    """Partitioned weight store + per-shard Algorithm-1 gating.
+
+    Duck-compatible with ``ParameterServer`` for workers (``pull``,
+    ``push``, ``record_loss``, ``add_worker``, ``remove_worker``,
+    ``stop``, ``stopped``, ``params``, ``metrics``), so ``PSWorker`` and
+    ``run_cluster`` drive it unchanged.
+    """
+
+    def __init__(self, params: Params, policy_factory: Callable[[], SyncPolicy],
+                 optimizer_factory: Callable[[], ServerOptimizer],
+                 n_workers: int, n_shards: int, *,
+                 split_oversized: bool = True,
+                 gating: str = "sharded",
+                 apply_mode: str = "tree",
+                 compressor: Optional[Compressor] = None,
+                 clock: Callable[[], float] = time.monotonic):
+        if gating not in ("sharded", "global"):
+            raise ValueError(f"unknown gating mode {gating!r}")
+        if apply_mode not in ("tree", "fused"):
+            raise ValueError(f"unknown apply mode {apply_mode!r}")
+        self.plan: ShardPlan = build_shard_plan(
+            params, n_shards, split_oversized=split_oversized)
+        self.gating = gating
+        self.n_shards = n_shards
+        workers = range(n_workers)
+        pieces = self.plan.split(params)
+        self.shards: List[_ShardState] = [
+            _ShardState(j, pieces[j], policy_factory(), optimizer_factory(),
+                        workers, apply_mode)
+            for j in range(n_shards)]
+        if gating == "global":
+            self._gate_policy = policy_factory()
+            self._gate_tracker = StalenessTracker(workers)
+            self._gate_cond = threading.Condition()
+        self.metrics = RunMetrics(
+            policy=f"{self.shards[0].policy.name} xS{n_shards}[{gating}]",
+            n_workers=n_workers)
+        self._metrics_lock = threading.Lock()
+        self.compressor = (compressor
+                           if compressor is not None
+                           and compressor.name != "none" else None)
+        self._err: Dict[int, List[Any]] = {}   # worker -> per-shard err state
+        self._clock = clock
+        self._t0 = clock()
+        self.stopped = False
+
+    # -- worker API ----------------------------------------------------------
+    def pull(self, worker: int) -> Params:
+        """Reassemble the full pytree from per-shard snapshots.
+
+        Each shard is snapshotted under its OWN lock; shards mutated
+        concurrently with the pull may differ in version — exactly the
+        per-shard consistency a partitioned PS offers (each shard's slice
+        is internally consistent; cross-shard skew is bounded by the
+        gating policies).
+        """
+        snaps = []
+        for st in self.shards:
+            with st.cond:
+                snaps.append(list(st.pieces()))
+        return self.plan.assemble(snaps)
+
+    def push(self, worker: int, grads: Grads) -> None:
+        """Split grads by the plan and push shard-by-shard.
+
+        Every worker visits shards in the SAME canonical order 0..S-1:
+        with blocking policies a per-worker rotated order deadlocks
+        (worker A blocked at shard 0's barrier while worker B, whose push
+        would release it, is blocked at shard 1's — a circular wait).  A
+        total order keeps the wait-for graph acyclic while pushes to
+        distinct shards still overlap in pipeline fashion.  Blocks until
+        every shard's policy has released the worker (the ``global`` mode
+        gates once, after all applies).
+        """
+        pieces_per_shard = self.plan.split(grads)
+        if self.compressor is not None:
+            pieces_per_shard = self._compress(worker, pieces_per_shard)
+        order = range(self.n_shards)
+        now = self._clock() - self._t0
+        # Global mode: the gate decides FIRST (monolithic order — decide,
+        # apply, then maybe block), and its decision governs every shard's
+        # apply so update-dropping policies (backup workers) and credit
+        # accounting match the monolithic server exactly.
+        gate_dec = gate_stale = None
+        if self.gating == "global":
+            gate_dec, gate_stale = self._gate_decide(worker)
+        max_stale, any_applied, any_credit = 0, False, False
+        total_wait = 0.0
+        for j in order:
+            stale, applied, credit, waited = self._push_shard(
+                j, worker, pieces_per_shard[j], gate_dec, gate_stale)
+            max_stale = max(max_stale, stale)
+            any_applied = any_applied or applied
+            any_credit = any_credit or credit
+            total_wait += waited
+        if gate_dec is not None:
+            total_wait += self._gate_wait(worker, gate_dec)
+            max_stale = gate_stale
+        with self._metrics_lock:
+            self.metrics.record_push(worker, max_stale, applied=any_applied,
+                                     credit=any_credit, time=now)
+            if total_wait > 0:
+                self.metrics.record_wait(worker, total_wait)
+
+    def _push_shard(self, j: int, worker: int, grad_pieces: List[jax.Array],
+                    gate_dec: Optional[Decision] = None,
+                    gate_stale: Optional[int] = None):
+        st = self.shards[j]
+        with st.cond:
+            now = self._clock() - self._t0
+            rec = st.tracker.record_push(worker, now)
+            if gate_dec is None:
+                dec = st.policy.on_push(st.tracker, worker, now)
+                apply_staleness = rec.staleness
+            else:
+                # Global gating: apply iff the gate said so, with the
+                # gate's staleness (what the monolithic optimizer saw);
+                # release decision belongs to the gate, not the shard.
+                dec = Decision(apply_update=gate_dec.apply_update,
+                               release_now=True,
+                               credit_used=gate_dec.credit_used)
+                apply_staleness = gate_stale
+            if dec.apply_update:
+                st.apply(grad_pieces, apply_staleness)
+            st.metrics.record_push(worker, rec.staleness,
+                                   applied=dec.apply_update,
+                                   credit=dec.credit_used, time=now)
+            st.cond.notify_all()
+            waited = 0.0
+            if not dec.release_now:
+                arrival = self._clock()
+                while (not self.stopped
+                       and not st.policy.may_release(st.tracker, worker)):
+                    st.cond.wait(timeout=0.5)
+                waited = self._clock() - arrival
+                rec.waited = waited
+                st.metrics.record_wait(worker, waited)
+            return rec.staleness, dec.apply_update, dec.credit_used, waited
+
+    def _gate_decide(self, worker: int):
+        """Global-gate bookkeeping + decision (no blocking yet)."""
+        with self._gate_cond:
+            now = self._clock() - self._t0
+            rec = self._gate_tracker.record_push(worker, now)
+            dec = self._gate_policy.on_push(self._gate_tracker, worker, now)
+            self._gate_cond.notify_all()
+            return dec, rec.staleness
+
+    def _gate_wait(self, worker: int, dec: Decision) -> float:
+        if dec.release_now:
+            return 0.0
+        with self._gate_cond:
+            arrival = self._clock()
+            while (not self.stopped
+                   and not self._gate_policy.may_release(
+                       self._gate_tracker, worker)):
+                self._gate_cond.wait(timeout=0.5)
+            return self._clock() - arrival
+
+    def _compress(self, worker: int,
+                  pieces_per_shard: List[List[jax.Array]]):
+        err = self._err.get(worker)
+        if err is None:
+            err = [self.compressor.init_error(p) for p in pieces_per_shard]
+        out = []
+        for j, pieces in enumerate(pieces_per_shard):
+            compressed, err[j] = self.compressor.apply(pieces, err[j])
+            out.append(compressed)
+        self._err[worker] = err
+        return out
+
+    def record_loss(self, step: int, loss: float) -> None:
+        with self._metrics_lock:
+            now = self._clock() - self._t0
+            self.metrics.loss_trajectory.append((now, self.version,
+                                                 float(loss)))
+
+    # -- elastic membership ----------------------------------------------------
+    def add_worker(self, worker: int) -> None:
+        for st in self.shards:
+            with st.cond:
+                st.tracker.add_worker(worker)
+                st.metrics.n_workers = len(st.tracker.workers)
+                st.cond.notify_all()
+        if self.gating == "global":
+            with self._gate_cond:
+                self._gate_tracker.add_worker(worker)
+                self._gate_cond.notify_all()
+        with self._metrics_lock:
+            self.metrics.n_workers = len(self.shards[0].tracker.workers)
+        self._err.pop(worker, None)
+
+    def remove_worker(self, worker: int) -> None:
+        """Departure must not stall ANY shard's barrier: drop the worker
+        from every shard tracker, waking that shard's waiters."""
+        for st in self.shards:
+            with st.cond:
+                st.tracker.remove_worker(worker)
+                st.metrics.n_workers = len(st.tracker.workers)
+                st.cond.notify_all()
+        if self.gating == "global":
+            with self._gate_cond:
+                self._gate_tracker.remove_worker(worker)
+                self._gate_cond.notify_all()
+        with self._metrics_lock:
+            self.metrics.n_workers = len(self.shards[0].tracker.workers)
+        self._err.pop(worker, None)
+
+    def stop(self) -> None:
+        self.stopped = True
+        for st in self.shards:
+            with st.cond:
+                st.cond.notify_all()
+        if self.gating == "global":
+            with self._gate_cond:
+                self._gate_cond.notify_all()
+
+    # -- inspection ------------------------------------------------------------
+    @property
+    def params(self) -> Params:
+        return self.pull(-1)
+
+    @property
+    def version(self) -> int:
+        """Total applied shard-updates.  At S=1 this equals the monolithic
+        server's version (one applied update per released push)."""
+        return sum(st.version for st in self.shards)
+
+    def shard_versions(self) -> List[int]:
+        return [st.version for st in self.shards]
+
+    def staleness_profile(self) -> Dict[int, Dict[int, int]]:
+        """shard -> worker -> current gap."""
+        out = {}
+        for st in self.shards:
+            with st.cond:
+                out[st.index] = st.tracker.staleness_profile()
+        return out
+
+    def shard_metrics(self) -> List[RunMetrics]:
+        return [st.metrics for st in self.shards]

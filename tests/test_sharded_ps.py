@@ -1,0 +1,447 @@
+"""Sharded parameter server: plan, server, simulator, elasticity.
+
+Covers the subsystem's contract:
+  * ShardPlan split/assemble round-trip, balance, oversized-leaf splitting,
+  * S=1 behavior-equivalence with the monolithic ParameterServer /
+    PSSimulator (same applied-update count, same params, same metrics),
+  * per-shard staleness stays within the policy bound on EVERY shard,
+  * pushes to distinct shards genuinely overlap (no global lock),
+  * elastic membership (join/leave mid-run) never deadlocks any shard's
+    barrier and keeps per-shard staleness profiles consistent,
+  * the batched fused apply matches the tree apply,
+  * per-shard wire compression round-trips through the identity
+    compressor (the make_compressor("none") error-state fix).
+"""
+
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.policies import make_policy, make_policy_factory
+from repro.optim.compression import make_compressor
+from repro.ps.server import ParameterServer, ServerOptimizer
+from repro.ps.sharded import (ShardedParameterServer, build_shard_plan,
+                              hot_shard_service, run_sharded_policy)
+from repro.ps.simulator import run_policy
+from repro.ps.worker import PSWorker, run_cluster
+
+
+def _tree(seed=0, shapes=((40, 16), (16,), (8, 8), ())):
+    rng = np.random.RandomState(seed)
+    return {f"p{i}": jnp.asarray(np.asarray(rng.randn(*s), np.float32))
+            for i, s in enumerate(shapes)}
+
+
+def _grads_like(tree, seed):
+    rng = np.random.RandomState(seed)
+    return jax.tree_util.tree_map(
+        lambda p: jnp.asarray(np.asarray(rng.randn(*p.shape), np.float32)),
+        tree)
+
+
+def _max_diff(a, b):
+    return max(float(jnp.abs(x - y).max()) for x, y in
+               zip(jax.tree_util.tree_leaves(a),
+                   jax.tree_util.tree_leaves(b)))
+
+
+# ------------------------------------------------------------------ plan
+@pytest.mark.parametrize("n_shards", [1, 2, 3, 4, 8])
+def test_plan_split_assemble_roundtrip(n_shards):
+    tree = _tree()
+    plan = build_shard_plan(tree, n_shards)
+    back = plan.assemble(plan.split(tree))
+    assert _max_diff(tree, back) == 0.0
+    assert plan.total_size == sum(
+        int(np.prod(x.shape)) if x.shape else 1
+        for x in jax.tree_util.tree_leaves(tree))
+
+
+def test_plan_splits_oversized_leaves_and_balances():
+    tree = {"big": jnp.zeros((1024, 8)), "small": jnp.zeros((4,))}
+    plan = build_shard_plan(tree, 4)
+    # the 8192-element leaf dominates: without splitting one shard would
+    # hold >99% of the weights
+    assert plan.imbalance() < 1.2
+    assert any(not sl.whole for shard in plan.shards for sl in shard.slices)
+    back = plan.assemble(plan.split(tree))
+    assert _max_diff(tree, back) == 0.0
+
+
+def test_plan_no_split_when_disabled():
+    tree = {"big": jnp.zeros((1024, 8)), "small": jnp.zeros((4,))}
+    plan = build_shard_plan(tree, 4, split_oversized=False)
+    assert all(sl.whole for shard in plan.shards for sl in shard.slices)
+
+
+def test_plan_deterministic():
+    tree = _tree()
+    a = build_shard_plan(tree, 3)
+    b = build_shard_plan(tree, 3)
+    assert a.shards == b.shards
+
+
+# ------------------------------------------------- S=1 server equivalence
+def test_s1_equivalent_to_monolithic_server():
+    """Acceptance: ShardedParameterServer with S=1 == ParameterServer on
+    the same deterministic push sequence (same applied-update count,
+    identical final params)."""
+    params = _tree()
+    mono = ParameterServer(params, make_policy("ssp", staleness=2),
+                           ServerOptimizer(lr=0.1, momentum=0.9), 3)
+    shrd = ShardedParameterServer(
+        params, make_policy_factory("ssp", staleness=2),
+        lambda: ServerOptimizer(lr=0.1, momentum=0.9), 3, 1)
+    for i in range(30):   # round-robin never exceeds the SSP threshold
+        g = _grads_like(params, seed=100 + i)
+        mono.push(i % 3, g)
+        shrd.push(i % 3, g)
+    assert mono.version == shrd.version == 30
+    assert _max_diff(mono.params, shrd.params) < 1e-6
+    assert (mono.metrics.staleness_hist == shrd.metrics.staleness_hist)
+
+
+def test_global_gating_matches_monolithic_for_dropping_policy():
+    """Regression: in gating='global' the gate's decision must govern
+    every shard's apply — with the backup-workers policy (which DROPS
+    straggler gradients) the sharded server must apply/drop exactly the
+    pushes the monolithic server does."""
+    params = _tree()
+    mono = ParameterServer(params,
+                           make_policy("backup", n_workers=2, backups=1),
+                           ServerOptimizer(lr=0.1), 2)
+    shrd = ShardedParameterServer(
+        params, make_policy_factory("backup", n_workers=2, backups=1),
+        lambda: ServerOptimizer(lr=0.1), 2, 2, gating="global")
+    for i in range(10):
+        g = _grads_like(params, seed=200 + i)
+        mono.push(i % 2, g)
+        shrd.push(i % 2, g)
+    assert mono.metrics.applied_updates == shrd.metrics.applied_updates
+    assert mono.metrics.dropped_updates == shrd.metrics.dropped_updates
+    assert _max_diff(mono.params, shrd.params) < 1e-6
+
+
+def test_fused_apply_matches_tree_apply():
+    params = _tree()
+    servers = [
+        ShardedParameterServer(params, make_policy_factory("asp"),
+                               lambda: ServerOptimizer(lr=0.1, momentum=0.9),
+                               2, 3, apply_mode=mode)
+        for mode in ("tree", "fused")]
+    for i in range(12):
+        g = _grads_like(params, seed=i)
+        for s in servers:
+            s.push(i % 2, g)
+    assert _max_diff(servers[0].params, servers[1].params) < 1e-5
+    assert servers[0].shard_versions() == servers[1].shard_versions()
+
+
+def test_fused_apply_handles_empty_shards():
+    """Regression: n_shards > piece count yields empty shards; a
+    zero-row pallas_call would reject its tile — apply must no-op."""
+    params = {"w": jnp.ones((4, 4)), "b": jnp.ones((4,))}
+    server = ShardedParameterServer(params, make_policy_factory("asp"),
+                                    lambda: ServerOptimizer(lr=0.1), 2, 8,
+                                    apply_mode="fused")
+    assert any(len(s.slices) == 0 for s in server.plan.shards)
+    g = jax.tree_util.tree_map(jnp.ones_like, params)
+    for i in range(4):
+        server.push(i % 2, g)
+    assert server.shard_versions() == [4] * 8
+    assert _max_diff(server.params["w"],
+                     jnp.ones((4, 4)) - 0.1 * 4 * jnp.ones(())) < 1e-5
+
+
+def test_fused_update_shard_matches_per_leaf_kernel():
+    """The public batched kernel API (one pallas_call over the packed
+    shard) is numerically identical to per-leaf fused_update."""
+    from repro.kernels.fused_update import fused_update, fused_update_shard
+    leaves = list(jax.tree_util.tree_leaves(_tree()))
+    ms = [jnp.ones_like(x) * 0.1 for x in leaves]
+    gs = list(jax.tree_util.tree_leaves(_grads_like(_tree(), seed=7)))
+    po, mo = fused_update_shard(leaves, ms, gs, lr=0.05, beta=0.9,
+                                scale=0.5, interpret=True)
+    for p, m, g, pn, mn in zip(leaves, ms, gs, po, mo):
+        pe, me = fused_update(p, m, g, lr=0.05, beta=0.9, scale=0.5,
+                              interpret=True)
+        assert float(jnp.abs(pn - pe).max()) < 1e-6
+        assert float(jnp.abs(mn - me).max()) < 1e-6
+    assert fused_update_shard([], [], [], lr=0.05) == ([], [])
+
+
+def test_ps_package_import_stays_kernel_free():
+    """Importing repro.ps must not drag in the Pallas kernel stack."""
+    import subprocess
+    import sys
+    code = ("import sys; import repro.ps; "
+            "sys.exit(1 if any(m.startswith('repro.kernels') "
+            "for m in sys.modules) else 0)")
+    proc = subprocess.run([sys.executable, "-c", code],
+                          capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stderr
+
+
+def test_identity_compressor_roundtrips_through_shards():
+    params = _tree()
+    plain = ShardedParameterServer(params, make_policy_factory("asp"),
+                                   lambda: ServerOptimizer(lr=0.1), 2, 2)
+    ident = ShardedParameterServer(params, make_policy_factory("asp"),
+                                   lambda: ServerOptimizer(lr=0.1), 2, 2,
+                                   compressor=make_compressor("none"))
+    int8 = ShardedParameterServer(params, make_policy_factory("asp"),
+                                  lambda: ServerOptimizer(lr=0.1), 2, 2,
+                                  compressor=make_compressor("int8"))
+    for i in range(8):
+        g = _grads_like(params, seed=i)
+        for s in (plain, ident, int8):
+            s.push(i % 2, g)
+    assert _max_diff(plain.params, ident.params) == 0.0
+    # int8 is lossy-but-error-fed-back: close, not identical
+    assert 0.0 < _max_diff(plain.params, int8.params) < 0.1
+
+
+def test_none_compressor_error_state_is_grads_shaped():
+    """Regression: make_compressor('none').init_error used to return ()."""
+    g = _tree()
+    c = make_compressor("none")
+    err = c.init_error(g)
+    assert (jax.tree_util.tree_structure(err)
+            == jax.tree_util.tree_structure(g))
+    g2, err2 = c.apply(g, err)
+    assert _max_diff(g, g2) == 0.0
+    assert (jax.tree_util.tree_structure(err2)
+            == jax.tree_util.tree_structure(g))
+
+
+# ------------------------------------------------- simulator equivalence
+@pytest.mark.parametrize("name,kw", [
+    ("bsp", {}), ("asp", {}), ("ssp", {"staleness": 3}),
+    ("dssp", {"s_lower": 3, "s_upper": 15})])
+def test_sim_s1_metrics_identical_to_monolithic(name, kw):
+    intervals = [1.0, 1.0, 1.0, 4.0]
+    mono = run_policy(make_policy(name, n_workers=4, **kw), intervals,
+                      max_pushes=1500)
+    s1 = run_sharded_policy(
+        make_policy_factory(name, n_workers=4, **kw), intervals, 1,
+        max_pushes=1500).metrics
+    a, b = mono.summary(), s1.summary()
+    for key in ("pushes", "applied", "total_wait", "mean_staleness",
+                "max_staleness", "time", "throughput"):
+        assert a[key] == b[key], (key, a[key], b[key])
+
+
+@pytest.mark.parametrize("n_shards", [2, 4, 16])
+@pytest.mark.parametrize("name,kw,bound", [
+    ("bsp", {}, 0), ("ssp", {"staleness": 3}, 3),
+    ("dssp", {"s_lower": 3, "s_upper": 15}, 15)])
+def test_sim_per_shard_staleness_bounded(n_shards, name, kw, bound):
+    """Acceptance: with S>1 every shard's max observed staleness stays
+    within the policy bound (+1 for the at-push transient, the same
+    convention the monolithic tests use)."""
+    sim = run_sharded_policy(
+        make_policy_factory(name, n_workers=4, **kw),
+        [1.0, 1.0, 1.0, 4.0], n_shards, max_pushes=1500)
+    for shard_max in sim.max_staleness_per_shard():
+        assert shard_max <= bound + 1
+    assert sim.metrics.total_pushes == 1500
+
+
+def test_sim_hot_shard_adds_wait_but_keeps_bound():
+    factory = make_policy_factory("dssp", s_lower=3, s_upper=15)
+    cold = run_sharded_policy(factory, [1.0, 1.0, 1.0, 4.0], 4,
+                              max_pushes=800)
+    hot = run_sharded_policy(factory, [1.0, 1.0, 1.0, 4.0], 4,
+                             max_pushes=800,
+                             shard_service_fn=hot_shard_service(0, 0.5))
+    assert hot.metrics.total_time > cold.metrics.total_time
+    assert max(hot.max_staleness_per_shard()) <= 16
+
+
+# -------------------------------------------------- threaded: concurrency
+class _SlowOptimizer(ServerOptimizer):
+    """ServerOptimizer that sleeps inside apply and records how many
+    applies run concurrently — the lock-granularity probe."""
+
+    gauge_lock = threading.Lock()
+    active = 0
+    max_active = 0
+
+    def __init__(self, sleep_s: float):
+        super().__init__(lr=0.01)
+        self._sleep = sleep_s
+
+    def step(self, params, grads, staleness):
+        cls = _SlowOptimizer
+        with cls.gauge_lock:
+            cls.active += 1
+            cls.max_active = max(cls.max_active, cls.active)
+        time.sleep(self._sleep)
+        try:
+            return super().step(params, grads, staleness)
+        finally:
+            with cls.gauge_lock:
+                cls.active -= 1
+
+
+def test_pushes_to_distinct_shards_do_not_serialize():
+    """Acceptance: concurrent pushes to distinct shards overlap — with a
+    global lock the in-apply concurrency gauge could never exceed 1."""
+    _SlowOptimizer.active = 0
+    _SlowOptimizer.max_active = 0
+    params = _tree()
+    server = ShardedParameterServer(
+        params, make_policy_factory("asp"),
+        lambda: _SlowOptimizer(0.03), 3, 3)
+
+    def pusher(w):
+        for i in range(6):
+            server.push(w, _grads_like(params, seed=w * 100 + i))
+
+    threads = [threading.Thread(target=pusher, args=(w,)) for w in range(3)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60.0)
+    assert not any(t.is_alive() for t in threads)
+    assert _SlowOptimizer.max_active >= 2, (
+        "shard applies never overlapped — pushes serialized globally")
+
+
+# --------------------------------------------- threaded: training + elastic
+def _make_problem(seed=0, dim=8, n=512):
+    rng = np.random.RandomState(seed)
+    w_true = rng.randn(dim, 1).astype(np.float32)
+    x = rng.randn(n, dim).astype(np.float32)
+    y = x @ w_true + 0.01 * rng.randn(n, 1).astype(np.float32)
+    return x, y
+
+
+def _step_fn():
+    def loss_fn(params, batch):
+        x, y = batch
+        pred = x @ params["w"] + params["b"]
+        return jnp.mean((pred - y) ** 2)
+
+    @jax.jit
+    def step(params, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        return grads, {"loss": loss}
+
+    return step
+
+
+def _batches(x, y, worker, n_workers, bs=32, seed=0):
+    sx, sy = x[worker::n_workers], y[worker::n_workers]
+    rng = np.random.RandomState(seed + worker)
+    while True:
+        idx = rng.randint(0, len(sx), size=bs)
+        yield sx[idx], sy[idx]
+
+
+def _sharded_server(params, policy_name, n_workers, n_shards, **kw):
+    return ShardedParameterServer(
+        params, make_policy_factory(policy_name, n_workers=n_workers, **kw),
+        lambda: ServerOptimizer(lr=0.05), n_workers, n_shards)
+
+
+@pytest.mark.parametrize("policy", ["bsp", "dssp"])
+def test_training_converges_through_sharded_server(policy):
+    x, y = _make_problem()
+    params = {"w": jnp.zeros((x.shape[1], 1)), "b": jnp.zeros((1,))}
+    server = _sharded_server(params, policy, 4, 3, s_lower=1, s_upper=5)
+    step = _step_fn()
+    workers = [PSWorker(w, server, step, _batches(x, y, w, 4), 30)
+               for w in range(4)]
+    run_cluster(server, workers, timeout=120.0)
+    pred = x @ server.params["w"] + server.params["b"]
+    final = float(jnp.mean((pred - y) ** 2))
+    assert final < 0.25 * float(jnp.mean(y ** 2))
+    assert server.metrics.total_pushes == 4 * 30
+    # every shard applied every released push
+    assert all(v == 4 * 30 for v in server.shard_versions())
+
+
+def test_dssp_straggler_bounded_on_every_shard_threaded():
+    x, y = _make_problem()
+    params = {"w": jnp.zeros((x.shape[1], 1)), "b": jnp.zeros((1,))}
+    server = _sharded_server(params, "dssp", 4, 4, s_lower=1, s_upper=4)
+    step = _step_fn()
+    workers = [PSWorker(w, server, step, _batches(x, y, w, 4), 30,
+                        speed_factor=(6.0 if w == 3 else 1.0))
+               for w in range(4)]
+    run_cluster(server, workers, timeout=180.0)
+    for m in server.shard_metrics():
+        assert m.max_staleness <= 4 + 1
+
+
+def test_worker_failure_does_not_deadlock_any_shard_barrier():
+    """Satellite: remove_worker mid-run must not stall ANY shard's BSP
+    barrier — the departed worker leaves every shard tracker."""
+    x, y = _make_problem()
+    params = {"w": jnp.zeros((x.shape[1], 1)), "b": jnp.zeros((1,))}
+    server = _sharded_server(params, "bsp", 4, 3)
+    step = _step_fn()
+    workers = [PSWorker(w, server, step, _batches(x, y, w, 4), 25)
+               for w in range(4)]
+    workers[2].abort()
+    # Sample membership while the cluster runs.  Departures sweep shards
+    # in index order, so at any instant shard j's membership is a subset
+    # of shard j+1's; reading in REVERSE shard order makes that chain
+    # observable without racing the sweep.
+    samples = []
+    stop_sampling = threading.Event()
+
+    def snapshot():
+        snaps = [None] * server.n_shards
+        for st in reversed(server.shards):
+            with st.cond:
+                snaps[st.index] = frozenset(st.tracker.workers)
+        return snaps
+
+    def sampler():
+        while not stop_sampling.is_set():
+            samples.append(snapshot())
+            time.sleep(0.005)
+
+    t = threading.Thread(target=sampler, daemon=True)
+    t.start()
+    run_cluster(server, workers, timeout=120.0)
+    stop_sampling.set()
+    t.join(timeout=10.0)
+    done = [w.iterations_done for w in workers]
+    assert done[2] == 0
+    assert all(d == 25 for d in (done[0], done[1], done[3]))
+    for snap in samples:
+        for a, b in zip(snap, snap[1:]):
+            assert a <= b, f"shard membership diverged: {snap}"
+    # after the run everyone departed — trackers agree on empty
+    assert all(set(p) == set() for p in server.staleness_profile().values())
+
+
+def test_elastic_join_mid_run_keeps_shard_profiles_consistent():
+    """Satellite: add_worker mid-run — the joiner starts at every shard's
+    slowest count (no stall) and all shards agree on membership."""
+    x, y = _make_problem()
+    params = {"w": jnp.zeros((x.shape[1], 1)), "b": jnp.zeros((1,))}
+    server = _sharded_server(params, "ssp", 2, 3, staleness=2)
+    step = _step_fn()
+    first = [PSWorker(w, server, step, _batches(x, y, w, 4), 15)
+             for w in range(2)]
+    run_cluster(server, first, timeout=120.0)
+    server.stopped = False
+    server.add_worker(2)
+    # the joiner enters EVERY shard's tracker at that shard's slowest
+    # count — consistent profiles, no stall on any barrier
+    profile = server.staleness_profile()
+    assert all(set(p) == {2} for p in profile.values())
+    assert all(p[2] == 0 for p in profile.values())
+    late = PSWorker(2, server, step, _batches(x, y, 2, 4), 15)
+    run_cluster(server, [late], timeout=120.0)
+    assert late.iterations_done == 15
+    # departed again on exit — all shards agree
+    assert all(set(p) == set() for p in server.staleness_profile().values())
