@@ -1,0 +1,207 @@
+"""Push/pull hot-path microbenchmark: tree wire format vs packed.
+
+Measures the SERVER-side cost of one push / one pull through the
+sharded parameter server, per wire format:
+
+  * ``tree``        apply_mode=tree   — per-leaf optimizer step,
+  * ``tree_fused``  apply_mode=fused  — one kernel launch per shard but
+                    a ``pack_shard`` (concat) per shard per push,
+  * ``packed``      push_packed       — the zero-repack path: the wire
+                    buffer is sliced into per-shard views, no packing,
+  * ``*+int8``      the same with wire compression (per-leaf tree_map
+                    dispatches vs ONE fused launch per shard).
+
+Wall time on this container is interpret-mode dominated and mostly
+meaningless; the *event counts* (``repro.perfcount``) are
+backend-independent and are what the packed format eliminates:
+``repack_events`` = packs + unpacks + per-leaf concats per push.  The
+acceptance target (>= 2x lower per-push overhead at S=16 on the tail of
+small leaves) is checked on that metric.
+
+Emits machine-readable ``BENCH_push_pull.json`` plus the standard
+``name,us_per_call,derived`` CSV on stdout.  ``--smoke`` runs a tiny
+model + few pushes for the tier-1 CI workflow.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.policies import make_policy_factory
+from repro.perfcount import WIRE
+from repro.ps.server import ServerOptimizer
+from repro.ps.sharded import ShardedParameterServer
+
+
+def tail_heavy_tree(scale: int = 1) -> Dict[str, jax.Array]:
+    """A few big matrices + a long tail of small leaves (biases, norms,
+    per-layer scalars) — the shape profile where per-leaf dispatch
+    overhead dominates the update phase."""
+    rng = np.random.RandomState(0)
+    tree: Dict[str, jax.Array] = {}
+    for i in range(2 * scale):
+        tree[f"w{i}"] = jnp.asarray(
+            rng.randn(256 * scale, 128).astype(np.float32))
+    for i in range(24 * scale):           # the tail
+        tree[f"b{i}"] = jnp.asarray(rng.randn(64).astype(np.float32))
+        tree[f"g{i}"] = jnp.asarray(rng.randn(8, 8).astype(np.float32))
+        tree[f"s{i}"] = jnp.float32(rng.randn())
+    return tree
+
+
+def _grads_like(tree, seed: int):
+    rng = np.random.RandomState(seed)
+    return jax.tree_util.tree_map(
+        lambda p: jnp.asarray(rng.randn(*p.shape).astype(np.float32))
+        if p.shape else jnp.float32(rng.randn()), tree)
+
+
+def _server(params, n_shards: int, apply_mode: str,
+            wire_compression=None, compressor=None):
+    from repro.optim.compression import make_compressor
+    return ShardedParameterServer(
+        params, make_policy_factory("asp"),
+        lambda: ServerOptimizer(lr=0.01, momentum=0.9),
+        1, n_shards, apply_mode=apply_mode,
+        compressor=make_compressor(compressor) if compressor else None,
+        wire_compression=wire_compression)
+
+
+def _block_tree(tree):
+    jax.block_until_ready(jax.tree_util.tree_leaves(tree))
+
+
+def bench_path(params, grads_seq, n_shards: int, path: str,
+               n_pushes: int) -> Dict[str, object]:
+    compress = path.endswith("+int8")
+    base = path[:-5] if compress else path
+    if base == "packed":
+        server = _server(params, n_shards, "fused",
+                         wire_compression="int8" if compress else None)
+        payloads = [server.plan.pack(g) for g in grads_seq]
+    else:
+        server = _server(params, n_shards,
+                         "fused" if base == "tree_fused" else "tree",
+                         compressor="int8" if compress else None)
+        payloads = list(grads_seq)
+    push = server.push_packed if base == "packed" else server.push
+    pull = (server.pull_packed if base == "packed" else server.pull)
+
+    def block_server():
+        # Drain device work without touching the counted wire APIs.
+        for st in server.shards:
+            jax.block_until_ready(st._pieces if st._pieces is not None
+                                  else st._packed_p)
+
+    push(0, payloads[0])                      # warm up compile caches
+    pull(0)
+    block_server()
+
+    WIRE.reset()
+    t0 = time.monotonic()
+    for i in range(n_pushes):
+        push(0, payloads[(i + 1) % len(payloads)])
+    block_server()
+    push_wall = time.monotonic() - t0
+    push_events = WIRE.snapshot()
+
+    pull_wall = 0.0
+    pull_events = {k: 0 for k in push_events}
+    for i in range(n_pushes):
+        push(0, payloads[i % len(payloads)])  # invalidate snapshot caches
+        block_server()
+        before = WIRE.snapshot()
+        t0 = time.monotonic()
+        out = pull(0)
+        _block_tree(out)
+        pull_wall += time.monotonic() - t0
+        for k, v in WIRE.delta(before).items():
+            pull_events[k] += v
+
+    per = lambda ev: {k: v / n_pushes for k, v in ev.items()}
+    pe, le = per(push_events), per(pull_events)
+    repack = pe["packs"] + pe["unpacks"] + pe["leaf_concats"]
+    return {
+        "path": path, "shards": n_shards, "n_pushes": n_pushes,
+        "push_ms": 1e3 * push_wall / n_pushes,
+        "pull_ms": 1e3 * pull_wall / n_pushes,
+        "per_push": pe,
+        "per_pull": le,
+        "repack_events_per_push": repack,
+        "pallas_calls_per_push": pe["pallas_calls"],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny tree + few pushes (CI tier-1)")
+    ap.add_argument("--shards", type=int, nargs="*", default=None)
+    ap.add_argument("--pushes", type=int, default=None)
+    ap.add_argument("--out", default="BENCH_push_pull.json")
+    args = ap.parse_args()
+
+    scale = 1 if args.smoke else 2
+    shard_counts = args.shards or ([1, 4] if args.smoke else [1, 4, 16])
+    n_pushes = args.pushes or (3 if args.smoke else 10)
+    params = tail_heavy_tree(scale)
+    n_leaves = len(jax.tree_util.tree_leaves(params))
+    grads_seq = [_grads_like(params, s) for s in range(2)]
+
+    paths = ["tree", "tree_fused", "packed", "tree_fused+int8",
+             "packed+int8"]
+    rows: List[Dict[str, object]] = []
+    for s in shard_counts:
+        for path in paths:
+            rows.append(bench_path(params, grads_seq, s, path, n_pushes))
+
+    # Derived acceptance metric: packed vs tree_fused repack overhead at
+    # the largest shard count.
+    s_max = max(shard_counts)
+    by = {r["path"]: r for r in rows if r["shards"] == s_max}
+    fused_ov = by["tree_fused"]["repack_events_per_push"]
+    packed_ov = by["packed"]["repack_events_per_push"]
+    ratio = fused_ov / max(packed_ov, 1e-9)
+    report = {
+        "bench": "push_pull_latency",
+        "smoke": args.smoke,
+        "n_leaves": n_leaves,
+        "total_params": int(sum(
+            x.size for x in jax.tree_util.tree_leaves(params))),
+        "shard_counts": shard_counts,
+        "rows": rows,
+        "derived": {
+            "s_max": s_max,
+            "repack_events_per_push_tree_fused": fused_ov,
+            "repack_events_per_push_packed": packed_ov,
+            # null = packed path did zero repacks (ratio undefined/infinite);
+            # kept strict-JSON-parseable for downstream consumers.
+            "repack_overhead_ratio": (ratio if packed_ov > 0 else None),
+            "target_met": packed_ov == 0 or ratio >= 2.0,
+        },
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2, default=float, allow_nan=False)
+
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"push_pull_{r['path']}_S{r['shards']},"
+              f"{1e3 * r['push_ms']:.0f},"
+              f"repack={r['repack_events_per_push']:.1f}"
+              f";launches={r['pallas_calls_per_push']:.1f}")
+    print(f"# packed repack events/push at S={s_max}: {packed_ov:.1f} "
+          f"(tree_fused: {fused_ov:.1f}, ratio "
+          f"{'inf' if packed_ov == 0 else f'{ratio:.1f}'}x, "
+          f"target >=2x: {report['derived']['target_met']})")
+    print(f"# wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

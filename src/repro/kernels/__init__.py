@@ -6,15 +6,19 @@ mode on CPU against the ref.py jnp oracles; native lowering on TPU).
   fused_update     DSSP delayed-gradient apply + momentum in one HBM pass
   fused_update_shard  same update over a whole PS shard's packed leaf list
                       (one pallas_call per shard instead of per leaf)
+  fused_int8_ef / fused_topk_ef  wire compression + error feedback over
+                      the packed (rows, 512) buffer in one VMEM pass
 
 Use via repro.kernels.ops (jit wrappers + custom_vjp).
 """
 
 from repro.kernels import ops, ref
 from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.fused_compress import fused_int8_ef, fused_topk_ef
 from repro.kernels.fused_update import (fused_update, fused_update_shard,
                                         pack_shard, unpack_shard)
 from repro.kernels.rmsnorm import rmsnorm
 
 __all__ = ["ops", "ref", "flash_attention_fwd", "fused_update",
-           "fused_update_shard", "pack_shard", "unpack_shard", "rmsnorm"]
+           "fused_update_shard", "pack_shard", "unpack_shard",
+           "fused_int8_ef", "fused_topk_ef", "rmsnorm"]

@@ -27,8 +27,10 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-_LANES = 512
-_ROWS = 8
+from repro.perfcount import WIRE
+from repro.wireformat import WIRE_LANES as _LANES
+from repro.wireformat import WIRE_ROWS as _ROWS
+from repro.wireformat import pack_flat, resolve_wire_dtype
 
 
 def _fused_update_kernel(scalars_ref, p_ref, m_ref, g_ref,
@@ -50,6 +52,7 @@ def fused_update(p: jax.Array, m: jax.Array, g: jax.Array, *,
     Returns (p', m') with the input dtypes.  lr/scale may be python
     floats or traced scalars (no recompile on change).
     """
+    WIRE.pallas_calls += 1
     orig_shape = p.shape
     n = p.size
     tile = _ROWS * _LANES
@@ -91,22 +94,33 @@ def fused_update(p: jax.Array, m: jax.Array, g: jax.Array, *,
 # stay resident in the packed layout between steps (see
 # ``repro.ps.sharded.server``).
 
-def pack_shard(leaves: Sequence[jax.Array],
-               dtype=jnp.float32) -> jax.Array:
-    """Flatten + concatenate leaves into one lane-aligned (rows, 512) buffer."""
+def pack_shard(leaves: Sequence[jax.Array], dtype=None) -> jax.Array:
+    """Flatten + concatenate leaves into one lane-aligned (rows, 512) buffer.
+
+    ``dtype=None`` (default) preserves a uniform leaf dtype on the wire
+    — bf16 leaves pack into a bf16 buffer and round-trip bitwise through
+    ``unpack_shard`` instead of silently bouncing through f32 (which
+    would also flip the fused apply's *persistent* accumulation dtype to
+    f32 while the tree path accumulates in the leaf dtype).  Mixed-dtype
+    leaf lists are explicitly promoted to f32; pass ``dtype=`` to force
+    a wire dtype.
+    """
     if not leaves:
-        return jnp.zeros((0, _LANES), dtype)
-    flats = [x.reshape(-1).astype(dtype) for x in leaves]
-    flat = flats[0] if len(flats) == 1 else jnp.concatenate(flats)
-    pad = (-flat.size) % _LANES
-    if pad:
-        flat = jnp.pad(flat, (0, pad))
-    return flat.reshape(-1, _LANES)
+        return jnp.zeros((0, _LANES), dtype or jnp.float32)
+    if dtype is None:
+        dtype = resolve_wire_dtype((jnp.dtype(x.dtype) for x in leaves),
+                                   default=jnp.dtype(jnp.float32))
+    return pack_flat(leaves, dtype)
 
 
 def unpack_shard(buf: jax.Array, shapes: Sequence[Tuple[int, ...]],
                  dtypes: Sequence) -> List[jax.Array]:
-    """Inverse of ``pack_shard`` given the original leaf shapes/dtypes."""
+    """Inverse of ``pack_shard`` given the original leaf shapes/dtypes.
+
+    Casts only when the buffer dtype differs from a leaf's dtype (a
+    uniform-dtype shard never round-trips through another precision).
+    """
+    WIRE.unpacks += 1
     flat = buf.reshape(-1)
     out: List[jax.Array] = []
     off = 0

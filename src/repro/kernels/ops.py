@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
+from repro.kernels import fused_compress as _fc
 from repro.kernels import fused_update as _fu
 from repro.kernels import ref as _ref
 from repro.kernels import rmsnorm as _rn
@@ -69,6 +70,18 @@ def fused_update_shard(ps, ms, gs, *, lr, beta: float = 0.9, scale=1.0):
     (rows, 512) layout) — the sharded PS's per-shard update kernel."""
     return _fu.fused_update_shard(ps, ms, gs, lr=lr, beta=beta, scale=scale,
                                   interpret=not on_tpu())
+
+
+def fused_int8_ef(g, err):
+    """Fused int8 quantize+dequant+error-feedback over a packed wire
+    buffer — ONE kernel launch per shard (see kernels/fused_compress)."""
+    return _fc.fused_int8_ef(g, err, interpret=not on_tpu())
+
+
+def fused_topk_ef(g, err, *, fraction: float = 0.05):
+    """Fused per-tile magnitude top-k + error feedback on the wire."""
+    return _fc.fused_topk_ef(g, err, fraction=fraction,
+                             interpret=not on_tpu())
 
 
 def fused_update_tree(params, momenta, grads, *, lr, beta: float = 0.9,

@@ -66,3 +66,53 @@ def fused_update_ref(p: jax.Array, m: jax.Array, g: jax.Array, *,
           + scale * g.astype(jnp.float32))
     pf = p.astype(jnp.float32) - lr * mf
     return pf.astype(p.dtype), mf.astype(m.dtype)
+
+
+def _per_tile(buf: jax.Array, rows: int = 8) -> jax.Array:
+    """(R, 512) wire buffer -> (R//rows, rows*512) tile-major view."""
+    r, lanes = buf.shape
+    return buf.reshape(r // rows, rows * lanes)
+
+
+def fused_int8_ef_ref(g: jax.Array, e: jax.Array
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """Oracle for ``fused_compress.fused_int8_ef``.
+
+    Per-(8, 512)-tile symmetric int8 quantize/dequant with error
+    feedback: gf = g + e; scale = max|gf| / 127 per tile;
+    g' = dequant(round(gf/scale)); e' = gf - g'.
+    """
+    if g.shape[0] == 0:
+        return g, e
+    gf = _per_tile(g.astype(jnp.float32) + e)
+    scale = jnp.maximum(jnp.max(jnp.abs(gf), axis=1, keepdims=True),
+                        1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127.0, 127.0)
+    dq = q * scale
+    return (dq.reshape(g.shape).astype(g.dtype),
+            (gf - dq).reshape(g.shape))
+
+
+def fused_topk_ef_ref(g: jax.Array, e: jax.Array, *,
+                      fraction: float = 0.05, iters: int = 24
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """Oracle for ``fused_compress.fused_topk_ef``: per-tile magnitude
+    top-k by the same count-curve bisection the kernel unrolls, so the
+    kept set matches the kernel exactly (not merely approximately)."""
+    if g.shape[0] == 0:
+        return g, e
+    gf = _per_tile(g.astype(jnp.float32) + e)
+    mag = jnp.abs(gf)
+    target = jnp.float32(fraction * mag.shape[1])
+    lo = jnp.zeros((mag.shape[0], 1), jnp.float32)
+    hi = jnp.max(mag, axis=1, keepdims=True) + jnp.float32(1e-12)
+    for _ in range(iters):
+        mid = 0.5 * (lo + hi)
+        keep = jnp.sum((mag >= mid).astype(jnp.float32), axis=1,
+                       keepdims=True)
+        take = keep >= target
+        lo = jnp.where(take, mid, lo)
+        hi = jnp.where(take, hi, mid)
+    kept = jnp.where(mag >= lo, gf, 0.0)
+    return (kept.reshape(g.shape).astype(g.dtype),
+            (gf - kept).reshape(g.shape))

@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import functools
 import time
 from typing import Any, Callable, Dict, List, Optional
 
@@ -193,6 +194,7 @@ def train_ps(cfg, data_cfg: DataConfig, *, sync: str, n_steps: int,
              s_lower: int = 0, s_upper: int = 3,
              compressor: str = "none", apply_mode: str = "tree",
              gating: str = "sharded", straggler: float = 1.0,
+             wire_format: str = "tree",
              verbose: bool = False):
     """Real-training path through the sharded threaded parameter server.
 
@@ -202,6 +204,14 @@ def train_ps(cfg, data_cfg: DataConfig, *, sync: str, n_steps: int,
     compression and the batched fused apply are selectable.  This is the
     Algorithm-1 execution model (the SPMD ``Trainer`` is the
     delayed-gradient emulation of it).
+
+    ``wire_format='packed'`` (requires/implies ``apply_mode='fused'``)
+    runs the zero-repack hot path: each worker's jitted step takes the
+    server's packed (rows, 512) wire buffer, unpacks it to params as
+    in-jit views, differentiates, and re-packs the gradients into its
+    own donated wire buffer — the pytree<->wire boundary is crossed once
+    per direction per step, and the server never repacks.  The tree
+    ``compressor`` becomes the server's fused wire compression.
     """
     from repro.core.policies import make_policy_factory
     from repro.data.synthetic import batches as data_batches
@@ -209,14 +219,14 @@ def train_ps(cfg, data_cfg: DataConfig, *, sync: str, n_steps: int,
     from repro.ps.sharded import ShardedParameterServer
     from repro.ps.worker import PSWorker, run_cluster
 
+    if wire_format not in ("tree", "packed"):
+        raise ValueError(f"unknown wire format {wire_format!r}")
+    packed = wire_format == "packed"
+    if packed and apply_mode == "tree":
+        apply_mode = "fused"   # packed pushes fold through the kernel
+
     loss_fn = registry.loss_fn(cfg)
     params = registry.init_params(cfg, jax.random.PRNGKey(0))
-
-    @jax.jit
-    def step(p, batch):
-        (loss, _), grads = jax.value_and_grad(
-            loss_fn, has_aux=True)(p, batch)
-        return grads, {"loss": loss}
 
     def worker_batches(w: int):
         wcfg = dataclasses.replace(data_cfg, seed=data_cfg.seed + 1 + w)
@@ -229,13 +239,56 @@ def train_ps(cfg, data_cfg: DataConfig, *, sync: str, n_steps: int,
     server = ShardedParameterServer(
         params, policy_factory, lambda: ServerOptimizer(lr=lr),
         n_workers, n_shards, gating=gating, apply_mode=apply_mode,
-        compressor=make_compressor(compressor))
+        compressor=None if packed else make_compressor(compressor),
+        wire_compression=compressor if packed else None)
     if verbose:
         print(server.plan.describe())
+
+    if packed:
+        plan = server.plan
+
+        @functools.partial(jax.jit, donate_argnums=(1,))
+        def _packed_step(wire_p, wire_g_prev, batch):
+            p = plan.unpack(wire_p)
+            (loss, _), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(p, batch)
+            # Write the packed grads INTO the donated buffer: the output
+            # aliases wire_g_prev's memory.  A plain `return plan.pack(...)`
+            # would leave wire_g_prev unread, and jit's keep_unused=False
+            # prunes unread args before donation can apply.
+            return wire_g_prev.at[:].set(plan.pack(grads)), {"loss": loss}
+
+        def make_step():
+            # Each worker owns ONE gradient wire buffer, donated back
+            # into the jit every iteration (the output reuses its
+            # memory) — the params wire buffer is the server's shared
+            # snapshot and must NOT be donated.
+            from repro.wireformat import WIRE_LANES
+            layout = plan.wire_layout()
+            state = {"g": jnp.zeros((layout.total_rows, WIRE_LANES),
+                                    layout.dtype)}
+
+            def step(wire_p, batch):
+                g, aux = _packed_step(wire_p, state["g"], batch)
+                state["g"] = g
+                return g, aux
+
+            return step
+    else:
+        @jax.jit
+        def _tree_step(p, batch):
+            (loss, _), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(p, batch)
+            return grads, {"loss": loss}
+
+        def make_step():
+            return _tree_step
+
     iters = max(1, n_steps // n_workers)
-    workers = [PSWorker(w, server, step, worker_batches(w), iters,
+    workers = [PSWorker(w, server, make_step(), worker_batches(w), iters,
                         speed_factor=(straggler if w == n_workers - 1
                                       else 1.0),
+                        wire_format=wire_format,
                         loss_from_aux=lambda a: float(a["loss"]))
                for w in range(n_workers)]
     run_cluster(server, workers, timeout=1200.0)
@@ -281,6 +334,11 @@ def main() -> None:
                          "launch over the packed shard (fused runs in "
                          "interpret mode on CPU — correctness validation "
                          "only; native speed needs TPU)")
+    ap.add_argument("--ps-wire", default="tree", choices=["tree", "packed"],
+                    help="push/pull wire format: per-leaf pytrees, or the "
+                         "zero-repack packed (rows, 512) buffer (packed "
+                         "implies --ps-apply fused; --compress becomes the "
+                         "fused wire compression)")
     ap.add_argument("--ps-gating", default="sharded",
                     choices=["sharded", "global"])
     ap.add_argument("--ps-straggler", type=float, default=1.0,
@@ -312,7 +370,8 @@ def main() -> None:
                           compressor=args.compress,
                           apply_mode=args.ps_apply,
                           gating=args.ps_gating,
-                          straggler=args.ps_straggler, verbose=True)
+                          straggler=args.ps_straggler,
+                          wire_format=args.ps_wire, verbose=True)
         losses = [l for _, _, l in server.metrics.loss_trajectory]
         if losses:
             print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f})")

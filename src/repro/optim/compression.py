@@ -87,6 +87,47 @@ def topk_compressor(fraction: float = 0.05) -> Compressor:
                       _zeros_like_f32, 6.0 * fraction)
 
 
+@dataclasses.dataclass(frozen=True)
+class PackedCompressor:
+    """Wire compression over the packed (rows, 512) buffer.
+
+    The tree ``Compressor`` above runs a per-leaf ``tree_map`` — one
+    XLA dispatch chain per pytree leaf.  On the packed wire format the
+    whole shard is one lane-aligned buffer, so quantize + dequant +
+    error feedback fuse into a single Pallas VMEM pass per shard
+    (``repro.kernels.fused_compress``).  ``apply`` maps
+    ``(wire_grads, wire_err) -> (decoded_grads, new_err)`` with the
+    same error-feedback contract as the tree path.
+    """
+
+    name: str
+    apply: Callable[[Any, Any], Tuple[Any, Any]]
+    wire_bytes_per_value: float
+
+
+def make_packed_compressor(name: str, *,
+                           fraction: float = 0.05
+                           ) -> "PackedCompressor | None":
+    """Fused wire compressor for the packed push path (None = identity).
+
+    Imports the kernel stack lazily so ``import repro.optim`` (and the
+    ps layer that re-exports this) stays Pallas-free.
+    """
+    if name in ("none", "", None):
+        return None
+    from repro.kernels import ops as kops
+    if name == "int8":
+        return PackedCompressor("int8", kops.fused_int8_ef, 1.0)
+    if name == "topk":
+        if not 0.0 < fraction <= 1.0:
+            raise ValueError("fraction in (0, 1]")
+        return PackedCompressor(
+            f"topk({fraction})",
+            lambda g, e: kops.fused_topk_ef(g, e, fraction=fraction),
+            6.0 * fraction)
+    raise ValueError(f"unknown wire compressor {name!r}")
+
+
 def make_compressor(name: str, **kw) -> Compressor:
     if name in ("none", "", None):
         # Identity — but with a *real* grads-shaped error state so code

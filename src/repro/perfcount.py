@@ -1,0 +1,58 @@
+"""Hot-path event counters for the push/pull wire format.
+
+The packed-wire acceptance contract ("one packed push performs zero
+host-side per-leaf concatenations on the server, and at most one
+``pallas_call`` per shard for apply plus one for compression") is
+asserted by counting the events themselves, not by timing: wall time on
+a CPU interpret-mode container says nothing about HBM traffic, but the
+*number* of pack/unpack/concat/launch events per push is
+backend-independent and exactly the quantity the packed format
+eliminates.
+
+Instrumented sites:
+
+  * ``leaf_concats``  — every ``jnp.concatenate`` over per-leaf pieces
+    (``ShardPlan.assemble``, ``pack_shard`` with >1 leaf),
+  * ``packs`` / ``unpacks`` — pytree <-> packed-buffer boundary
+    crossings (``pack_shard`` / ``unpack_shard`` and the plan-level
+    ``pack`` / ``unpack``),
+  * ``gathers``       — wire-permutation gathers (one per plan-level
+    pack/unpack; the packed path's only data-movement op),
+  * ``pallas_calls``  — kernel launches (``fused_update``, the fused
+    compressors).
+
+Counters are plain ints bumped under the GIL — cheap enough to stay on
+permanently, precise enough for the single-threaded benchmark and test
+probes that read them (multi-threaded runs should treat the numbers as
+approximate).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+
+@dataclasses.dataclass
+class HotPathCounters:
+    leaf_concats: int = 0
+    packs: int = 0
+    unpacks: int = 0
+    gathers: int = 0
+    pallas_calls: int = 0
+
+    def reset(self) -> None:
+        for f in dataclasses.fields(self):
+            setattr(self, f.name, 0)
+
+    def snapshot(self) -> Dict[str, int]:
+        return {f.name: getattr(self, f.name)
+                for f in dataclasses.fields(self)}
+
+    def delta(self, before: Dict[str, int]) -> Dict[str, int]:
+        return {k: v - before.get(k, 0) for k, v in self.snapshot().items()}
+
+
+#: Process-global counters — reset + snapshot around the region of
+#: interest (see ``benchmarks/push_pull_latency.py``).
+WIRE = HotPathCounters()

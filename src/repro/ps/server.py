@@ -57,14 +57,26 @@ class ServerOptimizer:
 
 
 class ParameterServer:
-    """Global weight store + Algorithm-1 gating.  Thread-safe."""
+    """Global weight store + Algorithm-1 gating.  Thread-safe.
+
+    ``apply_mode='packed'`` makes the plan's lane-aligned (rows, 512)
+    wire buffer the resident representation: params + momentum live
+    packed, a tree push packs ONCE and folds through a single fused
+    Pallas launch, and ``push_packed``/``pull_packed`` skip the
+    pytree<->wire boundary entirely (the monolithic counterpart of the
+    sharded server's packed hot path).
+    """
 
     def __init__(self, params: Params, policy: SyncPolicy,
                  optimizer: ServerOptimizer, n_workers: int,
-                 clock: Callable[[], float] = time.monotonic):
-        self._params = params
+                 clock: Callable[[], float] = time.monotonic,
+                 apply_mode: str = "tree"):
+        if apply_mode not in ("tree", "packed"):
+            raise ValueError(f"unknown apply mode {apply_mode!r}")
+        self._params: Optional[Params] = params
         self.policy = policy
         self.optimizer = optimizer
+        self.apply_mode = apply_mode
         self.tracker = StalenessTracker(range(n_workers))
         self.metrics = RunMetrics(policy=policy.name, n_workers=n_workers)
         self._cond = threading.Condition()
@@ -72,24 +84,73 @@ class ParameterServer:
         self._t0 = clock()
         self.version = 0          # number of applied updates
         self.stopped = False
+        if apply_mode == "packed":
+            # The plan (1 shard) carries the wire layout; kernel imports
+            # stay inside the apply so `import repro.ps` is kernel-free.
+            from repro.ps.sharded.plan import build_shard_plan
+            self.plan = build_shard_plan(params, 1)
+            self._wire_p = self.plan.pack(params)
+            self._wire_m = jnp.zeros_like(self._wire_p)
+        else:
+            self.plan = None
 
     # -- worker API -----------------------------------------------------------
     def pull(self, worker: int) -> Params:
         """Fetch the latest global weights (jax arrays are immutable ⇒ a
-        reference snapshot is consistent)."""
+        reference snapshot is consistent).
+
+        Packed mode keeps a version-keyed unpacked cache that is rebuilt
+        OUTSIDE the lock, so a pull right after an apply never blocks
+        concurrent pushes for the duration of the unpack.
+        """
         with self._cond:
-            return self._params
+            if self._params is not None:
+                return self._params
+            wire, version = self._wire_p, self.version
+        params = self.plan.unpack(wire)
+        with self._cond:
+            if self.version == version and self._params is None:
+                self._params = params
+            return params
+
+    def pull_packed(self, worker: int = -1) -> jax.Array:
+        """The packed wire buffer itself — already a consistent snapshot."""
+        if self.apply_mode != "packed":
+            raise ValueError("pull_packed requires apply_mode='packed'")
+        with self._cond:
+            return self._wire_p
 
     def push(self, worker: int, grads: Grads) -> None:
         """Alg. 1 server block: update weights, then gate.  Blocks the
         calling worker thread until the policy releases it."""
+        self._push(worker, grads, packed=False)
+
+    def push_packed(self, worker: int, wire: jax.Array) -> None:
+        """Packed-wire push: the gradient arrives in wire layout and folds
+        straight through one fused launch — zero server-side packing."""
+        if self.apply_mode != "packed":
+            raise ValueError("push_packed requires apply_mode='packed'")
+        if wire.shape != self._wire_p.shape:
+            raise ValueError(f"wire buffer {wire.shape} does not match "
+                             f"layout {self._wire_p.shape}")
+        self._push(worker, wire, packed=True)
+
+    def _push(self, worker: int, payload: Any, packed: bool) -> None:
+        if self.apply_mode == "packed" and not packed:
+            # Packing depends only on the (immutable) payload — do it
+            # BEFORE taking the lock so concurrent pulls/pushes never
+            # stall behind the concat+gather dispatch.
+            payload = self.plan.pack(payload)
         with self._cond:
             now = self._clock() - self._t0
             rec = self.tracker.record_push(worker, now)
             dec = self.policy.on_push(self.tracker, worker, now)
             if dec.apply_update:
-                self._params = self.optimizer.step(
-                    self._params, grads, rec.staleness)
+                if self.apply_mode == "packed":
+                    self._apply_packed(payload, rec.staleness)
+                else:
+                    self._params = self.optimizer.step(
+                        self._params, payload, rec.staleness)
                 self.version += 1
             self.metrics.record_push(
                 worker, rec.staleness, applied=dec.apply_update,
@@ -104,6 +165,15 @@ class ParameterServer:
             waited = self._clock() - arrival
             rec.waited = waited
             self.metrics.record_wait(worker, waited)
+
+    def _apply_packed(self, wire_g: jax.Array, staleness: int) -> None:
+        from repro.kernels import ops as kops
+        opt = self.optimizer
+        scale = 1.0 / (1.0 + staleness) if opt.staleness_damping else 1.0
+        self._wire_p, self._wire_m = kops.fused_update(
+            self._wire_p, self._wire_m, wire_g,
+            lr=opt.lr, beta=opt.momentum, scale=scale)
+        self._params = None
 
     def record_loss(self, step: int, loss: float) -> None:
         """Record (wall_time, applied_update_count, loss).  Keying the
@@ -139,8 +209,7 @@ class ParameterServer:
     # -- inspection ----------------------------------------------------------
     @property
     def params(self) -> Params:
-        with self._cond:
-            return self._params
+        return self.pull(-1)
 
     def staleness_profile(self) -> Dict[int, int]:
         with self._cond:

@@ -5,14 +5,14 @@ threaded runtime and ``simulator.py`` for the virtual-time instrument.
 """
 
 from repro.ps.sharded.plan import (LeafSlice, Shard, ShardPlan,
-                                   build_shard_plan)
+                                   WireLayout, build_shard_plan)
 from repro.ps.sharded.server import ShardedParameterServer
 from repro.ps.sharded.simulator import (ShardedPSSimulator,
                                         hot_shard_service,
                                         run_sharded_policy)
 
 __all__ = [
-    "LeafSlice", "Shard", "ShardPlan", "build_shard_plan",
+    "LeafSlice", "Shard", "ShardPlan", "WireLayout", "build_shard_plan",
     "ShardedParameterServer",
     "ShardedPSSimulator", "run_sharded_policy", "hot_shard_service",
 ]

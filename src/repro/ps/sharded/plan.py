@@ -20,16 +20,42 @@ which pytree leaves live on which shard.  The plan format (also in
 The plan is pure metadata: ``split`` / ``assemble`` do the actual data
 movement (slicing on push, ``jnp.concatenate`` on pull) and are each
 other's inverse for any tree matching the plan's structure.
+
+Packed wire format
+------------------
+``split``/``assemble`` are the *tree* wire format: per-shard lists of
+arrays, one host-side op per piece.  The *packed* wire format makes the
+lane-aligned ``(rows, 512)`` buffer the native representation instead:
+the whole tree lives in ONE flat buffer laid out shard-by-shard (each
+shard's slices contiguous in ``(leaf, start)`` order, each shard region
+zero-padded to a multiple of 8 rows so a Pallas ``(8, 512)`` tile grid
+lands exactly), and a precomputed index permutation converts between
+canonical flat order and wire order in a single gather:
+
+    ``pack(tree)``      1 concatenate (all leaves -> canonical flat)
+                        + 1 gather (canonical -> wire)        [jittable]
+    ``unpack(wire)``    1 gather (wire -> canonical flat)
+                        + per-leaf slice *views*               [jittable]
+    ``shard_wire``      a row-slice view — NO per-leaf work at all.
+
+A worker packs its gradients once inside its jitted step; every later
+hop (push, per-shard apply, snapshot, pull) stays in wire layout.  The
+layout is cached per wire dtype on the plan (``wire_layout``).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Dict, List, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+from repro.perfcount import WIRE
+from repro.wireformat import (WIRE_LANES, WIRE_ROWS, pack_flat,
+                              resolve_wire_dtype)
 
 Tree = Any
 
@@ -56,11 +82,42 @@ class Shard:
 
 
 @dataclasses.dataclass(frozen=True)
+class WireLayout:
+    """Precomputed flat offsets of a plan's packed wire format.
+
+    One layout per wire dtype (cached on the plan).  All fields are
+    host-side metadata; the two index arrays are jit constants, so
+    ``pack``/``unpack`` trace to a single fused gather each.
+    """
+
+    dtype: Any                                # wire buffer dtype
+    total_elems: int                          # real elements (no padding)
+    total_rows: int                           # wire buffer rows (512 lanes)
+    shard_row_start: Tuple[int, ...]          # first wire row of each shard
+    shard_rows: Tuple[int, ...]               # rows per shard (8-aligned)
+    slice_offsets: Tuple[Tuple[int, ...], ...]  # per shard: element offset
+                                              # of each slice in the shard's
+                                              # flat region
+    pack_idx: jax.Array                       # (total_rows*512,) wire pos ->
+                                              # canonical flat pos; padding
+                                              # points at slot total_elems
+    unpack_idx: jax.Array                     # (total_elems,) canonical flat
+                                              # pos -> wire pos
+
+    @property
+    def total_wire(self) -> int:
+        return self.total_rows * WIRE_LANES
+
+
+@dataclasses.dataclass(frozen=True)
 class ShardPlan:
     n_shards: int
     treedef: Any
     leaf_shapes: Tuple[Tuple[int, ...], ...]
     shards: Tuple[Shard, ...]
+    leaf_dtypes: Tuple[Any, ...] = ()
+    _wire_layouts: Dict[Any, WireLayout] = dataclasses.field(
+        default_factory=dict, compare=False, repr=False)
 
     # -- data movement -----------------------------------------------------
     def split(self, tree: Tree) -> List[List[jax.Array]]:
@@ -104,10 +161,176 @@ class ShardPlan:
             if len(by_start) == 1:
                 (leaf,) = by_start.values()
             else:
+                WIRE.leaf_concats += 1
                 leaf = jnp.concatenate(
                     [by_start[s] for s in sorted(by_start)], axis=0)
             leaves.append(leaf)
         return self.treedef.unflatten(leaves)
+
+    # -- packed wire format --------------------------------------------------
+    def piece_shape(self, sl: LeafSlice) -> Tuple[int, ...]:
+        """Array shape of one slice as it travels on the wire."""
+        shape = self.leaf_shapes[sl.leaf]
+        if sl.whole:
+            return shape
+        return (sl.stop - sl.start,) + shape[1:]
+
+    def _resolve_wire_dtype(self, dtype) -> Any:
+        """None -> the shared ``repro.wireformat`` rule: a uniform tree
+        keeps its dtype on the wire, mixed trees promote to f32."""
+        if dtype is not None:
+            return jnp.dtype(dtype)
+        return resolve_wire_dtype((jnp.dtype(d) for d in self.leaf_dtypes),
+                                  default=jnp.dtype(jnp.float32))
+
+    def wire_layout(self, dtype=None) -> WireLayout:
+        """The (cached) packed layout for one wire dtype."""
+        wdt = self._resolve_wire_dtype(dtype)
+        layout = self._wire_layouts.get(wdt)
+        if layout is None:
+            layout = self._build_wire_layout(wdt)
+            self._wire_layouts[wdt] = layout
+        return layout
+
+    def _build_wire_layout(self, wdt) -> WireLayout:
+        sizes = [math.prod(s) if s else 1 for s in self.leaf_shapes]
+        leaf_off = np.concatenate([[0], np.cumsum(sizes)])
+        total = int(leaf_off[-1])
+        def shard_region_rows(n_elems: int) -> int:
+            if n_elems == 0:
+                return 0
+            raw = -(-n_elems // WIRE_LANES)              # ceil to full lanes
+            return -(-raw // WIRE_ROWS) * WIRE_ROWS      # ceil to 8-row tiles
+
+        rows = tuple(shard_region_rows(s.size) for s in self.shards)
+        row_start = tuple(int(x) for x in
+                          np.concatenate([[0], np.cumsum(rows)])[:-1])
+        total_rows = int(sum(rows))
+        pack_idx = np.full(total_rows * WIRE_LANES, total, np.int32)
+        unpack_idx = np.empty(total, np.int32)
+        slice_offsets: List[Tuple[int, ...]] = []
+        for j, shard in enumerate(self.shards):
+            base = row_start[j] * WIRE_LANES
+            off = 0
+            offs = []
+            for sl in shard.slices:
+                shape = self.leaf_shapes[sl.leaf]
+                row_elems = math.prod(shape[1:]) if len(shape) > 1 else 1
+                canon0 = int(leaf_off[sl.leaf]) + sl.start * row_elems
+                span = np.arange(canon0, canon0 + sl.size, dtype=np.int32)
+                pack_idx[base + off:base + off + sl.size] = span
+                unpack_idx[span] = np.arange(base + off,
+                                             base + off + sl.size,
+                                             dtype=np.int32)
+                offs.append(off)
+                off += sl.size
+            slice_offsets.append(tuple(offs))
+        return WireLayout(dtype=wdt, total_elems=total,
+                          total_rows=total_rows,
+                          shard_row_start=row_start, shard_rows=rows,
+                          slice_offsets=tuple(slice_offsets),
+                          pack_idx=jnp.asarray(pack_idx),
+                          unpack_idx=jnp.asarray(unpack_idx))
+
+    def pack(self, tree: Tree, dtype=None) -> jax.Array:
+        """Tree -> one (total_rows, 512) wire buffer.
+
+        One concatenate (canonical flat order) + one precomputed gather
+        (wire order, zero-padded shard regions).  Jittable; inside a jit
+        the whole thing fuses into a single pass over the data.
+        """
+        layout = self.wire_layout(dtype)
+        leaves = jax.tree_util.tree_leaves(tree)
+        if len(leaves) != len(self.leaf_shapes):
+            raise ValueError(
+                f"tree has {len(leaves)} leaves, plan was built for "
+                f"{len(self.leaf_shapes)}")
+        for i, (x, shape) in enumerate(zip(leaves, self.leaf_shapes)):
+            # Size mismatches must not reach the gather: jnp.take's
+            # default clip mode would silently clamp out-of-range
+            # indices into a well-shaped but garbage wire buffer.
+            if tuple(x.shape) != shape:
+                raise ValueError(f"leaf {i}: shape {tuple(x.shape)} does "
+                                 f"not match plan shape {shape}")
+        WIRE.packs += 1
+        WIRE.gathers += 1
+        flats = [x.reshape(-1).astype(layout.dtype) for x in leaves]
+        flats.append(jnp.zeros((1,), layout.dtype))   # padding slot
+        if len(flats) > 2:
+            WIRE.leaf_concats += 1
+        flat = jnp.concatenate(flats)
+        wire = jnp.take(flat, layout.pack_idx, axis=0)
+        return wire.reshape(layout.total_rows, WIRE_LANES)
+
+    def unpack(self, wire: jax.Array, dtype=None) -> Tree:
+        """Inverse of ``pack``: one gather + per-leaf slice views."""
+        layout = self.wire_layout(dtype)
+        if wire.shape != (layout.total_rows, WIRE_LANES):
+            raise ValueError(
+                f"wire buffer {wire.shape} does not match layout "
+                f"({layout.total_rows}, {WIRE_LANES})")
+        WIRE.unpacks += 1
+        WIRE.gathers += 1
+        flat = jnp.take(wire.reshape(-1), layout.unpack_idx, axis=0)
+        leaves = []
+        off = 0
+        dtypes = self.leaf_dtypes or (jnp.float32,) * len(self.leaf_shapes)
+        for shape, dt in zip(self.leaf_shapes, dtypes):
+            size = math.prod(shape) if shape else 1
+            leaves.append(flat[off:off + size].reshape(shape).astype(dt))
+            off += size
+        return self.treedef.unflatten(leaves)
+
+    def shard_wire(self, wire: jax.Array, shard: int, dtype=None) -> jax.Array:
+        """Shard ``shard``'s (rows, 512) region — a pure row-slice view."""
+        layout = self.wire_layout(dtype)
+        start = layout.shard_row_start[shard]
+        return wire[start:start + layout.shard_rows[shard]]
+
+    def shard_wires(self, wire: jax.Array, dtype=None) -> List[jax.Array]:
+        return [self.shard_wire(wire, j, dtype) for j in range(self.n_shards)]
+
+    def split_packed(self, tree: Tree, dtype=None) -> List[jax.Array]:
+        """``pack`` + per-shard views: the packed analogue of ``split``."""
+        return self.shard_wires(self.pack(tree, dtype), dtype)
+
+    def assemble_packed(self, shard_bufs: Sequence[jax.Array],
+                        dtype=None) -> Tree:
+        """Inverse of ``split_packed``: concat shard regions + ``unpack``."""
+        layout = self.wire_layout(dtype)
+        for j, buf in enumerate(shard_bufs):
+            if buf.shape != (layout.shard_rows[j], WIRE_LANES):
+                raise ValueError(
+                    f"shard {j}: buffer {buf.shape} does not match layout "
+                    f"({layout.shard_rows[j]}, {WIRE_LANES})")
+        bufs = [b for b in shard_bufs if b.shape[0]]
+        wire = bufs[0] if len(bufs) == 1 else jnp.concatenate(bufs)
+        return self.unpack(wire, dtype)
+
+    def shard_pieces_from_wire(self, buf: jax.Array, shard: int,
+                               dtype=None) -> List[jax.Array]:
+        """One shard's piece list (tree wire format) out of its packed
+        region — per-slice views, no concatenation."""
+        layout = self.wire_layout(dtype)
+        WIRE.unpacks += 1
+        flat = buf.reshape(-1)
+        dtypes = self.leaf_dtypes or (jnp.float32,) * len(self.leaf_shapes)
+        out = []
+        for sl, off in zip(self.shards[shard].slices,
+                           layout.slice_offsets[shard]):
+            shape = self.piece_shape(sl)
+            out.append(flat[off:off + sl.size].reshape(shape)
+                       .astype(dtypes[sl.leaf]))
+        return out
+
+    def pack_shard_pieces(self, pieces: Sequence[jax.Array], shard: int,
+                          dtype=None) -> jax.Array:
+        """One shard's piece list -> its (rows, 512) packed region."""
+        layout = self.wire_layout(dtype)
+        rows = layout.shard_rows[shard]
+        if not pieces:
+            return jnp.zeros((rows, WIRE_LANES), layout.dtype)
+        return pack_flat(pieces, layout.dtype, rows=rows)
 
     # -- introspection -------------------------------------------------------
     @property
@@ -181,4 +404,5 @@ def build_shard_plan(tree: Tree, n_shards: int, *,
               size=sizes[j])
         for j in range(n_shards))
     return ShardPlan(n_shards=n_shards, treedef=treedef,
-                     leaf_shapes=shapes, shards=shards)
+                     leaf_shapes=shapes, shards=shards,
+                     leaf_dtypes=tuple(jnp.dtype(x.dtype) for x in leaves))

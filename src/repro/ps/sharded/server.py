@@ -31,6 +31,30 @@ piece list through its ``ServerOptimizer`` (bitwise-identical to the
 monolithic server), ``apply_mode='fused'`` keeps params+momentum packed
 in one lane-aligned (rows, 512) buffer and folds the whole shard through
 a single Pallas ``fused_update`` launch per push.
+
+Packed wire format (the zero-repack hot path)
+---------------------------------------------
+``push``/``pull`` speak the *tree* wire format: per-leaf arrays, split
+and reassembled on every hop.  ``push_packed``/``pull_packed`` speak the
+plan's packed wire format instead — the worker packs its gradients once
+(inside its jitted step) and every later hop is layout-preserving:
+
+  * ``push_packed`` slices the incoming wire buffer into per-shard
+    row-range *views* (``ShardPlan.shard_wire``) — zero host-side
+    per-leaf concatenations on the server, asserted by the
+    ``repro.perfcount`` probes,
+  * each shard folds its region straight through ONE ``fused_update``
+    launch (no ``pack_shard`` per push), plus at most one fused
+    compression launch (``wire_compression=``) with per-(worker, shard)
+    error-feedback buffers kept in wire layout,
+  * ``pull_packed`` serves a version-keyed packed snapshot: per-shard
+    buffers are reference-grabbed under their own locks, the full wire
+    buffer is concatenated OUTSIDE any lock and cached until some shard
+    version moves.
+
+Tree-format ``pull`` in fused mode also rebuilds its per-shard piece
+cache outside the shard lock, so a pull after an apply never stalls
+concurrent pushes to that shard while it unpacks.
 """
 
 from __future__ import annotations
@@ -48,6 +72,7 @@ from repro.optim.compression import Compressor
 from repro.ps.metrics import RunMetrics
 from repro.ps.server import ServerOptimizer
 from repro.ps.sharded.plan import ShardPlan, build_shard_plan
+from repro.wireformat import WIRE_LANES
 
 Params = Any
 Grads = Any
@@ -56,10 +81,12 @@ Grads = Any
 class _ShardState:
     """Everything one shard owns.  All mutation under ``self.cond``."""
 
-    def __init__(self, index: int, pieces: List[jax.Array],
+    def __init__(self, index: int, plan: ShardPlan,
+                 pieces: List[jax.Array],
                  policy: SyncPolicy, optimizer: ServerOptimizer,
                  workers: Sequence[int], apply_mode: str):
         self.index = index
+        self.plan = plan
         self.cond = threading.Condition()
         self.policy = policy
         self.optimizer = optimizer
@@ -68,15 +95,13 @@ class _ShardState:
                                   n_workers=len(list(workers)))
         self.version = 0
         self.apply_mode = apply_mode
-        self.shapes = [p.shape for p in pieces]
-        self.dtypes = [p.dtype for p in pieces]
         if apply_mode == "fused":
-            # Kernel imports stay local to the fused path so plain
-            # `import repro.ps` never pulls in the Pallas kernel stack.
-            from repro.kernels.fused_update import pack_shard
-            # Params + momentum stay resident in the packed kernel layout;
-            # unpacked pieces are a cache rebuilt at most once per version.
-            self._packed_p = pack_shard(pieces)
+            # Params + momentum stay resident in the plan's wire layout
+            # (8-row-aligned (rows, 512) region), so an incoming packed
+            # push folds in directly with zero re-packing; unpacked
+            # pieces are a cache rebuilt at most once per version —
+            # OUTSIDE the shard lock (see ``_shard_snapshot``).
+            self._packed_p = plan.pack_shard_pieces(pieces, index)
             self._packed_m = jnp.zeros_like(self._packed_p)
             self._pieces: Optional[List[jax.Array]] = list(pieces)
         else:
@@ -85,12 +110,12 @@ class _ShardState:
     # -- weight access (call under self.cond) -------------------------------
     def pieces(self) -> List[jax.Array]:
         if self._pieces is None:  # fused mode, invalidated by an apply
-            from repro.kernels.fused_update import unpack_shard
-            self._pieces = unpack_shard(self._packed_p, self.shapes,
-                                        self.dtypes)
+            self._pieces = self.plan.shard_pieces_from_wire(
+                self._packed_p, self.index)
         return self._pieces
 
     def apply(self, grad_pieces: List[jax.Array], staleness: int) -> None:
+        """Tree-wire apply: one piece list, optimizer step or pack+fold."""
         if not grad_pieces:
             # Empty shard (more shards than pieces): the gate/version
             # bookkeeping stays uniform, there is just nothing to fold in
@@ -98,18 +123,31 @@ class _ShardState:
             self.version += 1
             return
         if self.apply_mode == "fused":
-            from repro.kernels import ops as kops
-            from repro.kernels.fused_update import pack_shard
-            opt = self.optimizer
-            scale = (1.0 / (1.0 + staleness)
-                     if opt.staleness_damping else 1.0)
-            self._packed_p, self._packed_m = kops.fused_update(
-                self._packed_p, self._packed_m, pack_shard(grad_pieces),
-                lr=opt.lr, beta=opt.momentum, scale=scale)
-            self._pieces = None
+            self.apply_packed(
+                self.plan.pack_shard_pieces(grad_pieces, self.index),
+                staleness)
         else:
             self._pieces = self.optimizer.step(self.pieces(), grad_pieces,
                                                staleness)
+            self.version += 1
+
+    def apply_packed(self, wire_g: jax.Array, staleness: int) -> None:
+        """Packed-wire apply: fold the shard's (rows, 512) gradient region
+        straight through one ``fused_update`` launch — no per-leaf work.
+        Fused mode only (``push_packed`` guards at the server boundary)."""
+        if wire_g.shape[0] == 0:      # empty shard
+            self.version += 1
+            return
+        # Kernel imports stay local to the fused path so plain
+        # `import repro.ps` never pulls in the Pallas kernel stack.
+        from repro.kernels import ops as kops
+        opt = self.optimizer
+        scale = (1.0 / (1.0 + staleness)
+                 if opt.staleness_damping else 1.0)
+        self._packed_p, self._packed_m = kops.fused_update(
+            self._packed_p, self._packed_m, wire_g,
+            lr=opt.lr, beta=opt.momentum, scale=scale)
+        self._pieces = None
         self.version += 1
 
 
@@ -129,20 +167,26 @@ class ShardedParameterServer:
                  gating: str = "sharded",
                  apply_mode: str = "tree",
                  compressor: Optional[Compressor] = None,
+                 wire_compression: Optional[str] = None,
+                 topk_fraction: float = 0.05,
                  clock: Callable[[], float] = time.monotonic):
         if gating not in ("sharded", "global"):
             raise ValueError(f"unknown gating mode {gating!r}")
         if apply_mode not in ("tree", "fused"):
             raise ValueError(f"unknown apply mode {apply_mode!r}")
+        if wire_compression not in (None, "none", "", "int8", "topk"):
+            raise ValueError(
+                f"unknown wire compression {wire_compression!r}")
         self.plan: ShardPlan = build_shard_plan(
             params, n_shards, split_oversized=split_oversized)
         self.gating = gating
         self.n_shards = n_shards
+        self.apply_mode = apply_mode
         workers = range(n_workers)
         pieces = self.plan.split(params)
         self.shards: List[_ShardState] = [
-            _ShardState(j, pieces[j], policy_factory(), optimizer_factory(),
-                        workers, apply_mode)
+            _ShardState(j, self.plan, pieces[j], policy_factory(),
+                        optimizer_factory(), workers, apply_mode)
             for j in range(n_shards)]
         if gating == "global":
             self._gate_policy = policy_factory()
@@ -156,11 +200,40 @@ class ShardedParameterServer:
                            if compressor is not None
                            and compressor.name != "none" else None)
         self._err: Dict[int, List[Any]] = {}   # worker -> per-shard err state
+        # Packed-path fused wire compression: per-(worker, shard) f32
+        # error-feedback buffers, kept in wire layout.
+        from repro.optim.compression import make_packed_compressor
+        self.wire_compression = make_packed_compressor(
+            wire_compression, fraction=topk_fraction)
+        self._wire_err: Dict[int, Dict[int, jax.Array]] = {}
+        # Version-keyed packed snapshot cache for ``pull_packed``.
+        self._snap_lock = threading.Lock()
+        self._snap_key: Optional[tuple] = None
+        self._snap_wire: Optional[jax.Array] = None
         self._clock = clock
         self._t0 = clock()
         self.stopped = False
 
     # -- worker API ----------------------------------------------------------
+    def _shard_snapshot(self, st: _ShardState) -> List[jax.Array]:
+        """One shard's piece list, unpacking OUTSIDE the shard lock.
+
+        In fused mode an apply invalidates the piece cache; rebuilding it
+        while holding ``st.cond`` would stall every concurrent push to
+        that shard for the full unpack.  Instead: grab the (immutable)
+        packed buffer + version under the lock, unpack unlocked, and
+        install the cache only if the shard has not moved meanwhile.
+        """
+        with st.cond:
+            if st._pieces is not None:
+                return list(st._pieces)
+            packed, version = st._packed_p, st.version
+        pieces = self.plan.shard_pieces_from_wire(packed, st.index)
+        with st.cond:
+            if st.version == version and st._pieces is None:
+                st._pieces = list(pieces)
+        return pieces
+
     def pull(self, worker: int) -> Params:
         """Reassemble the full pytree from per-shard snapshots.
 
@@ -170,11 +243,40 @@ class ShardedParameterServer:
         is internally consistent; cross-shard skew is bounded by the
         gating policies).
         """
-        snaps = []
+        return self.plan.assemble(
+            [self._shard_snapshot(st) for st in self.shards])
+
+    def pull_packed(self, worker: int = -1) -> jax.Array:
+        """Full (total_rows, 512) wire snapshot of the parameters.
+
+        Per-shard packed buffers are reference-grabbed under their own
+        locks (jax arrays are immutable, so a reference IS a snapshot);
+        the concatenation into one wire buffer happens OUTSIDE any shard
+        lock and is cached keyed by the shard-version vector, so pulls
+        between applies are a dictionary hit.
+        """
+        if self.apply_mode != "fused":
+            raise ValueError("pull_packed requires apply_mode='fused' "
+                             "(tree mode has no resident packed store)")
+        snaps, versions = [], []
         for st in self.shards:
             with st.cond:
-                snaps.append(list(st.pieces()))
-        return self.plan.assemble(snaps)
+                snaps.append(st._packed_p)
+                versions.append(st.version)
+        key = tuple(versions)
+        with self._snap_lock:
+            if self._snap_key == key:
+                return self._snap_wire
+        bufs = [b for b in snaps if b.shape[0]]
+        wire = bufs[0] if len(bufs) == 1 else jnp.concatenate(bufs)
+        with self._snap_lock:
+            # A slower concurrent pull may finish its concat AFTER a
+            # fresher one: only install if some shard moved past the
+            # cached snapshot, so the cache never goes backwards.
+            cached = self._snap_key
+            if cached is None or any(n > c for n, c in zip(key, cached)):
+                self._snap_key, self._snap_wire = key, wire
+        return wire
 
     def push(self, worker: int, grads: Grads) -> None:
         """Split grads by the plan and push shard-by-shard.
@@ -191,6 +293,48 @@ class ShardedParameterServer:
         pieces_per_shard = self.plan.split(grads)
         if self.compressor is not None:
             pieces_per_shard = self._compress(worker, pieces_per_shard)
+        self._push_payloads(worker, pieces_per_shard, packed=False)
+
+    def push_packed(self, worker: int, wire) -> None:
+        """Packed-wire push: the zero-repack hot path.
+
+        ``wire`` is either the full (total_rows, 512) buffer (the worker
+        packed once in its jitted step) or a list of per-shard regions.
+        The server only takes row-range VIEWS — no per-leaf concatenate,
+        no ``pack_shard`` — and each shard folds its region through one
+        ``fused_update`` launch (plus one fused-compression launch when
+        ``wire_compression`` is set).  Gating/metrics semantics are
+        identical to ``push``.
+        """
+        if self.apply_mode != "fused":
+            raise ValueError("push_packed requires apply_mode='fused' "
+                             "(tree mode has no resident packed store)")
+        layout = self.plan.wire_layout()
+        if isinstance(wire, (list, tuple)):
+            shard_bufs = list(wire)
+            if len(shard_bufs) != self.n_shards:
+                raise ValueError(f"got {len(shard_bufs)} shard buffers, "
+                                 f"plan has {self.n_shards} shards")
+            for j, buf in enumerate(shard_bufs):
+                if buf.shape != (layout.shard_rows[j], WIRE_LANES):
+                    raise ValueError(
+                        f"shard {j}: buffer {buf.shape} does not match "
+                        f"layout ({layout.shard_rows[j]}, {WIRE_LANES})")
+        else:
+            # Python slicing clamps, so an undersized buffer would
+            # silently hand trailing shards a (0, 512) "empty" region
+            # and drop their updates — reject it up front.
+            if wire.shape != (layout.total_rows, WIRE_LANES):
+                raise ValueError(
+                    f"wire buffer {wire.shape} does not match layout "
+                    f"({layout.total_rows}, {WIRE_LANES})")
+            shard_bufs = self.plan.shard_wires(wire)
+        if self.wire_compression is not None:
+            shard_bufs = self._compress_packed(worker, shard_bufs)
+        self._push_payloads(worker, shard_bufs, packed=True)
+
+    def _push_payloads(self, worker: int, payloads: Sequence[Any],
+                       packed: bool) -> None:
         order = range(self.n_shards)
         now = self._clock() - self._t0
         # Global mode: the gate decides FIRST (monolithic order — decide,
@@ -204,7 +348,7 @@ class ShardedParameterServer:
         total_wait = 0.0
         for j in order:
             stale, applied, credit, waited = self._push_shard(
-                j, worker, pieces_per_shard[j], gate_dec, gate_stale)
+                j, worker, payloads[j], packed, gate_dec, gate_stale)
             max_stale = max(max_stale, stale)
             any_applied = any_applied or applied
             any_credit = any_credit or credit
@@ -218,7 +362,8 @@ class ShardedParameterServer:
             if total_wait > 0:
                 self.metrics.record_wait(worker, total_wait)
 
-    def _push_shard(self, j: int, worker: int, grad_pieces: List[jax.Array],
+    def _push_shard(self, j: int, worker: int, payload: Any,
+                    packed: bool = False,
                     gate_dec: Optional[Decision] = None,
                     gate_stale: Optional[int] = None):
         st = self.shards[j]
@@ -237,7 +382,10 @@ class ShardedParameterServer:
                                credit_used=gate_dec.credit_used)
                 apply_staleness = gate_stale
             if dec.apply_update:
-                st.apply(grad_pieces, apply_staleness)
+                if packed:
+                    st.apply_packed(payload, apply_staleness)
+                else:
+                    st.apply(payload, apply_staleness)
             st.metrics.record_push(worker, rec.staleness,
                                    applied=dec.apply_update,
                                    credit=dec.credit_used, time=now)
@@ -285,6 +433,25 @@ class ShardedParameterServer:
         self._err[worker] = err
         return out
 
+    def _compress_packed(self, worker: int,
+                         shard_bufs: List[jax.Array]) -> List[jax.Array]:
+        """Fused wire compression: ONE kernel launch per non-empty shard
+        (quantize + dequant + error feedback in a single VMEM pass),
+        with per-(worker, shard) f32 error buffers in wire layout."""
+        state = self._wire_err.setdefault(worker, {})
+        out = []
+        for j, buf in enumerate(shard_bufs):
+            if buf.shape[0] == 0:
+                out.append(buf)
+                continue
+            err = state.get(j)
+            if err is None:
+                err = jnp.zeros(buf.shape, jnp.float32)
+            buf, err = self.wire_compression.apply(buf, err)
+            state[j] = err
+            out.append(buf)
+        return out
+
     def record_loss(self, step: int, loss: float) -> None:
         with self._metrics_lock:
             now = self._clock() - self._t0
@@ -305,6 +472,7 @@ class ShardedParameterServer:
         with self._metrics_lock:
             self.metrics.n_workers = len(self.shards[0].tracker.workers)
         self._err.pop(worker, None)
+        self._wire_err.pop(worker, None)
 
     def remove_worker(self, worker: int) -> None:
         """Departure must not stall ANY shard's barrier: drop the worker
@@ -321,6 +489,7 @@ class ShardedParameterServer:
         with self._metrics_lock:
             self.metrics.n_workers = len(self.shards[0].tracker.workers)
         self._err.pop(worker, None)
+        self._wire_err.pop(worker, None)
 
     def stop(self) -> None:
         self.stopped = True

@@ -11,6 +11,14 @@ batches come from a per-worker data shard (data parallelism, §I).  A
 ``(speed_factor − 1) × measured_compute`` per iteration — this emulates
 the paper's heterogeneous cluster (GTX1060 vs GTX1080Ti) on one machine
 without depending on scheduler noise.
+
+``wire_format='packed'`` switches the worker onto the zero-repack hot
+path: it pulls the server's packed (rows, 512) wire buffer
+(``pull_packed``), hands it to ``step_fn`` unchanged (the jitted step
+unpacks, differentiates and re-packs in one fused program — see
+``repro.launch.train.train_ps``), and pushes the packed gradient buffer
+back (``push_packed``).  The pytree<->wire boundary is crossed exactly
+once per direction, inside the worker's jit.
 """
 
 from __future__ import annotations
@@ -29,8 +37,11 @@ class PSWorker(threading.Thread):
                  step_fn: StepFn, batches: Iterator[Any], n_iterations: int,
                  *, speed_factor: float = 1.0,
                  loss_from_aux: Optional[Callable[[Any], float]] = None,
+                 wire_format: str = "tree",
                  name: Optional[str] = None):
         super().__init__(name=name or f"ps-worker-{worker_id}", daemon=True)
+        if wire_format not in ("tree", "packed"):
+            raise ValueError(f"unknown wire format {wire_format!r}")
         self.worker_id = worker_id
         self.server = server
         self.step_fn = step_fn
@@ -38,6 +49,7 @@ class PSWorker(threading.Thread):
         self.n_iterations = n_iterations
         self.speed_factor = speed_factor
         self.loss_from_aux = loss_from_aux
+        self.wire_format = wire_format
         self.iterations_done = 0
         self.failure: Optional[BaseException] = None
         self._abort = threading.Event()
@@ -47,11 +59,14 @@ class PSWorker(threading.Thread):
         self._abort.set()
 
     def run(self) -> None:
+        packed = self.wire_format == "packed"
+        pull = self.server.pull_packed if packed else self.server.pull
+        push = self.server.push_packed if packed else self.server.push
         try:
             for it in range(self.n_iterations):
                 if self._abort.is_set() or self.server.stopped:
                     break
-                params = self.server.pull(self.worker_id)
+                params = pull(self.worker_id)
                 t0 = time.monotonic()
                 grads, aux = self.step_fn(params, next(self.batches))
                 grads = _block(grads)
@@ -60,7 +75,7 @@ class PSWorker(threading.Thread):
                     time.sleep(compute * (self.speed_factor - 1.0))
                 if self.loss_from_aux is not None:
                     self.server.record_loss(it, self.loss_from_aux(aux))
-                self.server.push(self.worker_id, grads)
+                push(self.worker_id, grads)
                 self.iterations_done += 1
         except BaseException as e:  # surfaced by join_all
             self.failure = e

@@ -1,0 +1,62 @@
+"""Shared constants, dtype policy and pack body of the packed wire format.
+
+One source of truth for the lane-aligned (rows, 512) layout that
+``ps/sharded/plan.py`` (kernel-free) and the Pallas kernels
+(``kernels/fused_update.py``, ``kernels/fused_compress.py``) both
+speak — keeping the two sides here means the wire dtype rule, the tile
+geometry and the flatten/concat/pad pipeline cannot drift apart between
+the tree-split and packed paths.
+
+Kept free of pallas imports so the ps layer stays importable without
+the kernel stack (plain jax.numpy is fine — ps already depends on it).
+"""
+
+from __future__ import annotations
+
+from typing import Iterable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.perfcount import WIRE
+
+#: Lane width of the packed wire buffer — the Pallas tile's last dim.
+WIRE_LANES = 512
+#: Sublane multiple shard regions pad to: (8, 512) f32 tiles land exactly.
+WIRE_ROWS = 8
+
+
+def pack_flat(leaves: Sequence[jax.Array], dtype,
+              rows: Optional[int] = None) -> jax.Array:
+    """Flatten + concatenate ``leaves`` into a (rows, WIRE_LANES) buffer.
+
+    ``rows=None`` pads to the next full lane row (the per-leaf-list
+    ``pack_shard`` contract); an explicit ``rows`` pads/pins to that row
+    count (a plan's 8-aligned shard region).  Bumps the perfcount
+    pack/concat probes — this is THE instrumented pytree->wire crossing.
+    """
+    WIRE.packs += 1
+    flats = [x.reshape(-1).astype(dtype) for x in leaves]
+    if len(flats) > 1:
+        WIRE.leaf_concats += 1
+    flat = flats[0] if len(flats) == 1 else jnp.concatenate(flats)
+    target = (rows * WIRE_LANES if rows is not None
+              else flat.size + (-flat.size) % WIRE_LANES)
+    if target < flat.size:
+        raise ValueError(f"{flat.size} elements do not fit in "
+                         f"{rows} x {WIRE_LANES} rows")
+    if target > flat.size:
+        flat = jnp.pad(flat, (0, target - flat.size))
+    return flat.reshape(-1, WIRE_LANES)
+
+
+def resolve_wire_dtype(dtypes: Iterable, default=None) -> Optional[object]:
+    """The wire dtype for a collection of leaf dtypes.
+
+    A uniform collection keeps its dtype on the wire (bf16 stays bf16
+    bitwise — no silent f32 round-trip); mixed collections promote to
+    ``default`` (the caller passes f32, the widest dtype the kernels
+    accumulate in).  Empty collections also yield ``default``.
+    """
+    dts = set(dtypes)
+    return dts.pop() if len(dts) == 1 else default
