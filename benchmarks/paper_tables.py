@@ -11,7 +11,7 @@ convergence rows run the threaded PS with real jitted steps)
 from __future__ import annotations
 
 import time
-from typing import Dict, List, Optional, Tuple
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,106 @@
+"""Perf-trajectory gate over the push/pull wire-format benchmark.
+
+CI calls this with the fresh ``BENCH_push_pull.json`` and (when the
+download step found one) the previous run's artifact.  Wall time on
+shared runners is noise, so the gate is on the *event counts* — the
+backend-independent per-push repack/launch numbers the packed format
+exists to eliminate:
+
+  1. zero-repack contract (absolute, always checked): the ``packed``
+     path performs 0 host-side repack events per push at every shard
+     count, and the derived ``target_met`` flag is true;
+  2. trajectory (only with ``--previous``): for every (path, shards)
+     row present in both reports, ``repack_events_per_push`` and
+     ``pallas_calls_per_push`` must not increase — a PR may make the
+     hot path cheaper, never quietly more chatty.
+
+Exit code 1 on any violation (the CI job fails), 0 otherwise.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, Tuple
+
+#: Counting events, so exact equality is meaningful; the epsilon only
+#: forgives float formatting, not a real extra event.
+EPS = 1e-6
+
+GATED_METRICS = ("repack_events_per_push", "pallas_calls_per_push")
+
+
+def _rows_by_key(report: dict) -> Dict[Tuple[str, int], dict]:
+    return {(r["path"], int(r["shards"])): r for r in report["rows"]}
+
+
+def check(current: dict, previous: dict | None) -> list:
+    failures = []
+    rows = _rows_by_key(current)
+    for (path, shards), row in sorted(rows.items()):
+        if path.startswith("packed") and \
+                row["repack_events_per_push"] > EPS:
+            failures.append(
+                f"zero-repack contract broken: {path} at S={shards} does "
+                f"{row['repack_events_per_push']:.2f} repack events/push "
+                f"(expected 0)")
+    if not current.get("derived", {}).get("target_met", False):
+        failures.append("derived.target_met is false "
+                        "(packed vs tree_fused repack target missed)")
+    if previous is not None:
+        prev_rows = _rows_by_key(previous)
+        for key in sorted(set(rows) & set(prev_rows)):
+            for metric in GATED_METRICS:
+                now, before = rows[key][metric], prev_rows[key][metric]
+                if now > before + EPS:
+                    failures.append(
+                        f"{key[0]} at S={key[1]}: {metric} regressed "
+                        f"{before:.2f} -> {now:.2f}")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current", help="fresh BENCH_push_pull.json")
+    ap.add_argument("--previous", default=None,
+                    help="prior run's artifact (omit on first run)")
+    args = ap.parse_args()
+
+    with open(args.current) as f:
+        current = json.load(f)
+    previous = None
+    if args.previous:
+        try:
+            with open(args.previous) as f:
+                previous = json.load(f)
+        except (OSError, ValueError) as e:
+            print(f"perf-gate: no usable previous artifact ({e}); "
+                  "checking absolute contract only")
+
+    rows = _rows_by_key(current)
+    prev_rows = _rows_by_key(previous) if previous else {}
+    print(f"{'path':>16} {'S':>3} {'repack/push':>14} {'launches/push':>14}")
+    for (path, shards), row in sorted(rows.items()):
+        marks = []
+        for metric in GATED_METRICS:
+            before = prev_rows.get((path, shards), {}).get(metric)
+            marks.append(f"{row[metric]:.2f}"
+                         + (f" (was {before:.2f})" if before is not None
+                            else ""))
+        print(f"{path:>16} {shards:>3} {marks[0]:>14} {marks[1]:>14}")
+
+    failures = check(current, previous)
+    if failures:
+        print("\nPERF GATE FAILED:")
+        for f_ in failures:
+            print(f"  - {f_}")
+        return 1
+    print("\nperf gate ok"
+          + (" (vs previous artifact)" if previous else
+             " (no previous artifact; absolute contract only)"))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -125,7 +125,9 @@ def bench_path(params, grads_seq, n_shards: int, path: str,
         for k, v in WIRE.delta(before).items():
             pull_events[k] += v
 
-    per = lambda ev: {k: v / n_pushes for k, v in ev.items()}
+    def per(ev):
+        return {k: v / n_pushes for k, v in ev.items()}
+
     pe, le = per(push_events), per(pull_events)
     repack = pe["packs"] + pe["unpacks"] + pe["leaf_concats"]
     return {

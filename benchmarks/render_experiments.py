@@ -3,11 +3,10 @@ dry-run JSON reports (single-pod terms + multi-pod compile status)."""
 
 from __future__ import annotations
 
-import json
 import os
 import re
 
-from benchmarks.roofline_table import REPORT, REPORT_MULTI, load, \
+from benchmarks.roofline_table import REPORT_MULTI, load, \
     markdown_table
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))

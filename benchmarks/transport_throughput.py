@@ -1,0 +1,258 @@
+"""Transport throughput: pushes/sec and bytes/sec per backend x paradigm.
+
+Each cell runs W workers against one fused-mode sharded server behind a
+``PSServerEndpoint``:
+
+  * backend   in {inproc, tcp, shmem} — inproc runs the worker loops on
+    threads (full frame codec, no OS transport: the serialization
+    baseline); tcp/shmem SPAWN real worker processes,
+  * paradigm  in {bsp, ssp, dssp} — the sync policy gating every push,
+  * compress  in {none, int8} — frame-level wire compression (the
+    transport axis; server-side error-feedback compression is the
+    ``push_pull_latency`` benchmark's axis).
+
+Workers rendezvous on a ready-event after HELLO so spawn/import time is
+excluded; each worker times its own pull+push loop and the cell's wall
+time is the slowest worker (the barrier semantics make that the honest
+number).  Bytes/sec comes from the parent-side ``repro.perfcount``
+TRANSPORT counters — server rx (push frames in) + tx (pull replies
+out), so every backend is counted at the same boundary.
+
+Emits machine-readable ``BENCH_transport.json`` plus the standard
+``name,us_per_call,derived`` CSV on stdout.  ``--smoke`` (CI) runs the
+tcp + shmem backends with a tiny model and few pushes.
+
+Keep this module import-light: spawned workers re-import it as
+``__main__``, and they only need numpy + the frame codec (jax stays a
+server-side import inside ``main``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import multiprocessing
+import queue as queue_mod
+import threading
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.perfcount import TRANSPORT
+from repro.transport import connect
+from repro.wireformat import HEADER_SIZE, WIRE_LANES
+
+
+def _bench_worker(address, worker_id: int, n_pushes: int, rows: int,
+                  compress: str, ready, queue) -> None:
+    """One worker's pull+push loop (runs in a thread or a spawned
+    process — jax-free either way).  Reports ("ready", w) once its
+    connection is live, then waits for the start event so spawn/import
+    time stays out of the measured loop."""
+    try:
+        client = connect(address, worker_id, compress=compress)
+        client.hello()
+        rng = np.random.RandomState(1000 + worker_id)
+        grads = rng.randn(rows, WIRE_LANES).astype(np.float32)
+        queue.put(("ready", worker_id, 0, 0.0, None))
+        ready.wait(timeout=120.0)
+        t0 = time.monotonic()
+        done = 0
+        for _ in range(n_pushes):
+            if client.pull_packed(copy=False) is None:
+                break
+            if not client.push_packed(grads):
+                done += 1
+                break
+            done += 1
+        elapsed = time.monotonic() - t0
+        client.bye()
+        client.close()
+        queue.put(("done", worker_id, done, elapsed, None))
+    except BaseException as e:  # surfaced by the parent
+        queue.put(("done", worker_id, 0, 0.0, repr(e)))
+
+
+def _make_server(params, paradigm: str, n_workers: int, n_shards: int):
+    from repro.core.policies import make_policy_factory
+    from repro.ps.server import ServerOptimizer
+    from repro.ps.sharded import ShardedParameterServer
+
+    return ShardedParameterServer(
+        params, make_policy_factory(paradigm, n_workers=n_workers,
+                                    staleness=2, s_lower=1, s_upper=3),
+        lambda: ServerOptimizer(lr=0.01, momentum=0.9),
+        n_workers, n_shards, apply_mode="fused")
+
+
+def bench_cell(params, backend: str, paradigm: str, compress: str,
+               n_workers: int, n_pushes: int,
+               n_shards: int) -> Dict[str, object]:
+    from repro.transport import PSServerEndpoint, make_transport
+
+    server = _make_server(params, paradigm, n_workers, n_shards)
+    endpoint = PSServerEndpoint(server)
+    transport = make_transport(backend, n_workers=n_workers)
+    transport.serve(endpoint)
+    rows = server.plan.wire_layout().total_rows
+
+    if backend == "inproc":
+        ready = threading.Event()
+        queue = queue_mod.Queue()
+        runners = [threading.Thread(
+            target=_bench_worker,
+            args=(transport.address(), w, n_pushes, rows, compress,
+                  ready, queue),
+            daemon=True) for w in range(n_workers)]
+    else:
+        ctx = multiprocessing.get_context("spawn")
+        ready = ctx.Event()
+        queue = ctx.Queue()
+        runners = [ctx.Process(
+            target=_bench_worker,
+            args=(transport.address(), w, n_pushes, rows, compress,
+                  ready, queue),
+            daemon=True) for w in range(n_workers)]
+
+    before = TRANSPORT.snapshot()
+    for r in runners:
+        r.start()
+    # Rendezvous: every worker sends exactly one pre-start message —
+    # "ready", or "done"-with-error if it died before the start line —
+    # so this loop terminates either way and the real error surfaces
+    # below instead of deadlocking the ready.wait.
+    results, n_ready = [], 0
+    while n_ready + len(results) < n_workers:
+        tag, w, done, elapsed, err = queue.get(timeout=300.0)
+        if tag == "ready":
+            n_ready += 1
+        else:
+            results.append((w, done, elapsed, err))
+    ready.set()
+    while len(results) < n_workers:
+        tag, w, done, elapsed, err = queue.get(timeout=300.0)
+        if tag == "done":
+            results.append((w, done, elapsed, err))
+    for r in runners:
+        r.join(timeout=30.0)
+    server.stop()
+    transport.shutdown()
+    delta = TRANSPORT.delta(before)
+
+    errors = [e for _, _, _, e in results if e]
+    if errors:
+        raise RuntimeError(f"{backend}/{paradigm}: worker failed: "
+                           f"{errors[0]}")
+    pushes = sum(d for _, d, _, _ in results)
+    wall = max(t for _, _, t, _ in results)
+    payload = rows * WIRE_LANES * (1 if compress == "int8" else 4)
+    # For tcp/shmem the clients live in child processes, so the parent's
+    # counters see exactly the server boundary: one rx per request, one
+    # tx per reply.  inproc clients share the parent's process-global
+    # counters, double-counting every frame (client encode + server
+    # decode, server encode + client decode) — halve to keep the
+    # backends comparable at the same boundary.
+    total_bytes = delta["bytes_rx"] + delta["bytes_tx"]
+    frames_rx = delta["frames_rx"]
+    if backend == "inproc":
+        total_bytes //= 2
+        frames_rx //= 2
+    return {
+        "backend": backend, "paradigm": paradigm, "compress": compress,
+        "n_workers": n_workers, "n_pushes": pushes, "wire_rows": rows,
+        "push_frame_bytes": HEADER_SIZE + payload,
+        "wall_s": wall,
+        "pushes_per_sec": pushes / wall if wall else 0.0,
+        "server_bytes_per_sec": total_bytes / wall if wall else 0.0,
+        "server_frames": frames_rx,
+        "header_rejects": delta["header_rejects"],
+    }
+
+
+def _bench_tree(scale: int):
+    """Small tail-heavy tree (a couple of matrices + small leaves) —
+    enough rows that frame size matters, small enough for CI."""
+    import jax.numpy as jnp
+
+    rng = np.random.RandomState(0)
+    tree = {}
+    for i in range(2):
+        tree[f"w{i}"] = jnp.asarray(
+            rng.randn(64 * scale, 128).astype(np.float32))
+    for i in range(6 * scale):
+        tree[f"b{i}"] = jnp.asarray(rng.randn(64).astype(np.float32))
+    return tree
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tcp+shmem, tiny model, few pushes (CI)")
+    ap.add_argument("--backends", nargs="*", default=None,
+                    choices=["inproc", "tcp", "shmem"])
+    ap.add_argument("--paradigms", nargs="*", default=None,
+                    choices=["bsp", "ssp", "dssp"])
+    ap.add_argument("--workers", type=int, default=None)
+    ap.add_argument("--pushes", type=int, default=None)
+    ap.add_argument("--shards", type=int, default=2)
+    ap.add_argument("--out", default="BENCH_transport.json")
+    args = ap.parse_args()
+
+    backends = args.backends or (["tcp", "shmem"] if args.smoke
+                                 else ["inproc", "tcp", "shmem"])
+    paradigms = args.paradigms or ["bsp", "ssp", "dssp"]
+    n_workers = args.workers or (2 if args.smoke else 4)
+    n_pushes = args.pushes or (6 if args.smoke else 40)
+    params = _bench_tree(1 if args.smoke else 4)
+
+    rows: List[Dict[str, object]] = []
+    for backend in backends:
+        for paradigm in paradigms:
+            for compress in ("none", "int8"):
+                rows.append(bench_cell(params, backend, paradigm, compress,
+                                       n_workers, n_pushes, args.shards))
+
+    def _cell(backend, paradigm, compress):
+        for r in rows:
+            if (r["backend"], r["paradigm"],
+                    r["compress"]) == (backend, paradigm, compress):
+                return r
+        return None
+
+    derived: Dict[str, object] = {}
+    base = _cell(backends[0], "dssp", "none")
+    comp = _cell(backends[0], "dssp", "int8")
+    if base and comp:
+        # int8 frames are 4x smaller; pushed frames/sec should not pay
+        # 4x for it — the compression axis the paper's DCN hop needs.
+        derived["int8_frame_shrink"] = (base["push_frame_bytes"]
+                                        / comp["push_frame_bytes"])
+    if _cell("shmem", "dssp", "none") and _cell("tcp", "dssp", "none"):
+        derived["shmem_vs_tcp_push_rate"] = (
+            _cell("shmem", "dssp", "none")["pushes_per_sec"]
+            / max(_cell("tcp", "dssp", "none")["pushes_per_sec"], 1e-9))
+
+    report = {
+        "bench": "transport_throughput",
+        "smoke": args.smoke,
+        "n_workers": n_workers,
+        "n_pushes_per_worker": n_pushes,
+        "rows": rows,
+        "derived": derived,
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2, default=float, allow_nan=False)
+
+    print("name,us_per_call,derived")
+    for r in rows:
+        name = f"transport_{r['backend']}_{r['paradigm']}_{r['compress']}"
+        us = (1e6 * r["wall_s"] / r["n_pushes"]) if r["n_pushes"] else 0.0
+        print(f"{name},{us:.0f},"
+              f"pushes_per_sec={r['pushes_per_sec']:.1f}"
+              f";mb_per_sec={r['server_bytes_per_sec'] / 1e6:.2f}")
+    print(f"# wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

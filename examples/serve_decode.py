@@ -38,7 +38,6 @@ def main() -> None:
     rows = chain.sample_rows(step=10_000, rows=np.arange(4))
     prompt_len, max_new = 16, 16
     prompts = jnp.asarray(rows[:, :prompt_len])
-    gold = rows[:, prompt_len:prompt_len + max_new]
 
     # ---- prefill: last-token logits + packed KV cache
     prefill = jax.jit(lambda p, t: transformer.forward_prefill(cfg, p, t))

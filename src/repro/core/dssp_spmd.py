@@ -28,14 +28,11 @@ times into (d, k) using the paper's simulated-timestamp argmin.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable, NamedTuple, Optional, Tuple
+from typing import Any, Callable, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.controller import SynchronizationController
-from repro.core.staleness import StalenessTracker
 
 Tree = Any
 
@@ -149,15 +146,21 @@ def cross_pod_sync(tree: Tree, mesh: jax.sharding.Mesh,
                    specs: Tree) -> Tree:
     """Average a pytree across the 'pod' mesh axis with shard_map manual
     over 'pod' only ('data'/'model' shardings pass through untouched)."""
-    from jax import shard_map
-    from jax.sharding import PartitionSpec as P
 
     def avg(t):
         return jax.tree_util.tree_map(
             lambda x: jax.lax.pmean(x, "pod"), t)
 
-    fn = shard_map(avg, mesh=mesh, in_specs=(specs,), out_specs=specs,
-                   axis_names=frozenset({"pod"}), check_vma=False)
+    try:  # jax >= 0.6: top-level API with per-axis manual mode
+        from jax import shard_map
+
+        fn = shard_map(avg, mesh=mesh, in_specs=(specs,), out_specs=specs,
+                       axis_names=frozenset({"pod"}), check_vma=False)
+    except ImportError:  # the experimental API this container ships
+        from jax.experimental.shard_map import shard_map
+
+        fn = shard_map(avg, mesh=mesh, in_specs=(specs,), out_specs=specs,
+                       check_rep=False)
     return fn(tree)
 
 

@@ -16,7 +16,7 @@ emits pseudo frame embeddings derived from the same stream.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import numpy as np
 

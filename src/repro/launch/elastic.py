@@ -18,14 +18,14 @@ tracker at runtime — ps/server.py); this module covers the SPMD path.
 
 from __future__ import annotations
 
-from typing import Any, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.launch.mesh import elastic_mesh
 from repro.models import registry
-from repro.models.params import sds_tree, spec_tree
+from repro.models.params import spec_tree
 from repro.models.sharding import rules_for_mesh
 
 

@@ -1,0 +1,236 @@
+"""Process worker pool: real OS processes driving the PS over a transport.
+
+The threaded ``PSWorker`` shares a Python heap with the server, so the
+packed wire buffer never actually crosses a process boundary and
+stragglers are simulated with sleeps against GIL-released compute.
+``ProcessWorkerPool`` spawns N *processes* instead: each one rebuilds
+the model deterministically from its ``WorkerTask`` spec (same
+``PRNGKey(0)`` init and ``ShardPlan`` as the parent — the plan is pure
+metadata, so both sides derive identical wire layouts), connects to the
+server's transport address, and runs the paper's worker loop
+
+    pull packed params -> jitted step (unpack, grad, re-pack) ->
+    push packed grads -> blocked until the sync policy releases it
+
+entirely in frame bytes.  A per-worker ``slowdown`` factor sleeps
+``(slowdown - 1) x measured_compute`` per iteration, which now creates
+*genuine* heterogeneous stragglers — separate interpreters, separate
+GILs, real wire in between — the regime DSSP's dynamic threshold is
+designed for.
+
+Workers are spawned (never forked): forking a process with a live JAX
+runtime is undefined behavior, and spawn also matches how a multi-host
+deployment would launch ranks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import multiprocessing
+import os
+import time
+import traceback
+from typing import Any, Dict, List, Optional, Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkerTask:
+    """Everything a spawned worker needs to rebuild its half of the run.
+
+    Must stay picklable and small — it crosses the spawn boundary, the
+    weights do not (the worker pulls them over the transport).
+    """
+
+    arch: str                 # repro.configs key, e.g. "xlstm-125m"
+    n_shards: int             # parent's ShardPlan arity (layout must match)
+    n_iterations: int
+    smoke: bool = True
+    seq_len: int = 64
+    global_batch: int = 8
+    data_seed: int = 0        # worker w streams shard seed data_seed+1+w
+    compress: str = "none"    # frame-level wire compression (int8)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class WorkerResult:
+    worker_id: int
+    iterations_done: int
+    error: Optional[str] = None      # traceback text for failed workers
+    exitcode: Optional[int] = None
+
+
+def _worker_main(task: Dict[str, Any], address, worker_id: int,
+                 slowdown: float, queue) -> None:
+    """Entry point of one spawned worker process."""
+    done = 0
+    try:
+        os.environ.setdefault("JAX_PLATFORMS", "cpu")
+        import functools
+
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+
+        from repro.configs import get_config, get_smoke_config
+        from repro.data.synthetic import DataConfig, batches
+        from repro.models import registry
+        from repro.ps.sharded.plan import build_shard_plan
+        from repro.transport import connect
+        from repro.wireformat import WIRE_LANES
+
+        cfg = (get_smoke_config(task["arch"]) if task["smoke"]
+               else get_config(task["arch"]))
+        data_cfg = DataConfig(vocab_size=cfg.vocab_size,
+                              seq_len=task["seq_len"],
+                              global_batch=task["global_batch"],
+                              seed=task["data_seed"] + 1 + worker_id)
+        loss_fn = registry.loss_fn(cfg)
+        params = registry.init_params(cfg, jax.random.PRNGKey(0))
+        plan = build_shard_plan(params, task["n_shards"])
+        layout = plan.wire_layout()
+        del params  # the live weights come over the wire
+
+        @functools.partial(jax.jit, donate_argnums=(1,))
+        def packed_step(wire_p, wire_g_prev, batch):
+            p = plan.unpack(wire_p)
+            (loss, _), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(p, batch)
+            return wire_g_prev.at[:].set(plan.pack(grads)), loss
+
+        client = connect(address, worker_id, compress=task["compress"])
+        rows = client.hello()
+        if rows != layout.total_rows:
+            raise ValueError(
+                f"server wire layout has {rows} rows, local plan derives "
+                f"{layout.total_rows} — task spec out of sync with server")
+        wire_g = jnp.zeros((layout.total_rows, WIRE_LANES), layout.dtype)
+        stream = batches(cfg, data_cfg)
+        try:
+            for it in range(task["n_iterations"]):
+                # copy=True (the default): on CPU, jnp.asarray may ALIAS
+                # host memory instead of copying, and a device buffer
+                # aliasing the shmem slot would outlive the RPC lifetime
+                # contract (and pin the mapping at close).
+                wire_np = client.pull_packed()
+                if wire_np is None:
+                    break  # server stopped
+                wire_p = jnp.asarray(wire_np)
+                batch = {k: jnp.asarray(v) for k, v in next(stream).items()}
+                t0 = time.monotonic()
+                wire_g, loss = packed_step(wire_p, wire_g, batch)
+                loss = float(jax.block_until_ready(loss))
+                compute = time.monotonic() - t0
+                if slowdown > 1.0:
+                    time.sleep(compute * (slowdown - 1.0))
+                client.record_loss(it, loss)
+                if not client.push_packed(np.asarray(wire_g), clock=it):
+                    done += 1
+                    break  # released with a STOP: training is over
+                done += 1
+        finally:
+            client.bye()
+            client.close()
+        queue.put(WorkerResult(worker_id, done))
+    except BaseException:
+        queue.put(WorkerResult(worker_id, done,
+                               error=traceback.format_exc()))
+        raise
+
+
+class ProcessWorkerPool:
+    """Spawn/join N transport workers with per-worker slowdown factors."""
+
+    def __init__(self, address, task: WorkerTask, n_workers: int, *,
+                 slowdowns: Optional[Sequence[float]] = None,
+                 mp_context: str = "spawn"):
+        if slowdowns is not None and len(slowdowns) != n_workers:
+            raise ValueError(f"{len(slowdowns)} slowdown factors for "
+                             f"{n_workers} workers")
+        self.address = address
+        self.task = task
+        self.n_workers = n_workers
+        self.slowdowns = list(slowdowns or [1.0] * n_workers)
+        self._ctx = multiprocessing.get_context(mp_context)
+        self._queue = self._ctx.Queue()
+        self.procs: List[multiprocessing.Process] = []
+
+    def start(self) -> None:
+        task = self.task.to_dict()
+        for w in range(self.n_workers):
+            p = self._ctx.Process(
+                target=_worker_main,
+                args=(task, self.address, w, self.slowdowns[w],
+                      self._queue),
+                name=f"ps-proc-worker-{w}", daemon=True)
+            p.start()
+            self.procs.append(p)
+
+    def join(self, timeout: float = 900.0, *,
+             endpoint=None) -> List[WorkerResult]:
+        """Join all workers; reap stragglers; surface per-worker results.
+
+        ``endpoint`` (a ``PSServerEndpoint``) gets ``on_disconnect`` for
+        every abnormal exit — transports without connection semantics
+        (shmem) cannot detect a dead peer themselves, and a corpse must
+        not keep its seat in the barrier group.
+        """
+        deadline = time.monotonic() + timeout
+        # Poll instead of a blocking per-process join: a worker that
+        # dies abnormally must release its barrier seat IMMEDIATELY
+        # (endpoint.on_disconnect), or gate-blocked survivors would
+        # wait on the corpse for the rest of the timeout.  tcp detects
+        # this by EOF on its own; shmem has no connection, so this loop
+        # is the only death detector it gets.
+        reported = set()
+        while time.monotonic() < deadline:
+            alive = False
+            for w, p in enumerate(self.procs):
+                if p.is_alive():
+                    alive = True
+                elif (p.exitcode not in (0, None) and w not in reported
+                        and endpoint is not None):
+                    endpoint.on_disconnect(w)
+                    reported.add(w)
+            if not alive:
+                break
+            time.sleep(0.05)
+        by_worker: Dict[int, WorkerResult] = {}
+        while not self._queue.empty():
+            r = self._queue.get_nowait()
+            by_worker[r.worker_id] = r
+        results = []
+        for w, p in enumerate(self.procs):
+            if p.is_alive():
+                p.terminate()
+                p.join(timeout=5.0)
+            r = by_worker.get(w) or WorkerResult(w, 0, error="no result "
+                                                 "(killed or timed out)")
+            r.exitcode = p.exitcode
+            if (r.error or p.exitcode not in (0, None)) \
+                    and endpoint is not None and w not in reported:
+                endpoint.on_disconnect(w)
+            results.append(r)
+        return results
+
+    def terminate(self) -> None:
+        for p in self.procs:
+            if p.is_alive():
+                p.terminate()
+        for p in self.procs:
+            p.join(timeout=5.0)
+
+    def alive(self) -> List[int]:
+        return [w for w, p in enumerate(self.procs) if p.is_alive()]
+
+
+def raise_on_failure(results: Sequence[WorkerResult]) -> None:
+    failed = [r for r in results if r.error]
+    if failed:
+        msgs = "\n".join(f"-- worker {r.worker_id} "
+                         f"(exit {r.exitcode}) --\n{r.error}"
+                         for r in failed)
+        raise RuntimeError(f"{len(failed)} worker process(es) failed:\n"
+                           f"{msgs}")

@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import argparse
 import time
-from typing import Any, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -21,7 +21,7 @@ import argparse
 import dataclasses
 import functools
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Callable, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -194,7 +194,8 @@ def train_ps(cfg, data_cfg: DataConfig, *, sync: str, n_steps: int,
              s_lower: int = 0, s_upper: int = 3,
              compressor: str = "none", apply_mode: str = "tree",
              gating: str = "sharded", straggler: float = 1.0,
-             wire_format: str = "tree",
+             wire_format: str = "tree", transport: str = "inproc",
+             arch: Optional[str] = None, smoke: bool = True,
              verbose: bool = False):
     """Real-training path through the sharded threaded parameter server.
 
@@ -212,6 +213,13 @@ def train_ps(cfg, data_cfg: DataConfig, *, sync: str, n_steps: int,
     own donated wire buffer — the pytree<->wire boundary is crossed once
     per direction per step, and the server never repacks.  The tree
     ``compressor`` becomes the server's fused wire compression.
+
+    ``transport='tcp'``/``'shmem'`` replaces the worker THREADS with
+    spawned worker PROCESSES (``repro.launch.proc_pool``) that speak the
+    packed frame protocol to a ``PSServerEndpoint`` — the same packed
+    buffer, now as bytes on a real wire, with ``straggler`` producing a
+    genuinely slower separate interpreter.  Implies the packed wire
+    format; ``arch`` must name the config so workers can rebuild it.
     """
     from repro.core.policies import make_policy_factory
     from repro.data.synthetic import batches as data_batches
@@ -221,6 +229,10 @@ def train_ps(cfg, data_cfg: DataConfig, *, sync: str, n_steps: int,
 
     if wire_format not in ("tree", "packed"):
         raise ValueError(f"unknown wire format {wire_format!r}")
+    if transport not in ("inproc", "tcp", "shmem"):
+        raise ValueError(f"unknown transport {transport!r}")
+    if transport != "inproc":
+        wire_format = "packed"  # frames carry the packed buffer only
     packed = wire_format == "packed"
     if packed and apply_mode == "tree":
         apply_mode = "fused"   # packed pushes fold through the kernel
@@ -236,13 +248,62 @@ def train_ps(cfg, data_cfg: DataConfig, *, sync: str, n_steps: int,
     policy_factory = make_policy_factory(
         sync, n_workers=n_workers, staleness=max(s_lower, 1),
         s_lower=s_lower, s_upper=s_upper)
+    # Where compression happens depends on where the wire is.  On the
+    # process transports, int8 compresses the FRAMES (bytes actually
+    # shrink on the OS wire; the codec dequantizes on receipt, so the
+    # server must not quantize again).  In-process, it is the server's
+    # fused error-feedback pass, as before.  topk has no frame-level
+    # encoding and stays server-side on every path.
+    frame_compress = ("int8" if transport != "inproc"
+                      and compressor == "int8" else "none")
+    wire_compression = (None if frame_compress != "none"
+                        else compressor if packed else None)
     server = ShardedParameterServer(
         params, policy_factory, lambda: ServerOptimizer(lr=lr),
         n_workers, n_shards, gating=gating, apply_mode=apply_mode,
         compressor=None if packed else make_compressor(compressor),
-        wire_compression=compressor if packed else None)
+        wire_compression=wire_compression)
     if verbose:
         print(server.plan.describe())
+
+    if transport != "inproc":
+        # ---- process-isolated path: bytes on a real wire ----
+        from repro.launch.proc_pool import (ProcessWorkerPool, WorkerTask,
+                                            raise_on_failure)
+        from repro.transport import PSServerEndpoint, make_transport
+
+        if arch is None:
+            raise ValueError("transport workers rebuild the model from its "
+                             "config name — pass arch=")
+        endpoint = PSServerEndpoint(server)
+        tp = make_transport(transport, n_workers=n_workers)
+        tp.serve(endpoint)
+        iters = max(1, n_steps // n_workers)
+        task = WorkerTask(arch=arch, n_shards=n_shards, n_iterations=iters,
+                          smoke=smoke,
+                          seq_len=data_cfg.seq_len,
+                          global_batch=data_cfg.global_batch,
+                          data_seed=data_cfg.seed,
+                          compress=frame_compress)
+        slowdowns = [straggler if w == n_workers - 1 else 1.0
+                     for w in range(n_workers)]
+        pool = ProcessWorkerPool(tp.address(), task, n_workers,
+                                 slowdowns=slowdowns)
+        pool.start()
+        try:
+            results = pool.join(timeout=1200.0, endpoint=endpoint)
+        finally:
+            server.stop()
+            tp.shutdown()
+            pool.terminate()
+        raise_on_failure(results)
+        if verbose:
+            m = server.metrics
+            done = sum(r.iterations_done for r in results)
+            print(f"workers={n_workers} ({transport}) iterations={done} "
+                  f"pushes={m.total_pushes} applied_shard_updates="
+                  f"{server.version} max_stale={m.max_staleness}")
+        return server
 
     if packed:
         plan = server.plan
@@ -343,11 +404,21 @@ def main() -> None:
                     choices=["sharded", "global"])
     ap.add_argument("--ps-straggler", type=float, default=1.0,
                     help="speed factor of the last PS worker (>1 = slower)")
+    ap.add_argument("--transport", default="inproc",
+                    choices=["inproc", "tcp", "shmem"],
+                    help="PS worker isolation: inproc = threads sharing "
+                         "the heap (the classic path); tcp/shmem = spawned "
+                         "worker PROCESSES pushing packed frames over a "
+                         "real wire (implies --ps-wire packed; enables "
+                         "--ps-shards 1 if unset)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
                           global_batch=args.batch)
+
+    if args.transport != "inproc" and args.ps_shards < 1:
+        args.ps_shards = 1  # process transports live in the PS layer
 
     if args.ps_shards >= 1:
         ignored = [flag for flag, on in (
@@ -371,7 +442,10 @@ def main() -> None:
                           apply_mode=args.ps_apply,
                           gating=args.ps_gating,
                           straggler=args.ps_straggler,
-                          wire_format=args.ps_wire, verbose=True)
+                          wire_format=args.ps_wire,
+                          transport=args.transport,
+                          arch=args.arch, smoke=args.smoke,
+                          verbose=True)
         losses = [l for _, _, l in server.metrics.loss_trajectory]
         if losses:
             print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f})")

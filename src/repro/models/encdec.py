@@ -13,7 +13,6 @@ output (computed at prefill, static afterwards).
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Tuple
 
 import jax
@@ -186,7 +185,6 @@ def prefill_cross_kv(cfg: ModelConfig, params: Dict[str, Any],
 def forward_decode(cfg: ModelConfig, params: Dict[str, Any],
                    token: jax.Array, cache: Dict[str, Any],
                    index: jax.Array) -> Tuple[jax.Array, Dict[str, Any]]:
-    b = token.shape[0]
     x = (L.embed(token, params["embed"])
          + params["pos_embed"][index][None, None]).astype(jnp.dtype(cfg.dtype))
 

@@ -16,7 +16,7 @@ sub-quadratic: only the few attention layers keep a full-length cache
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -27,7 +27,6 @@ from repro.models import ssm
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.models.params import ParamDef
-from repro.models.sharding import shard
 
 
 def _slot_kinds(cfg: ModelConfig):

@@ -257,7 +257,6 @@ def attention_block(cfg: ModelConfig, x: jax.Array, w: Dict[str, Any],
     With ``collect_kv`` also returns the post-rotary (k, v) — the prefill
     path stacks them into the serving KV cache."""
     b, l, _ = x.shape
-    hd = cfg.resolved_head_dim
     q = jnp.einsum("bld,dhk->blhk", x, w["wq"])
     k = jnp.einsum("bld,dhk->blhk", x, w["wk"])
     v = jnp.einsum("bld,dhk->blhk", x, w["wv"])

@@ -281,7 +281,6 @@ def mamba_block(cfg: ModelConfig, x: jax.Array, w: Dict[str, Any],
     b, l, d = x.shape
     di = cfg.expand * d
     ds = cfg.d_state
-    dt_rank = max(1, d // 16)
     xin, z = jnp.split(jnp.einsum("bld,de->ble", x, w["w_in"]), 2, axis=-1)
     xin = shard(xin, "batch", None, "model")
     xc, _ = _causal_conv(xin, w["conv_w"], w["conv_b"])

@@ -56,3 +56,37 @@ class HotPathCounters:
 #: Process-global counters — reset + snapshot around the region of
 #: interest (see ``benchmarks/push_pull_latency.py``).
 WIRE = HotPathCounters()
+
+
+@dataclasses.dataclass
+class TransportCounters:
+    """Bytes-on-the-wire accounting for the frame codec + transports.
+
+    Bumped at the ``repro.wireformat`` encode/decode boundary, so every
+    backend (tcp, shmem, the in-memory loopback) is counted the same
+    way.  ``header_rejects`` counts frames refused by header validation
+    (bad magic/version/dtype, length mismatch, truncation) — the
+    failure-path tests and the throughput benchmark read it.
+    Per-process like ``WIRE``: a worker process has its own counters.
+    """
+
+    frames_tx: int = 0
+    frames_rx: int = 0
+    bytes_tx: int = 0
+    bytes_rx: int = 0
+    header_rejects: int = 0
+
+    def reset(self) -> None:
+        for f in dataclasses.fields(self):
+            setattr(self, f.name, 0)
+
+    def snapshot(self) -> Dict[str, int]:
+        return {f.name: getattr(self, f.name)
+                for f in dataclasses.fields(self)}
+
+    def delta(self, before: Dict[str, int]) -> Dict[str, int]:
+        return {k: v - before.get(k, 0) for k, v in self.snapshot().items()}
+
+
+#: Process-global transport counters (see ``repro.wireformat``).
+TRANSPORT = TransportCounters()

@@ -278,6 +278,51 @@ class ShardedParameterServer:
                 self._snap_key, self._snap_wire = key, wire
         return wire
 
+    def pull_packed_shard(self, shard: int, worker: int = -1) -> jax.Array:
+        """One shard's resident (rows, 512) region — a reference IS a
+        consistent snapshot (jax arrays are immutable).  The per-shard
+        granularity the transport endpoints route on."""
+        if self.apply_mode != "fused":
+            raise ValueError("pull_packed_shard requires apply_mode='fused' "
+                             "(tree mode has no resident packed store)")
+        st = self.shards[shard]
+        with st.cond:
+            return st._packed_p
+
+    def push_packed_shard(self, worker: int, shard: int, buf) -> None:
+        """Single-shard packed push: the unit of per-shard endpoint
+        routing (``repro.transport``), where different shards of this
+        server live behind different endpoints.
+
+        Gating/apply semantics are the sharded ones — this shard's
+        policy gates the worker independently.  ``gating='global'`` is
+        rejected: the global gate's decision spans all shards of one
+        logical push, which no longer exists once shards are routed to
+        different endpoints.
+
+        Accounting is per shard ONLY (``shard_metrics()``): one logical
+        gradient routed across S endpoints is S of these calls, and
+        folding each into the aggregate ``self.metrics`` would inflate
+        ``total_pushes``/staleness S-fold versus the same gradient
+        pushed through ``push_packed`` (which records the aggregate
+        once, max-staleness folded).
+        """
+        if self.apply_mode != "fused":
+            raise ValueError("push_packed_shard requires apply_mode='fused' "
+                             "(tree mode has no resident packed store)")
+        if self.gating == "global":
+            raise ValueError(
+                "per-shard routed pushes require gating='sharded' (the "
+                "global gate must see one push spanning all shards)")
+        layout = self.plan.wire_layout()
+        if buf.shape != (layout.shard_rows[shard], WIRE_LANES):
+            raise ValueError(
+                f"shard {shard}: buffer {buf.shape} does not match "
+                f"layout ({layout.shard_rows[shard]}, {WIRE_LANES})")
+        if self.wire_compression is not None:
+            buf = self._compress_packed_one(worker, shard, buf)
+        self._push_shard(shard, worker, buf, packed=True)
+
     def push(self, worker: int, grads: Grads) -> None:
         """Split grads by the plan and push shard-by-shard.
 
@@ -438,19 +483,20 @@ class ShardedParameterServer:
         """Fused wire compression: ONE kernel launch per non-empty shard
         (quantize + dequant + error feedback in a single VMEM pass),
         with per-(worker, shard) f32 error buffers in wire layout."""
+        return [self._compress_packed_one(worker, j, buf)
+                for j, buf in enumerate(shard_bufs)]
+
+    def _compress_packed_one(self, worker: int, shard: int,
+                             buf: jax.Array) -> jax.Array:
+        if buf.shape[0] == 0:
+            return buf
         state = self._wire_err.setdefault(worker, {})
-        out = []
-        for j, buf in enumerate(shard_bufs):
-            if buf.shape[0] == 0:
-                out.append(buf)
-                continue
-            err = state.get(j)
-            if err is None:
-                err = jnp.zeros(buf.shape, jnp.float32)
-            buf, err = self.wire_compression.apply(buf, err)
-            state[j] = err
-            out.append(buf)
-        return out
+        err = state.get(shard)
+        if err is None:
+            err = jnp.zeros(buf.shape, jnp.float32)
+        buf, err = self.wire_compression.apply(buf, err)
+        state[shard] = err
+        return buf
 
     def record_loss(self, step: int, loss: float) -> None:
         with self._metrics_lock:

@@ -18,9 +18,8 @@ with while-loop trip counts applied when derivable from scan bounds).
 from __future__ import annotations
 
 import dataclasses
-import math
 import re
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 # TPU v5e hardware constants (assignment brief)
 PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip

@@ -1,0 +1,177 @@
+"""Transport ABC + the worker-side RPC client.
+
+A ``Transport`` moves *frames* (``repro.wireformat``: 44-byte header +
+packed (rows, 512) body) between a worker and a ``PSServerEndpoint``.
+Three backends:
+
+  * ``inproc`` — in-memory loopback: the full encode/dispatch/decode
+    path with no OS transport underneath (the existing threaded path,
+    and the serialization-cost baseline for the throughput benchmark),
+  * ``tcp``    — length-prefixed frames over a socket; one server
+    thread per connection so a push blocked in the sync-policy gate
+    never stalls other workers,
+  * ``shmem``  — ``multiprocessing.shared_memory`` request/reply slots
+    for local workers: the frame body is written once into the segment
+    and parsed in place on the server (no intermediate buffering).
+
+Every backend's *address* is a small picklable tuple, so a spawned
+worker process can reconstruct its client with ``connect(address,
+worker_id)`` — see ``repro.launch.proc_pool``.
+
+The client side is deliberately jax-free: a worker or benchmark process
+frames numpy bytes; only the jitted step itself touches jax.
+"""
+
+from __future__ import annotations
+
+import abc
+from typing import Any, Optional, Tuple
+
+import numpy as np
+
+from repro.wireformat import (
+    MSG_BYE,
+    MSG_ECHO,
+    MSG_ERR,
+    MSG_HELLO,
+    MSG_LOSS,
+    MSG_PULL,
+    MSG_PUSH,
+    MSG_STOP,
+    Frame,
+    FrameError,
+    encode_frame,
+)
+
+
+class TransportClosed(ConnectionError):
+    """The peer went away (server shutdown, closed segment, dead socket)."""
+
+
+class Channel(abc.ABC):
+    """One request/reply lane between a client and an endpoint."""
+
+    @abc.abstractmethod
+    def request(self, data: bytes) -> Frame:
+        """Send one encoded frame, block for the reply frame."""
+
+    @abc.abstractmethod
+    def close(self) -> None:
+        """Release the lane (idempotent)."""
+
+
+class PSTransportClient:
+    """Parameter-server RPCs over any ``Channel``.
+
+    Mirrors the worker-facing surface of ``ParameterServer`` /
+    ``ShardedParameterServer`` (pull/push packed, record_loss, leave)
+    plus an ``echo`` diagnostic.  ``push_packed``/``pull_packed``
+    return ``False``/``None`` once the server has stopped — the worker
+    loop's clean-exit signal.
+    """
+
+    def __init__(self, channel: Channel, worker_id: int, *,
+                 compress: str = "none"):
+        self.channel = channel
+        self.worker_id = worker_id
+        self.compress = compress
+        self.server_rows: Optional[int] = None
+        self.clock = 0
+
+    # -- plumbing --------------------------------------------------------
+    def _request(self, frame: Frame, compress: str = "none") -> Frame:
+        reply = self.channel.request(encode_frame(frame, compress))
+        if reply.kind == MSG_ERR:
+            raise FrameError(f"server rejected frame: {reply.error}")
+        self.clock = reply.clock
+        return reply
+
+    # -- RPCs ------------------------------------------------------------
+    def hello(self) -> int:
+        """Join the barrier group; returns the full wire-buffer row
+        count (what ``pull_packed()`` with no shard routing yields)."""
+        reply = self._request(Frame(kind=MSG_HELLO, worker=self.worker_id))
+        self.server_rows = int(reply.aux)
+        return self.server_rows
+
+    def pull_packed(self, shard: int = -1, *,
+                    copy: bool = True) -> Optional[np.ndarray]:
+        """Latest packed params (one shard's region if ``shard >= 0``);
+        ``None`` once the server has stopped.
+
+        ``copy=False`` may return a view into the transport's receive
+        buffer, valid only until the next request on this client — safe
+        when the caller moves it to a device buffer immediately.
+        """
+        reply = self._request(Frame(kind=MSG_PULL, worker=self.worker_id,
+                                    shard=shard))
+        if reply.kind == MSG_STOP:
+            return None
+        if reply.payload is None:
+            raise FrameError("pull reply carried no payload")
+        return np.array(reply.payload) if copy else reply.payload
+
+    def push_packed(self, wire, shard: int = -1, clock: int = 0) -> bool:
+        """Push a packed gradient buffer; BLOCKS until the server's sync
+        policy releases this worker (the Algorithm-1 gate, carried
+        across the process boundary by the pending reply).  Returns
+        ``False`` once the server has stopped."""
+        frame = Frame(kind=MSG_PUSH, worker=self.worker_id, shard=shard,
+                      clock=clock, payload=np.asarray(wire))
+        reply = self._request(frame, compress=self.compress)
+        return reply.kind != MSG_STOP
+
+    def record_loss(self, step: int, loss: float) -> None:
+        self._request(Frame(kind=MSG_LOSS, worker=self.worker_id,
+                            clock=int(step), aux=float(loss)))
+
+    def echo(self, arr, compress: str = "none") -> np.ndarray:
+        """Payload round-trip diagnostic (health checks + codec tests)."""
+        reply = self._request(Frame(kind=MSG_ECHO, worker=self.worker_id,
+                                    payload=np.asarray(arr)), compress)
+        return np.array(reply.payload)
+
+    def bye(self) -> None:
+        """Leave the barrier group so survivors are not gated on us."""
+        try:
+            self._request(Frame(kind=MSG_BYE, worker=self.worker_id))
+        except (TransportClosed, OSError):
+            pass  # server already gone — nothing left to leave
+
+    def close(self) -> None:
+        self.channel.close()
+
+
+class Transport(abc.ABC):
+    """Server-side lifecycle of one transport backend."""
+
+    name: str = "?"
+
+    @abc.abstractmethod
+    def serve(self, endpoint: Any) -> None:
+        """Start accepting worker connections for ``endpoint``
+        (non-blocking; serving happens on daemon threads)."""
+
+    @abc.abstractmethod
+    def address(self) -> Tuple:
+        """Picklable descriptor a worker process passes to
+        ``repro.transport.connect``."""
+
+    @abc.abstractmethod
+    def connect(self, worker_id: int, *,
+                compress: str = "none") -> PSTransportClient:
+        """In-process client (the parent's own handle on the server)."""
+
+    @abc.abstractmethod
+    def shutdown(self) -> None:
+        """Stop serving and invalidate outstanding channels.  Does NOT
+        stop the parameter server itself — call ``server.stop()`` first
+        so gate-blocked pushes drain with a STOP reply instead of a
+        broken pipe."""
+
+    # -- context manager sugar ------------------------------------------
+    def __enter__(self) -> "Transport":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()

@@ -1,0 +1,239 @@
+"""Server-side RPC dispatch: frames in, parameter-server calls out.
+
+``PSServerEndpoint`` adapts a ``ParameterServer`` (``apply_mode=
+'packed'``) or ``ShardedParameterServer`` (``apply_mode='fused'``) to
+the frame protocol.  The endpoint is transport-agnostic: every backend
+funnels each decoded request through ``handle`` (or raw bytes through
+``handle_bytes``) on its own thread, so a push that blocks inside the
+sync-policy gate simply parks that connection's thread — exactly the
+semantics the threaded in-process workers had, now across processes.
+
+Per-shard routing: an endpoint built with ``shards={0, 2}`` serves only
+those shards' regions (frames must carry ``shard >= 0``), so different
+shards of one ``ShardedParameterServer`` can live behind different
+endpoints/ports.  ``ShardRouter`` is the client-side counterpart that
+splits a full wire buffer across such endpoints.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Dict, Optional, Sequence
+
+import numpy as np
+
+from repro.transport.base import PSTransportClient
+from repro.wireformat import (
+    WIRE_LANES,
+    Frame,
+    FrameError,
+    MSG_BYE,
+    MSG_ECHO,
+    MSG_ERR,
+    MSG_HELLO,
+    MSG_LOSS,
+    MSG_OK,
+    MSG_PULL,
+    MSG_PUSH,
+    MSG_STOP,
+    decode_frame,
+    encode_frame,
+)
+
+
+class PSServerEndpoint:
+    """Frame-level RPC surface over a packed-mode parameter server.
+
+    ``server`` must speak the packed wire format (``push_packed`` /
+    ``pull_packed``); per-shard routing additionally needs the sharded
+    server's ``push_packed_shard`` / ``pull_packed_shard``.
+    """
+
+    def __init__(self, server, *, shards: Optional[Sequence[int]] = None):
+        mode = getattr(server, "apply_mode", None)
+        if mode not in ("packed", "fused"):
+            raise ValueError(
+                f"endpoint needs a packed-mode server (apply_mode="
+                f"'packed'/'fused'), got {mode!r}")
+        self.server = server
+        self.shards = None if shards is None else frozenset(shards)
+        if self.shards is not None and not hasattr(server,
+                                                   "push_packed_shard"):
+            raise ValueError("per-shard routing needs a sharded server")
+        self._hello_lock = threading.Lock()
+        # Pull replies re-serialize the full parameter buffer (device->
+        # host) on every request; between applies that is the same
+        # bytes W times per iteration.  Cache the host copy keyed by
+        # (shard, server version) — versions are monotonic, so a stale
+        # hit is impossible.
+        self._pull_lock = threading.Lock()
+        self._pull_cache: Dict[int, tuple] = {}  # shard -> (version, np)
+
+    # -- sizing (transports pre-allocate from this) ----------------------
+    def wire_rows(self) -> int:
+        layout = self.server.plan.wire_layout()
+        if self.shards is None:
+            return layout.total_rows
+        return sum(layout.shard_rows[j] for j in self.shards)
+
+    def max_payload_bytes(self) -> int:
+        layout = self.server.plan.wire_layout()
+        return self.wire_rows() * WIRE_LANES * max(4, layout.dtype.itemsize)
+
+    # -- dispatch --------------------------------------------------------
+    def handle_bytes(self, data) -> bytes:
+        """Raw frame in, raw reply frame out (the loopback hot path)."""
+        try:
+            frame = decode_frame(data)
+        except FrameError as e:
+            return encode_frame(Frame(kind=MSG_ERR, error=str(e)))
+        return encode_frame(self.handle(frame))
+
+    def handle(self, frame: Frame) -> Frame:
+        try:
+            return self._dispatch(frame)
+        except Exception as e:
+            # The RPC boundary must ALWAYS answer: an escaped exception
+            # would kill the serving thread (tcp) or leave the slot
+            # stuck in request state forever (shmem).
+            return Frame(kind=MSG_ERR, worker=frame.worker,
+                         error=f"{type(e).__name__}: {e}")
+
+    def _dispatch(self, frame: Frame) -> Frame:
+        server = self.server
+        kind = frame.kind
+        if kind == MSG_HELLO:
+            with self._hello_lock:
+                server.add_worker(frame.worker)  # idempotent
+            return Frame(kind=MSG_OK, worker=frame.worker,
+                         clock=server.version, aux=float(self.wire_rows()))
+        if kind == MSG_PULL:
+            if server.stopped:
+                return Frame(kind=MSG_STOP, worker=frame.worker,
+                             clock=server.version)
+            buf = self._pull(frame)
+            return Frame(kind=MSG_OK, worker=frame.worker,
+                         clock=server.version, payload=np.asarray(buf))
+        if kind == MSG_PUSH:
+            if server.stopped:
+                return Frame(kind=MSG_STOP, worker=frame.worker,
+                             clock=server.version)
+            self._push(frame)  # blocks in the policy gate
+            kind_out = MSG_STOP if server.stopped else MSG_OK
+            return Frame(kind=kind_out, worker=frame.worker,
+                         clock=server.version)
+        if kind == MSG_LOSS:
+            server.record_loss(int(frame.clock), float(frame.aux))
+            return Frame(kind=MSG_OK, worker=frame.worker,
+                         clock=server.version)
+        if kind == MSG_BYE:
+            server.remove_worker(frame.worker)
+            return Frame(kind=MSG_OK, worker=frame.worker,
+                         clock=server.version)
+        # MSG_STOP is a server-side REPLY kind only: accepting it as a
+        # request would let any connected worker halt training.
+        if kind == MSG_ECHO:
+            return Frame(kind=MSG_ECHO, worker=frame.worker,
+                         payload=frame.payload)
+        raise FrameError(f"kind {kind} is not a request")
+
+    # -- server calls ----------------------------------------------------
+    def _check_shard(self, frame: Frame) -> int:
+        shard = frame.shard
+        if self.shards is not None:
+            if shard < 0:
+                raise FrameError(
+                    "this endpoint serves shards "
+                    f"{sorted(self.shards)}; frames must carry a shard id")
+            if shard not in self.shards:
+                raise FrameError(f"shard {shard} is not served here "
+                                 f"(have {sorted(self.shards)})")
+        return shard
+
+    def _pull(self, frame: Frame) -> np.ndarray:
+        shard = self._check_shard(frame)
+        version = self.server.version
+        with self._pull_lock:
+            hit = self._pull_cache.get(shard)
+            if hit is not None and hit[0] == version:
+                return hit[1]
+        if shard < 0:
+            buf = self.server.pull_packed(frame.worker)
+        else:
+            buf = self.server.pull_packed_shard(shard, frame.worker)
+        host = np.asarray(buf)
+        with self._pull_lock:
+            cached = self._pull_cache.get(shard)
+            if cached is None or version >= cached[0]:
+                self._pull_cache[shard] = (version, host)
+        return host
+
+    def _push(self, frame: Frame) -> None:
+        shard = self._check_shard(frame)
+        if frame.payload is None:
+            raise FrameError("push frame carried no payload")
+        import jax.numpy as jnp  # device transfer only on the server side
+
+        # np.array COPIES: a shmem payload is parsed in place over the
+        # segment, and jnp.asarray on CPU may zero-copy alias it — the
+        # async fused apply could then read bytes the client has
+        # already overwritten with its next request.  (Same hazard the
+        # worker loop guards with copy=True on pulls.)
+        buf = jnp.asarray(np.array(frame.payload))
+        if shard < 0:
+            self.server.push_packed(frame.worker, buf)
+        else:
+            self.server.push_packed_shard(frame.worker, shard, buf)
+
+    # -- lifecycle hooks (called by transports) --------------------------
+    def on_disconnect(self, worker: int) -> None:
+        """A connection died without BYE (killed worker, broken pipe):
+        drop it from the barrier group so survivors are not gated on a
+        corpse — same contract as ``PSWorker``'s finally-block."""
+        self.server.remove_worker(worker)
+
+
+class ShardRouter:
+    """Client-side shard fan-out across per-shard endpoints.
+
+    ``clients`` maps shard id -> ``PSTransportClient`` (several shards
+    may share one client).  Pushes visit shards in canonical order
+    0..S-1 — same acyclic-wait argument as the sharded server's
+    ``push`` — and pulls reassemble the full wire buffer from per-shard
+    regions.
+    """
+
+    def __init__(self, clients: Dict[int, PSTransportClient],
+                 shard_rows: Sequence[int]):
+        if sorted(clients) != list(range(len(shard_rows))):
+            raise ValueError(
+                f"need one client per shard 0..{len(shard_rows) - 1}, "
+                f"got {sorted(clients)}")
+        self.clients = dict(clients)
+        self.shard_rows = tuple(shard_rows)
+
+    def pull_packed(self) -> Optional[np.ndarray]:
+        regions = []
+        for j, rows in enumerate(self.shard_rows):
+            if rows == 0:
+                continue
+            buf = self.clients[j].pull_packed(shard=j)
+            if buf is None:
+                return None
+            regions.append(buf)
+        return np.concatenate(regions) if len(regions) > 1 else regions[0]
+
+    def push_packed(self, wire, clock: int = 0) -> bool:
+        wire = np.asarray(wire)
+        if wire.shape != (sum(self.shard_rows), WIRE_LANES):
+            raise ValueError(f"wire buffer {wire.shape} does not match "
+                             f"({sum(self.shard_rows)}, {WIRE_LANES})")
+        alive, row = True, 0
+        for j, rows in enumerate(self.shard_rows):
+            if rows == 0:
+                continue
+            region = wire[row:row + rows]
+            alive = self.clients[j].push_packed(region, shard=j,
+                                                clock=clock) and alive
+            row += rows
+        return alive

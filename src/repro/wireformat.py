@@ -1,4 +1,5 @@
-"""Shared constants, dtype policy and pack body of the packed wire format.
+"""Shared constants, dtype policy, pack body and FRAME codec of the
+packed wire format.
 
 One source of truth for the lane-aligned (rows, 512) layout that
 ``ps/sharded/plan.py`` (kernel-free) and the Pallas kernels
@@ -7,18 +8,30 @@ speak — keeping the two sides here means the wire dtype rule, the tile
 geometry and the flatten/concat/pad pipeline cannot drift apart between
 the tree-split and packed paths.
 
-Kept free of pallas imports so the ps layer stays importable without
-the kernel stack (plain jax.numpy is fine — ps already depends on it).
+This module is also where the packed buffer grows its *serialization
+header* for the process-boundary transports (``repro.transport``): a
+fixed 44-byte little-endian struct carrying version, message kind,
+dtype, flags, worker id, shard id, clock, row count, payload length and
+an aux float (loss value / int8 quantization scale).  The same (rows,
+512) buffer that a worker's jitted step emits is the frame body — the
+one representation from worker JIT step to server Pallas launch, now
+across processes.
+
+Import cost matters here: spawned worker/benchmark processes frame
+bytes long before they touch an accelerator, so ``jax`` is imported
+lazily inside the two functions that need it and the frame codec is
+pure ``numpy`` + ``struct``.
 """
 
 from __future__ import annotations
 
-from typing import Iterable, Optional, Sequence
+import dataclasses
+import struct
+from typing import Iterable, Optional, Sequence, Tuple
 
-import jax
-import jax.numpy as jnp
+import numpy as np
 
-from repro.perfcount import WIRE
+from repro.perfcount import TRANSPORT, WIRE
 
 #: Lane width of the packed wire buffer — the Pallas tile's last dim.
 WIRE_LANES = 512
@@ -26,8 +39,7 @@ WIRE_LANES = 512
 WIRE_ROWS = 8
 
 
-def pack_flat(leaves: Sequence[jax.Array], dtype,
-              rows: Optional[int] = None) -> jax.Array:
+def pack_flat(leaves: Sequence, dtype, rows: Optional[int] = None):
     """Flatten + concatenate ``leaves`` into a (rows, WIRE_LANES) buffer.
 
     ``rows=None`` pads to the next full lane row (the per-leaf-list
@@ -35,6 +47,8 @@ def pack_flat(leaves: Sequence[jax.Array], dtype,
     count (a plan's 8-aligned shard region).  Bumps the perfcount
     pack/concat probes — this is THE instrumented pytree->wire crossing.
     """
+    import jax.numpy as jnp
+
     WIRE.packs += 1
     flats = [x.reshape(-1).astype(dtype) for x in leaves]
     if len(flats) > 1:
@@ -60,3 +74,213 @@ def resolve_wire_dtype(dtypes: Iterable, default=None) -> Optional[object]:
     """
     dts = set(dtypes)
     return dts.pop() if len(dts) == 1 else default
+
+
+# ======================================================================
+# Frame codec — the process-boundary serialization of the packed buffer.
+# ======================================================================
+
+#: First bytes of every frame; rejects cross-protocol garbage cheaply.
+FRAME_MAGIC = b"DSPW"
+#: Bump on any incompatible header/payload change.
+FRAME_VERSION = 1
+
+#: Header layout, little-endian, 44 bytes:
+#:   magic(4s) version(B) kind(B) dtype(B) flags(B)
+#:   worker(i32) shard(i32) clock(i64) rows(u32) payload_len(u64) aux(f64)
+HEADER = struct.Struct("<4sBBBBiiqIQd")
+HEADER_SIZE = HEADER.size
+
+# -- message kinds ------------------------------------------------------
+MSG_HELLO = 1   # worker joins; reply OK carries clock=version, aux=rows
+MSG_PULL = 2    # request packed params; reply OK carries the buffer
+MSG_PUSH = 3    # packed gradient push; blocks until the policy releases
+MSG_LOSS = 4    # record_loss(clock, aux)
+MSG_BYE = 5     # worker leaves the barrier group
+MSG_STOP = 6    # server-side stop reply (training over / shutdown)
+MSG_OK = 7      # generic success reply
+MSG_ERR = 8     # error reply; body is a utf-8 message
+MSG_ECHO = 9    # payload round-trip diagnostic (health checks + tests)
+
+_KINDS = frozenset((MSG_HELLO, MSG_PULL, MSG_PUSH, MSG_LOSS, MSG_BYE,
+                    MSG_STOP, MSG_OK, MSG_ERR, MSG_ECHO))
+
+# -- flags --------------------------------------------------------------
+#: Payload is int8-quantized; dequant scale travels in ``aux`` and the
+#: logical (pre-quantization) dtype stays in the header dtype field.
+FLAG_INT8 = 0x01
+
+_KNOWN_FLAGS = FLAG_INT8
+
+# -- dtype codes --------------------------------------------------------
+_DTYPE_NAMES = {0: "float32", 1: "bfloat16", 2: "float16", 3: "int8"}
+_DTYPE_CODES = {v: k for k, v in _DTYPE_NAMES.items()}
+
+#: Transports size shared buffers / reject hostile lengths with this.
+MAX_PAYLOAD = 1 << 31
+
+
+def np_wire_dtype(name: str) -> np.dtype:
+    """Numpy dtype for a wire dtype name (bf16 comes from ml_dtypes,
+    which jax depends on — but importing it does not pull in jax)."""
+    if name == "bfloat16":
+        import ml_dtypes
+
+        return np.dtype(ml_dtypes.bfloat16)
+    return np.dtype(name)
+
+
+class FrameError(ValueError):
+    """Malformed / truncated / cross-version frame."""
+
+
+@dataclasses.dataclass
+class Frame:
+    """One decoded transport message.
+
+    ``payload`` is a host (rows, WIRE_LANES) array in the *logical*
+    dtype (int8 frames are dequantized on decode); ``error`` is set for
+    ``MSG_ERR`` frames instead.
+    """
+
+    kind: int
+    worker: int = -1
+    shard: int = -1      # -1 = the full wire buffer (no shard routing)
+    clock: int = 0
+    flags: int = 0
+    aux: float = 0.0
+    payload: Optional[np.ndarray] = None
+    error: str = ""
+
+
+def _quantize_int8(arr: np.ndarray) -> Tuple[np.ndarray, float]:
+    """Symmetric per-frame linear quantization (transport-level, no
+    error feedback — the lossy-but-bitwise-reproducible wire encoding;
+    server-side error-feedback compression is ``optim/compression``)."""
+    f = np.asarray(arr, np.float32)
+    scale = float(max(np.max(np.abs(f)), 1e-12) / 127.0)
+    q = np.clip(np.round(f / scale), -127, 127).astype(np.int8)
+    return q, scale
+
+
+def encode_frame(frame: Frame, compress: str = "none") -> bytes:
+    """Frame -> header + body bytes (the length-prefixed unit every
+    transport moves).  ``compress='int8'`` quantizes the payload."""
+    if frame.kind not in _KINDS:
+        raise FrameError(f"unknown message kind {frame.kind}")
+    flags = frame.flags
+    aux = frame.aux
+    if frame.kind == MSG_ERR:
+        body = frame.error.encode("utf-8")
+        rows, dtype_code = 0, _DTYPE_CODES["int8"]
+    elif frame.payload is None:
+        body = b""
+        rows, dtype_code = 0, _DTYPE_CODES["float32"]
+    else:
+        arr = np.ascontiguousarray(frame.payload)
+        if arr.ndim != 2 or arr.shape[1] != WIRE_LANES:
+            raise FrameError(f"payload {arr.shape} is not a "
+                             f"(rows, {WIRE_LANES}) wire buffer")
+        name = np.dtype(arr.dtype).name
+        if name not in _DTYPE_CODES:
+            raise FrameError(f"dtype {name} has no wire code")
+        rows, dtype_code = arr.shape[0], _DTYPE_CODES[name]
+        if compress not in ("int8", "none", "", None):
+            raise FrameError(f"unknown frame compression {compress!r}")
+        if compress == "int8" and name != "int8":
+            q, aux = _quantize_int8(arr)
+            flags |= FLAG_INT8
+            body = q.tobytes()
+        else:
+            # already-int8 buffers ship as-is (dtype code says int8, no
+            # FLAG_INT8 — nothing to dequantize on the far side)
+            body = arr.tobytes()
+    header = HEADER.pack(FRAME_MAGIC, FRAME_VERSION, frame.kind,
+                         dtype_code, flags, frame.worker, frame.shard,
+                         frame.clock, rows, len(body), aux)
+    TRANSPORT.frames_tx += 1
+    TRANSPORT.bytes_tx += HEADER_SIZE + len(body)
+    return header + body
+
+
+def decode_header(buf: bytes) -> Tuple[Frame, int]:
+    """Parse + validate the 44-byte header; returns the (payload-less)
+    frame and the body length the framing layer must read next.
+
+    Every reject bumps ``TRANSPORT.header_rejects`` — the counter the
+    truncated-frame tests and the throughput benchmark read.
+    """
+    if len(buf) != HEADER_SIZE:
+        TRANSPORT.header_rejects += 1
+        raise FrameError(f"short header: {len(buf)} of {HEADER_SIZE} bytes")
+    (magic, version, kind, dtype_code, flags, worker, shard, clock,
+     rows, payload_len, aux) = HEADER.unpack(buf)
+    try:
+        if magic != FRAME_MAGIC:
+            raise FrameError(f"bad magic {magic!r}")
+        if version != FRAME_VERSION:
+            raise FrameError(f"frame version {version}, "
+                             f"expected {FRAME_VERSION}")
+        if kind not in _KINDS:
+            raise FrameError(f"unknown message kind {kind}")
+        if dtype_code not in _DTYPE_NAMES:
+            raise FrameError(f"unknown dtype code {dtype_code}")
+        if flags & ~_KNOWN_FLAGS:
+            raise FrameError(f"unknown flags 0x{flags:02x}")
+        if payload_len > MAX_PAYLOAD:
+            raise FrameError(f"payload length {payload_len} exceeds "
+                             f"{MAX_PAYLOAD}")
+        if kind != MSG_ERR:
+            itemsize = (1 if flags & FLAG_INT8
+                        else np_wire_dtype(_DTYPE_NAMES[dtype_code]).itemsize)
+            if payload_len != rows * WIRE_LANES * itemsize:
+                raise FrameError(
+                    f"payload length {payload_len} does not match "
+                    f"{rows} x {WIRE_LANES} rows of "
+                    f"{_DTYPE_NAMES[dtype_code]}"
+                    f"{' (int8 on the wire)' if flags & FLAG_INT8 else ''}")
+    except FrameError:
+        TRANSPORT.header_rejects += 1
+        raise
+    frame = Frame(kind=kind, worker=worker, shard=shard, clock=clock,
+                  flags=flags, aux=aux)
+    frame._dtype_name = _DTYPE_NAMES[dtype_code]  # type: ignore[attr-defined]
+    frame._rows = rows                            # type: ignore[attr-defined]
+    return frame, payload_len
+
+
+def decode_body(frame: Frame, body) -> Frame:
+    """Attach the body to a ``decode_header`` frame.
+
+    ``body`` may be any buffer (bytes or a shared-memory view — parsing
+    is in place, no copy for uncompressed frames); int8 frames are
+    dequantized into the logical dtype here.
+    """
+    TRANSPORT.frames_rx += 1
+    TRANSPORT.bytes_rx += HEADER_SIZE + len(body)
+    if frame.kind == MSG_ERR:
+        frame.error = bytes(body).decode("utf-8", "replace")
+        return frame
+    rows = frame._rows  # type: ignore[attr-defined]
+    if rows == 0:
+        return frame
+    name = frame._dtype_name  # type: ignore[attr-defined]
+    if frame.flags & FLAG_INT8:
+        q = np.frombuffer(body, np.int8).reshape(rows, WIRE_LANES)
+        frame.payload = (q.astype(np.float32) * np.float32(frame.aux)
+                         ).astype(np_wire_dtype(name))
+    else:
+        frame.payload = np.frombuffer(
+            body, np_wire_dtype(name)).reshape(rows, WIRE_LANES)
+    return frame
+
+
+def decode_frame(data) -> Frame:
+    """One-shot decode of a contiguous header+body buffer."""
+    view = memoryview(data)
+    frame, payload_len = decode_header(bytes(view[:HEADER_SIZE]))
+    if len(view) - HEADER_SIZE != payload_len:
+        TRANSPORT.header_rejects += 1
+        raise FrameError(f"truncated frame: {len(view) - HEADER_SIZE} of "
+                         f"{payload_len} payload bytes")
+    return decode_body(frame, view[HEADER_SIZE:])

@@ -13,7 +13,6 @@ import subprocess
 import sys
 import textwrap
 
-import pytest
 
 REPO_SRC = os.path.join(os.path.dirname(os.path.dirname(__file__)), "src")
 

@@ -13,7 +13,6 @@ Acceptance probes (ISSUE 2):
 """
 
 import threading
-import time
 
 import jax
 import jax.numpy as jnp

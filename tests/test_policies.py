@@ -48,7 +48,7 @@ def test_dssp_grants_and_spends_credits():
     released, blocked = 0, 0
     for k in range(8):
         t += 1.0
-        rec = tr.record_push(0, t)
+        tr.record_push(0, t)
         d = pol.on_push(tr, 0, t)
         if d.release_now:
             released += 1

@@ -1,6 +1,5 @@
 """Integration: threaded PS + real jitted JAX training under every paradigm."""
 
-import itertools
 
 import jax
 import jax.numpy as jnp

@@ -6,7 +6,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import get_smoke_config
 from repro.models import registry, transformer
 from repro.models.config import ModelConfig
 

@@ -7,7 +7,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs import get_config
 from repro.models import registry
 from repro.models.params import sds_tree, spec_tree
-from repro.models.sharding import AxisRules, multi_pod_rules, \
+from repro.models.sharding import multi_pod_rules, \
     single_pod_rules
 from repro.optim import make_optimizer
 from repro.optim.optimizers import state_partition_specs

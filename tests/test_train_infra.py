@@ -8,7 +8,7 @@ import pytest
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs import get_smoke_config
 from repro.core import dssp_spmd
-from repro.data.synthetic import DataConfig, batches, loss_floor
+from repro.data.synthetic import DataConfig, batches
 from repro.launch.train import Trainer
 
 
@@ -107,7 +107,7 @@ def test_dssp_delay_zero_equals_bsp():
                 staleness_damping=False)
     # force ssp's fixed delay to 0 by monkeypatching the loop constant
     b.s_lower = 0
-    la = a.train(5, verbose=False)
+    a.train(5, verbose=False)
 
     # manual loop with delay=0 through b's pipeline step
     from repro.data.synthetic import batches as mkb
