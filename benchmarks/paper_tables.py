@@ -17,11 +17,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import (ModelSpec, OptimizerSpec, RunSpec, ServerSpec,
+                       SyncSpec, build_session)
 from repro.core.policies import make_policy
 from repro.ps.metrics import RunMetrics
-from repro.ps.server import ParameterServer, ServerOptimizer
 from repro.ps.simulator import run_policy
-from repro.ps.worker import PSWorker, run_cluster
 
 
 # ------------------------------------------------------------ workloads
@@ -59,20 +59,27 @@ def _batches(x, y, worker, n_workers, bs=64, seed=0):
 
 
 def _run_ps(policy_name: str, speed_factors: List[float], iters: int,
-            lr: float = 0.2, **pol_kw) -> Tuple[ParameterServer, float]:
+            lr: float = 0.2, **pol_kw) -> Tuple[object, float, float]:
     x, y, classes = _problem()
     n = len(speed_factors)
     params = {"w": jnp.zeros((x.shape[1], classes)),
               "b": jnp.zeros((classes,))}
-    policy = make_policy(policy_name, n_workers=n, **pol_kw)
-    server = ParameterServer(params, policy, ServerOptimizer(lr=lr), n)
+    spec = RunSpec(
+        model=ModelSpec(arch="custom"),
+        optimizer=OptimizerSpec(lr=lr),
+        sync=SyncSpec(mode=policy_name,
+                      staleness=pol_kw.get("staleness", 1),
+                      s_lower=pol_kw.get("s_lower", 0),
+                      s_upper=pol_kw.get("s_upper", 3)),
+        ps=ServerSpec(kind="mono", shards=1, workers=n))
     step = _step_fn(classes)
-    workers = [PSWorker(w, server, step, _batches(x, y, w, n), iters,
-                        speed_factor=speed_factors[w],
-                        loss_from_aux=lambda a: float(a["loss"]))
-               for w in range(n)]
     t0 = time.monotonic()
-    run_cluster(server, workers, timeout=600.0)
+    with build_session(spec, params=params, step_fn=step,
+                       batches=lambda w: _batches(x, y, w, n),
+                       speed_factors=list(speed_factors),
+                       timeout=600.0) as session:
+        session.run(iters * n)
+        server = session.server
     wall = time.monotonic() - t0
     # final full-data loss
     logits = x @ np.asarray(server.params["w"]) + np.asarray(

@@ -34,10 +34,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.policies import make_policy_factory
+from repro.api import (ModelSpec, OptimizerSpec, RunSpec, ServerSpec,
+                       SyncSpec, WireSpec, build_session)
 from repro.perfcount import WIRE
-from repro.ps.server import ServerOptimizer
-from repro.ps.sharded import ShardedParameterServer
 
 
 def tail_heavy_tree(scale: int = 1) -> Dict[str, jax.Array]:
@@ -63,15 +62,20 @@ def _grads_like(tree, seed: int):
         if p.shape else jnp.float32(rng.randn()), tree)
 
 
-def _server(params, n_shards: int, apply_mode: str,
-            wire_compression=None, compressor=None):
-    from repro.optim.compression import make_compressor
-    return ShardedParameterServer(
-        params, make_policy_factory("asp"),
-        lambda: ServerOptimizer(lr=0.01, momentum=0.9),
-        1, n_shards, apply_mode=apply_mode,
-        compressor=make_compressor(compressor) if compressor else None,
-        wire_compression=wire_compression)
+def _session(params, n_shards: int, apply_mode: str,
+             wire_format: str = "tree", compression: str = "none"):
+    """One externally-driven session per measured path: the spec picks
+    the wire/apply/compression combination, the bench pushes payloads
+    at the session's server directly."""
+    spec = RunSpec(
+        model=ModelSpec(arch="custom"),
+        optimizer=OptimizerSpec(name="momentum", lr=0.01, momentum=0.9),
+        sync=SyncSpec(mode="asp"),
+        ps=ServerSpec(kind="sharded", shards=n_shards, workers=1,
+                      apply=apply_mode),
+        wire=WireSpec(format=wire_format, compression=compression))
+    return build_session(spec, params=params,
+                         external_workers=True).start()
 
 
 def _block_tree(tree):
@@ -83,13 +87,16 @@ def bench_path(params, grads_seq, n_shards: int, path: str,
     compress = path.endswith("+int8")
     base = path[:-5] if compress else path
     if base == "packed":
-        server = _server(params, n_shards, "fused",
-                         wire_compression="int8" if compress else None)
+        session = _session(params, n_shards, "fused",
+                           wire_format="packed",
+                           compression="int8" if compress else "none")
+        server = session.server
         payloads = [server.plan.pack(g) for g in grads_seq]
     else:
-        server = _server(params, n_shards,
-                         "fused" if base == "tree_fused" else "tree",
-                         compressor="int8" if compress else None)
+        session = _session(params, n_shards,
+                           "fused" if base == "tree_fused" else "tree",
+                           compression="int8" if compress else "none")
+        server = session.server
         payloads = list(grads_seq)
     push = server.push_packed if base == "packed" else server.push
     pull = (server.pull_packed if base == "packed" else server.pull)
@@ -130,6 +137,7 @@ def bench_path(params, grads_seq, n_shards: int, path: str,
 
     pe, le = per(push_events), per(pull_events)
     repack = pe["packs"] + pe["unpacks"] + pe["leaf_concats"]
+    session.close()
     return {
         "path": path, "shards": n_shards, "n_pushes": n_pushes,
         "push_ms": 1e3 * push_wall / n_pushes,

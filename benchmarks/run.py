@@ -2,8 +2,9 @@
 
 Prints ``name,us_per_call,derived`` CSV.  Virtual-time rows (simulator)
 report us_per_call=0; threaded-PS rows report wall time per worker
-iteration.  Roofline rows are derived from the dry-run reports
-(reports/dryrun_*.json, produced by repro.launch.dryrun).
+iteration (built through ``repro.api.build_session`` — see
+``paper_tables._run_ps``).  Roofline rows are derived from the dry-run
+reports (reports/dryrun_*.json, produced by repro.launch.dryrun).
 """
 
 from __future__ import annotations

@@ -13,30 +13,32 @@ from __future__ import annotations
 
 from typing import List
 
-from repro.core.policies import make_policy_factory
+from repro.api import SyncSpec
 from repro.ps.metrics import RunMetrics, compare
 from repro.ps.sharded import hot_shard_service, run_sharded_policy
 
 SPEEDS = [1.0, 1.0, 1.0, 4.0]
 SHARD_COUNTS = (1, 4, 16)
-POLICIES = (("bsp", {}),
-            ("ssp", {"staleness": 3}),
-            ("dssp", {"s_lower": 3, "s_upper": 15}))
+#: spec-level paradigm grid (the virtual-time face of the same
+#: ``SyncSpec`` the sessions build policies from)
+POLICIES = (SyncSpec(mode="bsp"),
+            SyncSpec(mode="ssp", staleness=3),
+            SyncSpec(mode="dssp", s_lower=3, s_upper=15))
 
 
 def sharded_comparison(rows: List[str], max_pushes: int = 2000) -> str:
     """CSV rows + compare() table for the shards x policies grid."""
     aggregates: List[RunMetrics] = []
-    for name, kw in POLICIES:
+    for sync in POLICIES:
         for s in SHARD_COUNTS:
             sim = run_sharded_policy(
-                make_policy_factory(name, n_workers=len(SPEEDS), **kw),
+                sync.policy_factory(len(SPEEDS)),
                 SPEEDS, s, max_pushes=max_pushes)
             m = sim.metrics
             aggregates.append(m)
             per_shard_max = max(sim.max_staleness_per_shard())
             rows.append(
-                f"sharded_ps_{name}_S{s},0,"
+                f"sharded_ps_{sync.mode}_S{s},0,"
                 f"vthroughput={m.throughput:.3f}"
                 f";wait={m.total_wait:.1f}"
                 f";mean_stale={m.mean_staleness:.2f}"
@@ -46,15 +48,15 @@ def sharded_comparison(rows: List[str], max_pushes: int = 2000) -> str:
 
 def hot_shard_sweep(rows: List[str], max_pushes: int = 1000) -> None:
     """Skewed shard load: shard 0 costs 0.2 virtual seconds per visit."""
-    for name, kw in POLICIES:
+    for sync in POLICIES:
         for s in (4, 16):
             sim = run_sharded_policy(
-                make_policy_factory(name, n_workers=len(SPEEDS), **kw),
+                sync.policy_factory(len(SPEEDS)),
                 SPEEDS, s, max_pushes=max_pushes,
                 shard_service_fn=hot_shard_service(0, 0.2))
             m = sim.metrics
             rows.append(
-                f"sharded_ps_hot0_{name}_S{s},0,"
+                f"sharded_ps_hot0_{sync.mode}_S{s},0,"
                 f"vthroughput={m.throughput:.3f}"
                 f";wait={m.total_wait:.1f}"
                 f";max_stale_any_shard={max(sim.max_staleness_per_shard())}")

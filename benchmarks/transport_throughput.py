@@ -39,6 +39,8 @@ from typing import Dict, List
 
 import numpy as np
 
+from repro.api import (ModelSpec, OptimizerSpec, RunSpec, ServerSpec,
+                       SyncSpec, TransportSpec, WireSpec, build_session)
 from repro.perfcount import TRANSPORT
 from repro.transport import connect
 from repro.wireformat import HEADER_SIZE, WIRE_LANES
@@ -74,27 +76,28 @@ def _bench_worker(address, worker_id: int, n_pushes: int, rows: int,
         queue.put(("done", worker_id, 0, 0.0, repr(e)))
 
 
-def _make_server(params, paradigm: str, n_workers: int, n_shards: int):
-    from repro.core.policies import make_policy_factory
-    from repro.ps.server import ServerOptimizer
-    from repro.ps.sharded import ShardedParameterServer
-
-    return ShardedParameterServer(
-        params, make_policy_factory(paradigm, n_workers=n_workers,
-                                    staleness=2, s_lower=1, s_upper=3),
-        lambda: ServerOptimizer(lr=0.01, momentum=0.9),
-        n_workers, n_shards, apply_mode="fused")
+def _make_session(params, backend: str, paradigm: str, n_workers: int,
+                  n_shards: int):
+    """Server + endpoint + transport, declaratively: the bench drives
+    its own clients, so the session is built external-workers."""
+    spec = RunSpec(
+        model=ModelSpec(arch="custom"),
+        optimizer=OptimizerSpec(name="momentum", lr=0.01, momentum=0.9),
+        sync=SyncSpec(mode=paradigm, staleness=2, s_lower=1, s_upper=3),
+        ps=ServerSpec(kind="sharded", shards=n_shards,
+                      workers=n_workers, apply="fused"),
+        wire=WireSpec(format="packed"),
+        transport=TransportSpec(kind=backend, endpoint=True))
+    return build_session(spec, params=params,
+                         external_workers=True).start()
 
 
 def bench_cell(params, backend: str, paradigm: str, compress: str,
                n_workers: int, n_pushes: int,
                n_shards: int) -> Dict[str, object]:
-    from repro.transport import PSServerEndpoint, make_transport
-
-    server = _make_server(params, paradigm, n_workers, n_shards)
-    endpoint = PSServerEndpoint(server)
-    transport = make_transport(backend, n_workers=n_workers)
-    transport.serve(endpoint)
+    session = _make_session(params, backend, paradigm, n_workers,
+                            n_shards)
+    server = session.server
     rows = server.plan.wire_layout().total_rows
 
     if backend == "inproc":
@@ -102,7 +105,7 @@ def bench_cell(params, backend: str, paradigm: str, compress: str,
         queue = queue_mod.Queue()
         runners = [threading.Thread(
             target=_bench_worker,
-            args=(transport.address(), w, n_pushes, rows, compress,
+            args=(session.address(), w, n_pushes, rows, compress,
                   ready, queue),
             daemon=True) for w in range(n_workers)]
     else:
@@ -111,7 +114,7 @@ def bench_cell(params, backend: str, paradigm: str, compress: str,
         queue = ctx.Queue()
         runners = [ctx.Process(
             target=_bench_worker,
-            args=(transport.address(), w, n_pushes, rows, compress,
+            args=(session.address(), w, n_pushes, rows, compress,
                   ready, queue),
             daemon=True) for w in range(n_workers)]
 
@@ -136,8 +139,7 @@ def bench_cell(params, backend: str, paradigm: str, compress: str,
             results.append((w, done, elapsed, err))
     for r in runners:
         r.join(timeout=30.0)
-    server.stop()
-    transport.shutdown()
+    session.close()
     delta = TRANSPORT.delta(before)
 
     errors = [e for _, _, _, e in results if e]

@@ -3,8 +3,12 @@
 Four workers train one shared model through the parameter server; worker
 3 is 4x slower (the paper's GTX1060 next to GTX1080Ti).  Each paradigm
 runs the same jitted SGD steps — only the synchronization policy
-differs.  Reported: updates applied, waiting time, staleness profile,
-final loss, plus the virtual-time Table-I composition.
+differs, and with ``repro.api`` a paradigm (or the server kind) is one
+spec field: the example builds every run through
+``build_session(RunSpec(...))`` with a custom toy problem injected as
+build-time overrides.  Reported: updates applied, waiting time,
+staleness profile, final loss, plus the virtual-time Table-I
+composition.
 
 Run:  PYTHONPATH=src python examples/heterogeneous_ps.py
       PYTHONPATH=src python examples/heterogeneous_ps.py --ps-shards 4
@@ -21,12 +25,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.policies import make_policy, make_policy_factory
+from repro.api import (ModelSpec, OptimizerSpec, RunSpec, ServerSpec,
+                       SyncSpec, build_session)
 from repro.ps.metrics import compare
-from repro.ps.server import ParameterServer, ServerOptimizer
-from repro.ps.sharded import ShardedParameterServer, run_sharded_policy
+from repro.ps.sharded import run_sharded_policy
 from repro.ps.simulator import run_policy
-from repro.ps.worker import PSWorker, run_cluster
 
 
 # one grid for the threaded AND virtual-time views — keep in lockstep
@@ -43,6 +46,12 @@ def make_problem(seed=0, dim=16, n=2048, classes=4):
     return x, y, classes
 
 
+def sync_spec(name: str, kw: dict) -> SyncSpec:
+    return SyncSpec(mode=name, staleness=kw.get("staleness", 1),
+                    s_lower=kw.get("s_lower", 0),
+                    s_upper=kw.get("s_upper", 3))
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--ps-shards", type=int, default=1, metavar="N",
@@ -50,8 +59,12 @@ def main() -> None:
                          "(1 = the monolithic server)")
     ap.add_argument("--ps-apply", default="tree",
                     choices=["tree", "fused"])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (fewer iterations/pushes)")
     args = ap.parse_args()
     n_shards = max(1, args.ps_shards)
+    iters = 10 if args.smoke else 80
+    vpushes = 300 if args.smoke else 2000
 
     x, y, classes = make_problem()
 
@@ -73,48 +86,49 @@ def main() -> None:
             yield sx[i], sy[i]
 
     speeds = [1.0, 1.0, 1.0, 4.0]
-    print(f"4 workers, speed factors {speeds}, 80 iterations each, "
+    print(f"4 workers, speed factors {speeds}, {iters} iterations each, "
           f"{n_shards} server shard(s)\n")
+    if n_shards > 1:
+        server_spec = ServerSpec(kind="sharded", shards=n_shards,
+                                 workers=4, apply=args.ps_apply)
+    else:
+        server_spec = ServerSpec(kind="mono", shards=1, workers=4)
     runs = []
     shard_runs = []
     for name, kw in POLICIES:
         params = {"w": jnp.zeros((x.shape[1], classes)),
                   "b": jnp.zeros((classes,))}
-        if n_shards > 1:
-            server = ShardedParameterServer(
-                params, make_policy_factory(name, n_workers=4, **kw),
-                lambda: ServerOptimizer(lr=0.3), 4, n_shards,
-                apply_mode=args.ps_apply)
-        else:
-            server = ParameterServer(
-                params, make_policy(name, n_workers=4, **kw),
-                ServerOptimizer(lr=0.3), 4)
-        workers = [PSWorker(w, server, step, batches(w), 80,
-                            speed_factor=speeds[w])
-                   for w in range(4)]
-        run_cluster(server, workers, timeout=300.0)
-        logits = x @ np.asarray(server.params["w"]) + np.asarray(
-            server.params["b"])
-        acc = float((np.argmax(logits, -1) == y).mean())
-        server.metrics.policy += f"  acc={acc:.3f}"
-        runs.append(server.metrics)
-        if n_shards > 1:
-            shard_runs.append((name, server.shard_metrics()))
+        spec = RunSpec(model=ModelSpec(arch="custom"),
+                       optimizer=OptimizerSpec(lr=0.3),
+                       sync=sync_spec(name, kw),
+                       ps=server_spec)
+        with build_session(spec, params=params, step_fn=step,
+                           batches=batches,
+                           speed_factors=speeds) as session:
+            session.run(iters * 4)
+            server = session.server
+            logits = x @ np.asarray(server.params["w"]) + np.asarray(
+                server.params["b"])
+            acc = float((np.argmax(logits, -1) == y).mean())
+            server.metrics.policy += f"  acc={acc:.3f}"
+            runs.append(server.metrics)
+            if n_shards > 1:
+                shard_runs.append((name, server.shard_metrics()))
     print(compare(runs))
     if shard_runs:
         print("\nPer-shard view (threaded):")
         for name, sms in shard_runs:
             print(compare(sms))
 
-    print("\nVirtual-time view (same speeds, 2000 pushes):")
+    print(f"\nVirtual-time view (same speeds, {vpushes} pushes):")
     if n_shards > 1:
         vruns = [run_sharded_policy(
-                     make_policy_factory(n, n_workers=4, **kw), speeds,
-                     n_shards, max_pushes=2000).metrics
+                     sync_spec(n, kw).policy_factory(4), speeds,
+                     n_shards, max_pushes=vpushes).metrics
                  for n, kw in POLICIES]
     else:
-        vruns = [run_policy(make_policy(n, n_workers=4, **kw), speeds,
-                            max_pushes=2000)
+        vruns = [run_policy(sync_spec(n, kw).policy_factory(4)(), speeds,
+                            max_pushes=vpushes)
                  for n, kw in POLICIES]
     print(compare(vruns))
     print("\nReading: with a PERSISTENT straggler the steady-state rate "

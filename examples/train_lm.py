@@ -18,8 +18,9 @@ import argparse
 
 import numpy as np
 
+from repro.api import (DataSpec, ModelSpec, OptimizerSpec, RunSpec,
+                       SyncSpec, build_session)
 from repro.data.synthetic import DataConfig, loss_floor
-from repro.launch.train import Trainer
 from repro.models.config import ModelConfig
 
 PRESETS = {
@@ -55,15 +56,24 @@ def main() -> None:
     data_cfg = DataConfig(vocab_size=cfg.vocab_size,
                           seq_len=preset["seq"],
                           global_batch=preset["batch"])
-    trainer = Trainer(cfg, data_cfg, sync=args.sync, lr=args.lr,
-                      s_lower=1, s_upper=3, optimizer="adamw",
-                      checkpoint_dir=args.checkpoint_dir, save_every=50)
-    if args.resume and trainer.resume():
-        print(f"resumed from step {trainer.step_idx}")
-    from repro.models.registry import count_params
-    print(f"model {cfg.name}: {count_params(cfg):,} params; "
-          f"data floor ~{loss_floor(data_cfg):.3f} nats")
-    log = trainer.train(args.steps, verbose=True, log_every=25)
+    # The spec describes the run; the hand-built ModelConfig rides in as
+    # a build-time override (spec archs name the registry).
+    spec = RunSpec(model=ModelSpec(arch="custom"),
+                   data=DataSpec(seq_len=preset["seq"],
+                                 global_batch=preset["batch"]),
+                   optimizer=OptimizerSpec(name="adamw", lr=args.lr),
+                   sync=SyncSpec(mode=args.sync, s_lower=1, s_upper=3))
+    with build_session(spec, model_config=cfg, verbose=True,
+                       checkpoint_dir=args.checkpoint_dir,
+                       save_every=50, resume=args.resume) as session:
+        session.start()
+        if args.resume and session.resumed:
+            print(f"resumed from step {session.trainer.step_idx}")
+        from repro.models.registry import count_params
+        print(f"model {cfg.name}: {count_params(cfg):,} params; "
+              f"data floor ~{loss_floor(data_cfg):.3f} nats")
+        session.run(args.steps)
+        log = session.trainer.log
     print(f"done: loss {log.losses[0]:.3f} -> {log.losses[-1]:.3f}, "
           f"mean step {np.mean(log.step_times[1:]) * 1e3:.0f} ms, "
           f"mean DSSP delay {np.mean(log.delays):.2f}")

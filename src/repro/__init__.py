@@ -5,6 +5,8 @@ Reproduction + TPU-pod-scale adaptation of:
   Training for Deep Learning" (CS.DC 2019).
 
 Public API surface:
+  repro.api       — declarative RunSpec -> TrainingSession session layer
+                    (the supported way to wire any run; start here)
   repro.core      — DSSP/SSP/ASP/BSP policies + synchronization controller
   repro.ps        — runnable parameter-server substrate (threads + simulator)
   repro.models    — model zoo (dense/MoE/SSM/hybrid/enc-dec backbones)

@@ -1,0 +1,59 @@
+"""Legacy-construction bookkeeping for the ``repro.api`` migration.
+
+The declarative session layer (``repro.api.build_session``) is the
+supported way to wire servers, workers and transports together.  The
+old direct constructors keep working, but emit a single
+``DeprecationWarning`` per class naming the replacement — unless the
+construction happens *inside* the api builder itself, which is the one
+place that is allowed to call them without ceremony.
+
+This module is import-light on purpose (stdlib only): it is imported at
+module scope by ``repro.ps`` and must never create an import cycle with
+``repro.api``.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+import warnings
+
+_local = threading.local()
+_warned: set = set()
+
+
+@contextlib.contextmanager
+def api_managed():
+    """Mark the current thread as 'inside the repro.api builder':
+    legacy-constructor warnings are suppressed within the block."""
+    depth = getattr(_local, "depth", 0)
+    _local.depth = depth + 1
+    try:
+        yield
+    finally:
+        _local.depth = depth
+
+
+def in_api_build() -> bool:
+    return getattr(_local, "depth", 0) > 0
+
+
+def warn_legacy(name: str, replacement: str) -> None:
+    """Emit one DeprecationWarning per process for ``name``.
+
+    No-op while the api builder is constructing on this thread: the
+    builder IS the replacement and must stay warning-free.
+    """
+    if in_api_build() or name in _warned:
+        return
+    _warned.add(name)
+    warnings.warn(
+        f"constructing {name} directly is deprecated; build the run "
+        f"declaratively via {replacement} (see src/repro/api/README.md "
+        "for the migration table)",
+        DeprecationWarning, stacklevel=3)
+
+
+def reset_legacy_warnings() -> None:
+    """Forget which classes already warned (test hook)."""
+    _warned.clear()

@@ -1,0 +1,82 @@
+"""repro.api — the declarative session layer.
+
+One frozen ``RunSpec`` describes the whole run (model, data, optimizer,
+sync paradigm, server kind, wire format, transport); ``build_session``
+turns it into a context-managed ``TrainingSession``; every server
+implements ``ParameterServerProtocol`` so no caller ever branches on a
+concrete server type.
+
+    from repro.api import RunSpec, SyncSpec, ServerSpec, build_session
+
+    spec = RunSpec(sync=SyncSpec(mode="dssp", s_lower=1, s_upper=4),
+                   ps=ServerSpec(kind="sharded", shards=4, workers=4))
+    with build_session(spec) as session:
+        session.run(steps=200)
+        print(session.metrics())
+
+Schema lock: ``python -m repro.api --dump-schema`` (CI diffs it against
+the checked-in ``schema.json``).  Field reference + migration table
+from the old flag/constructor surface: ``src/repro/api/README.md``.
+"""
+
+from repro.api.protocol import ParameterServerProtocol
+from repro.api.session import (
+    SpmdSession,
+    ThreadedPSSession,
+    TrainingSession,
+    TransportPSSession,
+    build_server,
+    build_session,
+    register_engine,
+    register_server,
+)
+from repro.api.spec import (
+    APPLY_MODES,
+    CUSTOM_ARCH,
+    DataSpec,
+    ModelSpec,
+    OptimizerSpec,
+    RunSpec,
+    SERVER_KINDS,
+    SPEC_VERSION,
+    ServerSpec,
+    SpecError,
+    SYNC_MODES,
+    SyncSpec,
+    TRANSPORT_KINDS,
+    TransportSpec,
+    WIRE_COMPRESSIONS,
+    WIRE_FORMATS,
+    WireSpec,
+    dump_schema,
+)
+
+__all__ = [
+    "APPLY_MODES",
+    "CUSTOM_ARCH",
+    "DataSpec",
+    "ModelSpec",
+    "OptimizerSpec",
+    "ParameterServerProtocol",
+    "RunSpec",
+    "SERVER_KINDS",
+    "SPEC_VERSION",
+    "SYNC_MODES",
+    "ServerSpec",
+    "SpecError",
+    "SpmdSession",
+    "SyncSpec",
+    "TRANSPORT_KINDS",
+    "ThreadedPSSession",
+    "TrainingSession",
+    "TransportPSSession",
+    "TransportSpec",
+    "WIRE_COMPRESSIONS",
+    "WIRE_FORMATS",
+    "WireSpec",
+    "build_server",
+    "build_session",
+    "dump_schema",
+    "register_engine",
+    "register_server",
+]

@@ -1,0 +1,425 @@
+"""The declarative run specification: one frozen config tree per run.
+
+``RunSpec`` describes *what* to train and *how* the distributed pieces
+fit together — model, data, optimizer, synchronization paradigm, server
+kind, wire format, transport — and validates the whole combination at
+construction time.  Invalid combinations (a tree wire over a process
+transport, a fused apply on the monolithic server, ASP on the SPMD
+pipeline, ...) raise ``SpecError`` with an actionable message instead
+of failing deep inside a worker thread.
+
+The tree is plain data: ``to_dict``/``from_dict`` round-trip it
+bitwise, ``to_json``/``from_json`` wrap that for files, and
+``dump_schema`` emits the full field/choice/default schema (the CI
+API-surface lock: ``python -m repro.api --dump-schema``).
+
+Importing this module is light (no jax), so tooling can load and
+``dump_schema`` anywhere.  *Constructing* a spec whose ``model.arch``
+names a registry architecture imports ``repro.configs`` (and thus jax)
+to validate the name; ``arch='custom'`` stays import-free.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Callable, Dict, Optional
+
+#: Bump when a field changes meaning; ``from_dict`` accepts its own
+#: version only (the schema lock makes accidental drift loud).
+SPEC_VERSION = 1
+
+SYNC_MODES = ("bsp", "asp", "ssp", "dssp")
+ESTIMATORS = ("last", "ema", "median")
+SERVER_KINDS = ("none", "mono", "sharded")
+APPLY_MODES = ("tree", "fused", "packed")
+GATING_MODES = ("sharded", "global")
+WIRE_FORMATS = ("tree", "packed")
+WIRE_COMPRESSIONS = ("none", "int8", "topk")
+TRANSPORT_KINDS = ("inproc", "tcp", "shmem")
+
+#: Sentinel arch meaning "parameters are supplied at build time"
+#: (benchmarks / toy problems that never touch the model registry).
+CUSTOM_ARCH = "custom"
+
+
+class SpecError(ValueError):
+    """An invalid RunSpec field or combination of fields."""
+
+
+def _require(cond: bool, msg: str) -> None:
+    if not cond:
+        raise SpecError(msg)
+
+
+def _choice(value: str, field: str, choices) -> None:
+    _require(value in choices,
+             f"{field}={value!r} is not one of {list(choices)}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """What to train.  ``arch`` is a ``repro.configs`` key (dashed CLI
+    id) or ``'custom'`` when params/step come from build-time
+    overrides; ``smoke`` selects the reduced config."""
+
+    arch: str = "xlstm-125m"
+    smoke: bool = True
+
+    def __post_init__(self):
+        _require(bool(self.arch), "model.arch must be a non-empty name")
+        if self.arch != CUSTOM_ARCH:
+            from repro.configs import arch_names  # light import
+            _require(self.arch in arch_names(),
+                     f"model.arch={self.arch!r} is not a known "
+                     f"architecture (have {arch_names()} or "
+                     f"{CUSTOM_ARCH!r} for build-time overrides)")
+
+
+@dataclasses.dataclass(frozen=True)
+class DataSpec:
+    """The deterministic synthetic stream (vocab comes from the model)."""
+
+    seq_len: int = 64
+    global_batch: int = 8
+    seed: int = 0
+
+    def __post_init__(self):
+        _require(self.seq_len > 0, "data.seq_len must be positive")
+        _require(self.global_batch > 0,
+                 "data.global_batch must be positive")
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerSpec:
+    """Update rule.  On the SPMD engine ``name`` is a ``repro.optim``
+    optimizer (``None`` = the model config's default); on the PS
+    engines the server steps SGD/momentum (``name`` must then be
+    ``None``, ``'sgd'`` or ``'momentum'``).  ``staleness_damping=None``
+    keeps each engine's historical default (SPMD: on, PS server:
+    off)."""
+
+    name: Optional[str] = None
+    lr: float = 3e-3
+    momentum: float = 0.0
+    staleness_damping: Optional[bool] = None
+
+    def __post_init__(self):
+        _require(self.lr > 0, "optimizer.lr must be positive")
+        _require(0.0 <= self.momentum < 1.0,
+                 "optimizer.momentum must be in [0, 1)")
+
+
+@dataclasses.dataclass(frozen=True)
+class SyncSpec:
+    """Synchronization paradigm (the paper's axis).  ``staleness`` is
+    the SSP threshold; ``[s_lower, s_upper]`` the DSSP range;
+    ``estimator`` the Algorithm-2 interval predictor."""
+
+    mode: str = "dssp"
+    staleness: int = 1
+    s_lower: int = 0
+    s_upper: int = 3
+    estimator: str = "last"
+
+    def __post_init__(self):
+        _choice(self.mode, "sync.mode", SYNC_MODES)
+        _choice(self.estimator, "sync.estimator", ESTIMATORS)
+        _require(self.staleness >= 0, "sync.staleness must be >= 0")
+        _require(0 <= self.s_lower <= self.s_upper,
+                 f"sync range needs 0 <= s_lower <= s_upper, got "
+                 f"[{self.s_lower}, {self.s_upper}]")
+
+    def policy_factory(self, n_workers: int) -> Callable[[], Any]:
+        """Zero-arg factory of fresh ``SyncPolicy`` instances for this
+        paradigm — the spec-level face of ``make_policy_factory``."""
+        from repro.core.policies import make_policy_factory
+        return make_policy_factory(
+            self.mode, n_workers=n_workers, staleness=self.staleness,
+            s_lower=self.s_lower, s_upper=self.s_upper,
+            estimator=self.estimator)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServerSpec:
+    """Where the global weights live.
+
+    ``kind='none'``    SPMD delayed-gradient pipeline (no server).
+    ``kind='mono'``    monolithic ``ParameterServer`` (one lock);
+                       ``apply`` in {tree, packed}.
+    ``kind='sharded'`` ``ShardedParameterServer`` with ``shards``
+                       partitions; ``apply`` in {tree, fused}.
+    """
+
+    kind: str = "none"
+    shards: int = 0
+    workers: int = 4
+    apply: str = "tree"
+    gating: str = "sharded"
+    straggler: float = 1.0
+
+    def __post_init__(self):
+        _choice(self.kind, "ps.kind", SERVER_KINDS)
+        _choice(self.apply, "ps.apply", APPLY_MODES)
+        _choice(self.gating, "ps.gating", GATING_MODES)
+        _require(self.workers >= 1, "ps.workers must be >= 1")
+        _require(self.straggler >= 1.0,
+                 "ps.straggler is a slowdown factor (>= 1.0)")
+        if self.kind == "none":
+            _require(self.shards == 0,
+                     "ps.kind='none' (SPMD pipeline) takes ps.shards=0; "
+                     "to shard a parameter server use ps.kind='sharded'")
+            _require(self.apply == "tree",
+                     "ps.apply selects a server apply path; the SPMD "
+                     "pipeline (ps.kind='none') has none — leave it "
+                     "'tree'")
+        elif self.kind == "mono":
+            _require(self.shards in (0, 1),
+                     "the monolithic server is one shard by definition "
+                     f"(ps.shards={self.shards}); use ps.kind='sharded' "
+                     "to partition")
+            _require(self.apply != "fused",
+                     "ps.apply='fused' is the sharded server's batched "
+                     "apply; the monolithic server's packed path is "
+                     "ps.apply='packed' (or use ps.kind='sharded')")
+        else:  # sharded
+            _require(self.shards >= 1,
+                     "ps.kind='sharded' needs ps.shards >= 1")
+            _require(self.apply != "packed",
+                     "ps.apply='packed' is the monolithic server's "
+                     "resident-wire mode; the sharded equivalent is "
+                     "ps.apply='fused'")
+        _require(self.gating == "sharded" or self.kind == "sharded",
+                 "ps.gating='global' only applies to the sharded "
+                 "server (it is the monolithic gating semantics)")
+
+
+@dataclasses.dataclass(frozen=True)
+class WireSpec:
+    """Push/pull representation: per-leaf pytrees or the zero-repack
+    packed (rows, 512) buffer, plus gradient compression."""
+
+    format: str = "tree"
+    compression: str = "none"
+    topk_fraction: float = 0.05
+
+    def __post_init__(self):
+        _choice(self.format, "wire.format", WIRE_FORMATS)
+        _choice(self.compression, "wire.compression", WIRE_COMPRESSIONS)
+        _require(0.0 < self.topk_fraction <= 1.0,
+                 "wire.topk_fraction must be in (0, 1]")
+
+
+@dataclasses.dataclass(frozen=True)
+class TransportSpec:
+    """How workers reach the server.  ``inproc`` runs workers in the
+    server's process (threads); ``tcp``/``shmem`` spawn real worker
+    processes speaking the packed frame protocol.  ``endpoint=True``
+    serves the frame codec even in-process (the serialization
+    baseline)."""
+
+    kind: str = "inproc"
+    endpoint: bool = False
+    host: str = "127.0.0.1"
+    port: int = 0
+
+    def __post_init__(self):
+        _choice(self.kind, "transport.kind", TRANSPORT_KINDS)
+        _require(0 <= self.port <= 65535,
+                 "transport.port must be a port number (0 = ephemeral)")
+
+    @property
+    def serves_endpoint(self) -> bool:
+        """True when the run speaks the frame protocol (always for the
+        process transports; opt-in for inproc)."""
+        return self.kind != "inproc" or self.endpoint
+
+
+@dataclasses.dataclass(frozen=True)
+class RunSpec:
+    """The whole run, validated as a unit.
+
+    Cross-field rules (each raises ``SpecError`` at construction):
+
+    * process transports (tcp/shmem) and in-process endpoints carry the
+      packed wire format only — ``wire.format='tree'`` is rejected;
+    * the packed wire needs a packed-resident store — ``ps.apply`` must
+      be ``'packed'`` (mono) or ``'fused'`` (sharded);
+    * the SPMD pipeline (``ps.kind='none'``) trains bsp/ssp/dssp only
+      (ASP exists in the PS layer) and has no packed wire;
+    * process transports need a parameter server and a registry arch
+      (spawned workers rebuild the model from its config name);
+    * compression needs an engine with a compression path (SPMD or the
+      sharded server).
+    """
+
+    model: ModelSpec = dataclasses.field(default_factory=ModelSpec)
+    data: DataSpec = dataclasses.field(default_factory=DataSpec)
+    optimizer: OptimizerSpec = dataclasses.field(
+        default_factory=OptimizerSpec)
+    sync: SyncSpec = dataclasses.field(default_factory=SyncSpec)
+    ps: ServerSpec = dataclasses.field(default_factory=ServerSpec)
+    wire: WireSpec = dataclasses.field(default_factory=WireSpec)
+    transport: TransportSpec = dataclasses.field(
+        default_factory=TransportSpec)
+
+    def __post_init__(self):
+        ps, wire, tp, sync = self.ps, self.wire, self.transport, self.sync
+        if ps.kind == "none":
+            _require(sync.mode != "asp",
+                     "sync.mode='asp' is not trainable on the SPMD "
+                     "pipeline (ps.kind='none'); use a parameter server "
+                     "(ps.kind='mono'/'sharded')")
+            _require(wire.format == "tree",
+                     "wire.format='packed' is the parameter-server hot "
+                     "path; the SPMD pipeline has no wire — set "
+                     "ps.kind='mono'/'sharded' or wire.format='tree'")
+            _require(tp.kind == "inproc" and not tp.endpoint,
+                     f"transport.kind={tp.kind!r} moves PS workers into "
+                     "separate processes; the SPMD pipeline "
+                     "(ps.kind='none') has no PS workers — set "
+                     "ps.kind='sharded' (or 'mono') to use a transport")
+        if wire.format == "packed":
+            _require(ps.apply in ("fused", "packed"),
+                     "wire.format='packed' needs a packed-resident "
+                     "store: ps.apply='packed' (mono) or 'fused' "
+                     "(sharded); ps.apply='tree' re-packs every push")
+        if tp.serves_endpoint:
+            _require(wire.format == "packed",
+                     f"transport.kind={tp.kind!r} carries the packed "
+                     "frame protocol only — wire.format='tree' cannot "
+                     "cross a process boundary; set wire.format="
+                     "'packed' (and ps.apply='fused'/'packed')")
+        if tp.kind != "inproc":
+            _require(ps.kind != "none",
+                     "process transports live in the PS layer; set "
+                     "ps.kind='mono' or 'sharded'")
+        if wire.compression != "none":
+            _require(ps.kind != "mono",
+                     f"wire.compression={wire.compression!r} has no "
+                     "monolithic-server path; use ps.kind='sharded' "
+                     "(fused wire compression) or ps.kind='none' "
+                     "(worker-side error feedback)")
+        if ps.kind != "none" and self.optimizer.name is not None:
+            _require(self.optimizer.name in ("sgd", "momentum"),
+                     f"optimizer.name={self.optimizer.name!r}: the "
+                     "parameter server steps SGD/momentum (workers send "
+                     "raw gradients); rich optimizers run on the SPMD "
+                     "engine (ps.kind='none')")
+
+    # ------------------------------------------------------------ dicts
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["version"] = SPEC_VERSION
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "RunSpec":
+        if not isinstance(d, dict):
+            raise SpecError(f"spec must be a dict, got {type(d).__name__}")
+        d = dict(d)
+        version = d.pop("version", SPEC_VERSION)
+        _require(version == SPEC_VERSION,
+                 f"spec version {version!r} != supported {SPEC_VERSION}")
+        sections = {f.name: f for f in dataclasses.fields(cls)}
+        unknown = sorted(set(d) - set(sections))
+        _require(not unknown,
+                 f"unknown spec section(s) {unknown}; valid sections: "
+                 f"{sorted(sections)}")
+        kwargs = {}
+        for name, field in sections.items():
+            sub = d.get(name)
+            if sub is None:
+                continue
+            sub_cls = field.default_factory
+            kwargs[name] = _sub_from_dict(sub_cls, name, sub)
+        return cls(**kwargs)
+
+    # ------------------------------------------------------------ json
+    def to_json(self, **json_kw) -> str:
+        json_kw.setdefault("indent", 2)
+        json_kw.setdefault("sort_keys", True)
+        return json.dumps(self.to_dict(), **json_kw)
+
+    @classmethod
+    def from_json(cls, text: str) -> "RunSpec":
+        try:
+            d = json.loads(text)
+        except json.JSONDecodeError as e:
+            raise SpecError(f"spec is not valid JSON: {e}") from e
+        return cls.from_dict(d)
+
+    # ------------------------------------------------------- conveniences
+    def replace(self, **sections) -> "RunSpec":
+        """``dataclasses.replace`` that re-runs whole-tree validation."""
+        return dataclasses.replace(self, **sections)
+
+    @property
+    def engine(self) -> str:
+        """Which session engine this spec selects (see repro.api.session)."""
+        if self.ps.kind == "none":
+            return "spmd"
+        if self.transport.serves_endpoint:
+            return "ps-transport"
+        return "ps-threads"
+
+
+def _sub_from_dict(sub_cls, section: str, sub: Any):
+    if not isinstance(sub, dict):
+        raise SpecError(f"spec section {section!r} must be a dict, got "
+                        f"{type(sub).__name__}")
+    valid = {f.name for f in dataclasses.fields(sub_cls)}
+    unknown = sorted(set(sub) - valid)
+    _require(not unknown,
+             f"unknown field(s) {unknown} in spec section {section!r}; "
+             f"valid fields: {sorted(valid)}")
+    return sub_cls(**sub)
+
+
+# ----------------------------------------------------------------- schema
+#: field -> closed choice set (the schema surfaces these; validation
+#: enforces them in each dataclass's __post_init__).
+_FIELD_CHOICES = {
+    ("sync", "mode"): SYNC_MODES,
+    ("sync", "estimator"): ESTIMATORS,
+    ("ps", "kind"): SERVER_KINDS,
+    ("ps", "apply"): APPLY_MODES,
+    ("ps", "gating"): GATING_MODES,
+    ("wire", "format"): WIRE_FORMATS,
+    ("wire", "compression"): WIRE_COMPRESSIONS,
+    ("transport", "kind"): TRANSPORT_KINDS,
+}
+
+
+def dump_schema() -> Dict[str, Any]:
+    """Machine-readable schema of the RunSpec surface: every section,
+    field, type, default and closed choice set.  Checked in at
+    ``src/repro/api/schema.json`` and diffed by CI — any change to the
+    public spec surface must update that file in the same PR."""
+    schema: Dict[str, Any] = {"spec_version": SPEC_VERSION, "sections": {}}
+    for sec_field in dataclasses.fields(RunSpec):
+        if sec_field.name == "version":
+            continue
+        sub_cls = sec_field.default_factory
+        fields = {}
+        for f in dataclasses.fields(sub_cls):
+            entry: Dict[str, Any] = {
+                "type": _type_name(f.type),
+                "default": f.default,
+            }
+            choices = _FIELD_CHOICES.get((sec_field.name, f.name))
+            if choices is not None:
+                entry["choices"] = list(choices)
+            fields[f.name] = entry
+        schema["sections"][sec_field.name] = {
+            "class": sub_cls.__name__,
+            "fields": fields,
+        }
+    return schema
+
+
+def _type_name(annotation) -> str:
+    text = annotation if isinstance(annotation, str) else str(annotation)
+    return (text.replace("typing.", "")
+                .replace("builtins.", "")
+                .replace("<class '", "").replace("'>", ""))

@@ -53,6 +53,29 @@ class WorkerTask:
     def to_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
 
+    @classmethod
+    def from_spec(cls, spec, n_iterations: int) -> "WorkerTask":
+        """Derive the spawn payload from a ``repro.api.RunSpec``.
+
+        Only the int8 compression rides the frames (bytes shrink on the
+        OS wire; the codec dequantizes on receipt) — topk has no
+        frame-level encoding and stays a server-side pass.
+
+        ``n_shards`` is clamped to >= 1: a monolithic spec may carry
+        ``ps.shards=0`` (the ServerSpec default), but the worker-side
+        ``build_shard_plan`` — and the mono server's own packed plan —
+        are single-shard.
+        """
+        return cls(arch=spec.model.arch,
+                   n_shards=max(1, spec.ps.shards),
+                   n_iterations=n_iterations,
+                   smoke=spec.model.smoke,
+                   seq_len=spec.data.seq_len,
+                   global_batch=spec.data.global_batch,
+                   data_seed=spec.data.seed,
+                   compress=("int8" if spec.wire.compression == "int8"
+                             else "none"))
+
 
 @dataclasses.dataclass
 class WorkerResult:

@@ -19,13 +19,11 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import functools
 import time
 from typing import Callable, List, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs import get_config, get_smoke_config
@@ -197,176 +195,96 @@ def train_ps(cfg, data_cfg: DataConfig, *, sync: str, n_steps: int,
              wire_format: str = "tree", transport: str = "inproc",
              arch: Optional[str] = None, smoke: bool = True,
              verbose: bool = False):
-    """Real-training path through the sharded threaded parameter server.
+    """Deprecated shim over ``repro.api.build_session``.
 
-    ``n_workers`` threads run the same jitted value_and_grad step on
-    worker-seeded shards of the synthetic stream and push raw gradients
-    into a ``ShardedParameterServer`` (``--ps-shards N``); per-shard wire
-    compression and the batched fused apply are selectable.  This is the
-    Algorithm-1 execution model (the SPMD ``Trainer`` is the
-    delayed-gradient emulation of it).
-
-    ``wire_format='packed'`` (requires/implies ``apply_mode='fused'``)
-    runs the zero-repack hot path: each worker's jitted step takes the
-    server's packed (rows, 512) wire buffer, unpacks it to params as
-    in-jit views, differentiates, and re-packs the gradients into its
-    own donated wire buffer — the pytree<->wire boundary is crossed once
-    per direction per step, and the server never repacks.  The tree
-    ``compressor`` becomes the server's fused wire compression.
-
-    ``transport='tcp'``/``'shmem'`` replaces the worker THREADS with
-    spawned worker PROCESSES (``repro.launch.proc_pool``) that speak the
-    packed frame protocol to a ``PSServerEndpoint`` — the same packed
-    buffer, now as bytes on a real wire, with ``straggler`` producing a
-    genuinely slower separate interpreter.  Implies the packed wire
-    format; ``arch`` must name the config so workers can rebuild it.
+    The PS training path lives in the session engines now
+    (``repro.api.session``); this wrapper keeps the old keyword surface
+    alive, translates it into a ``RunSpec`` and returns the trained
+    session's server (the old return value).
     """
-    from repro.core.policies import make_policy_factory
-    from repro.data.synthetic import batches as data_batches
-    from repro.ps.server import ServerOptimizer
-    from repro.ps.sharded import ShardedParameterServer
-    from repro.ps.worker import PSWorker, run_cluster
+    import warnings
 
-    if wire_format not in ("tree", "packed"):
-        raise ValueError(f"unknown wire format {wire_format!r}")
-    if transport not in ("inproc", "tcp", "shmem"):
-        raise ValueError(f"unknown transport {transport!r}")
+    from repro import api
+
+    warnings.warn(
+        "train_ps is deprecated; build a repro.api.RunSpec and call "
+        "build_session(spec).run(steps) instead (see "
+        "src/repro/api/README.md)", DeprecationWarning, stacklevel=2)
+    if transport != "inproc" and arch is None:
+        raise ValueError("transport workers rebuild the model from its "
+                         "config name — pass arch=")
+    spec = spec_from_flags(
+        arch=arch or cfg.name, smoke=smoke, sync=sync,
+        seq=data_cfg.seq_len, batch=data_cfg.global_batch,
+        seed=data_cfg.seed, lr=lr, s_lower=s_lower, s_upper=s_upper,
+        compress=compressor, ps_shards=max(1, n_shards),
+        ps_workers=n_workers, ps_apply=apply_mode, ps_wire=wire_format,
+        ps_gating=gating, ps_straggler=straggler, transport=transport)
+    session = api.build_session(spec, verbose=verbose)
+    session.run(n_steps)
+    return session.server
+
+
+# ------------------------------------------------------- flags -> spec
+def spec_from_flags(*, arch: str, smoke: bool = True, sync: str = "dssp",
+                    seq: int = 64, batch: int = 8,
+                    seed: int = 0, lr: float = 3e-3,
+                    optimizer: Optional[str] = None,
+                    s_lower: int = 0, s_upper: int = 3,
+                    compress: str = "none", ps_shards: int = 0,
+                    ps_workers: int = 4, ps_apply: str = "tree",
+                    ps_wire: str = "tree", ps_gating: str = "sharded",
+                    ps_straggler: float = 1.0,
+                    transport: str = "inproc"):
+    """Translate the historical CLI flag surface into a ``RunSpec``.
+
+    Keeps the old implication chain (`--transport tcp` implies the
+    packed wire; packed wire implies the fused apply; process
+    transports imply `--ps-shards 1`) so every flag combination that
+    used to run still runs — the spec layer itself is stricter and
+    rejects the un-implied combinations outright.
+    """
+    from repro import api
+
+    if transport != "inproc" and ps_shards < 1:
+        ps_shards = 1          # process transports live in the PS layer
     if transport != "inproc":
-        wire_format = "packed"  # frames carry the packed buffer only
-    packed = wire_format == "packed"
-    if packed and apply_mode == "tree":
-        apply_mode = "fused"   # packed pushes fold through the kernel
-
-    loss_fn = registry.loss_fn(cfg)
-    params = registry.init_params(cfg, jax.random.PRNGKey(0))
-
-    def worker_batches(w: int):
-        wcfg = dataclasses.replace(data_cfg, seed=data_cfg.seed + 1 + w)
-        for b in data_batches(cfg, wcfg):
-            yield {k: jnp.asarray(v) for k, v in b.items()}
-
-    policy_factory = make_policy_factory(
-        sync, n_workers=n_workers, staleness=max(s_lower, 1),
-        s_lower=s_lower, s_upper=s_upper)
-    # Where compression happens depends on where the wire is.  On the
-    # process transports, int8 compresses the FRAMES (bytes actually
-    # shrink on the OS wire; the codec dequantizes on receipt, so the
-    # server must not quantize again).  In-process, it is the server's
-    # fused error-feedback pass, as before.  topk has no frame-level
-    # encoding and stays server-side on every path.
-    frame_compress = ("int8" if transport != "inproc"
-                      and compressor == "int8" else "none")
-    wire_compression = (None if frame_compress != "none"
-                        else compressor if packed else None)
-    server = ShardedParameterServer(
-        params, policy_factory, lambda: ServerOptimizer(lr=lr),
-        n_workers, n_shards, gating=gating, apply_mode=apply_mode,
-        compressor=None if packed else make_compressor(compressor),
-        wire_compression=wire_compression)
-    if verbose:
-        print(server.plan.describe())
-
-    if transport != "inproc":
-        # ---- process-isolated path: bytes on a real wire ----
-        from repro.launch.proc_pool import (ProcessWorkerPool, WorkerTask,
-                                            raise_on_failure)
-        from repro.transport import PSServerEndpoint, make_transport
-
-        if arch is None:
-            raise ValueError("transport workers rebuild the model from its "
-                             "config name — pass arch=")
-        endpoint = PSServerEndpoint(server)
-        tp = make_transport(transport, n_workers=n_workers)
-        tp.serve(endpoint)
-        iters = max(1, n_steps // n_workers)
-        task = WorkerTask(arch=arch, n_shards=n_shards, n_iterations=iters,
-                          smoke=smoke,
-                          seq_len=data_cfg.seq_len,
-                          global_batch=data_cfg.global_batch,
-                          data_seed=data_cfg.seed,
-                          compress=frame_compress)
-        slowdowns = [straggler if w == n_workers - 1 else 1.0
-                     for w in range(n_workers)]
-        pool = ProcessWorkerPool(tp.address(), task, n_workers,
-                                 slowdowns=slowdowns)
-        pool.start()
-        try:
-            results = pool.join(timeout=1200.0, endpoint=endpoint)
-        finally:
-            server.stop()
-            tp.shutdown()
-            pool.terminate()
-        raise_on_failure(results)
-        if verbose:
-            m = server.metrics
-            done = sum(r.iterations_done for r in results)
-            print(f"workers={n_workers} ({transport}) iterations={done} "
-                  f"pushes={m.total_pushes} applied_shard_updates="
-                  f"{server.version} max_stale={m.max_staleness}")
-        return server
-
-    if packed:
-        plan = server.plan
-
-        @functools.partial(jax.jit, donate_argnums=(1,))
-        def _packed_step(wire_p, wire_g_prev, batch):
-            p = plan.unpack(wire_p)
-            (loss, _), grads = jax.value_and_grad(
-                loss_fn, has_aux=True)(p, batch)
-            # Write the packed grads INTO the donated buffer: the output
-            # aliases wire_g_prev's memory.  A plain `return plan.pack(...)`
-            # would leave wire_g_prev unread, and jit's keep_unused=False
-            # prunes unread args before donation can apply.
-            return wire_g_prev.at[:].set(plan.pack(grads)), {"loss": loss}
-
-        def make_step():
-            # Each worker owns ONE gradient wire buffer, donated back
-            # into the jit every iteration (the output reuses its
-            # memory) — the params wire buffer is the server's shared
-            # snapshot and must NOT be donated.
-            from repro.wireformat import WIRE_LANES
-            layout = plan.wire_layout()
-            state = {"g": jnp.zeros((layout.total_rows, WIRE_LANES),
-                                    layout.dtype)}
-
-            def step(wire_p, batch):
-                g, aux = _packed_step(wire_p, state["g"], batch)
-                state["g"] = g
-                return g, aux
-
-            return step
+        ps_wire = "packed"     # frames carry the packed buffer only
+    if ps_wire == "packed" and ps_apply == "tree":
+        ps_apply = "fused"     # packed pushes fold through the kernel
+    if ps_shards >= 1:
+        ps = api.ServerSpec(kind="sharded", shards=ps_shards,
+                            workers=ps_workers, apply=ps_apply,
+                            gating=ps_gating, straggler=ps_straggler)
+        opt = api.OptimizerSpec(lr=lr)
     else:
-        @jax.jit
-        def _tree_step(p, batch):
-            (loss, _), grads = jax.value_and_grad(
-                loss_fn, has_aux=True)(p, batch)
-            return grads, {"loss": loss}
-
-        def make_step():
-            return _tree_step
-
-    iters = max(1, n_steps // n_workers)
-    workers = [PSWorker(w, server, make_step(), worker_batches(w), iters,
-                        speed_factor=(straggler if w == n_workers - 1
-                                      else 1.0),
-                        wire_format=wire_format,
-                        loss_from_aux=lambda a: float(a["loss"]))
-               for w in range(n_workers)]
-    run_cluster(server, workers, timeout=1200.0)
-    if verbose:
-        m = server.metrics
-        print(f"pushes={m.total_pushes} applied_shard_updates="
-              f"{server.version} wait_s={m.total_wait:.2f} "
-              f"max_stale={m.max_staleness}")
-        for sm in server.shard_metrics():
-            print(f"  {sm.policy}: max_stale={sm.max_staleness} "
-                  f"wait_s={sm.total_wait:.2f}")
-    return server
+        ps = api.ServerSpec(kind="none", shards=0, workers=ps_workers)
+        opt = api.OptimizerSpec(name=optimizer, lr=lr)
+    return api.RunSpec(
+        model=api.ModelSpec(arch=arch, smoke=smoke),
+        data=api.DataSpec(seq_len=seq, global_batch=batch, seed=seed),
+        optimizer=opt,
+        sync=api.SyncSpec(mode=sync, staleness=max(s_lower, 1),
+                          s_lower=s_lower, s_upper=s_upper),
+        ps=ps,
+        wire=api.WireSpec(format=ps_wire if ps_shards >= 1 else "tree",
+                          compression=compress),
+        transport=api.TransportSpec(kind=transport))
 
 
 # -------------------------------------------------------------------- CLI
 def main() -> None:
+    from repro import api
+
     ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--spec", default="", metavar="RUN.json",
+                    help="load the whole run from a RunSpec JSON file "
+                         "(repro.api); every other wiring flag is then "
+                         "rejected — the spec is the single source of "
+                         "truth")
+    ap.add_argument("--dump-spec", action="store_true",
+                    help="print the RunSpec these flags denote as JSON "
+                         "and exit (seed a --spec file)")
     ap.add_argument("--arch", default="xlstm-125m")
     ap.add_argument("--smoke", action="store_true", default=True,
                     help="reduced config (full configs need a TPU mesh)")
@@ -413,14 +331,51 @@ def main() -> None:
                          "--ps-shards 1 if unset)")
     args = ap.parse_args()
 
-    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
-                          global_batch=args.batch)
+    if args.spec:
+        # Every wiring flag (anything a RunSpec field covers) is
+        # rejected alongside --spec; only run-control flags (--steps,
+        # checkpointing, --dump-spec) compose with it.
+        wired = [flag for flag, default, got in (
+            ("--arch", "xlstm-125m", args.arch),
+            ("--full", True, args.smoke),
+            ("--sync", "dssp", args.sync),
+            ("--batch", 8, args.batch),
+            ("--seq", 64, args.seq),
+            ("--lr", 3e-3, args.lr),
+            ("--optimizer", None, args.optimizer),
+            ("--s-lower", 0, args.s_lower),
+            ("--s-upper", 3, args.s_upper),
+            ("--compress", "none", args.compress),
+            ("--ps-shards", 0, args.ps_shards),
+            ("--ps-workers", 4, args.ps_workers),
+            ("--ps-apply", "tree", args.ps_apply),
+            ("--ps-wire", "tree", args.ps_wire),
+            ("--ps-gating", "sharded", args.ps_gating),
+            ("--ps-straggler", 1.0, args.ps_straggler),
+            ("--transport", "inproc", args.transport)) if got != default]
+        if wired:
+            ap.error(f"--spec is the single source of truth; drop "
+                     f"{', '.join(wired)} (edit the JSON instead)")
+        with open(args.spec) as f:
+            spec = api.RunSpec.from_json(f.read())
+    else:
+        spec = spec_from_flags(
+            arch=args.arch, smoke=args.smoke, sync=args.sync,
+            seq=args.seq, batch=args.batch, lr=args.lr,
+            optimizer=args.optimizer, s_lower=args.s_lower,
+            s_upper=args.s_upper, compress=args.compress,
+            ps_shards=args.ps_shards, ps_workers=args.ps_workers,
+            ps_apply=args.ps_apply, ps_wire=args.ps_wire,
+            ps_gating=args.ps_gating, ps_straggler=args.ps_straggler,
+            transport=args.transport)
+    if args.dump_spec:
+        print(spec.to_json())
+        return
 
-    if args.transport != "inproc" and args.ps_shards < 1:
-        args.ps_shards = 1  # process transports live in the PS layer
+    cfg = (get_smoke_config(spec.model.arch) if spec.model.smoke
+           else get_config(spec.model.arch))
 
-    if args.ps_shards >= 1:
+    if spec.engine != "spmd":
         ignored = [flag for flag, on in (
             ("--checkpoint-dir", bool(args.checkpoint_dir)),
             ("--resume", args.resume),
@@ -430,43 +385,36 @@ def main() -> None:
                   "path and are ignored with --ps-shards (the PS server "
                   "optimizer is SGD/momentum; checkpointing the sharded "
                   "store is future work)")
-        print(f"arch={cfg.name} sync={args.sync} "
-              f"ps_shards={args.ps_shards} workers={args.ps_workers} "
+        print(f"arch={cfg.name} sync={spec.sync.mode} "
+              f"ps_shards={spec.ps.shards} workers={spec.ps.workers} "
               f"params={registry.count_params(cfg):,}")
-        server = train_ps(cfg, data_cfg, sync=args.sync,
-                          n_steps=args.steps, lr=args.lr,
-                          n_shards=args.ps_shards,
-                          n_workers=args.ps_workers,
-                          s_lower=args.s_lower, s_upper=args.s_upper,
-                          compressor=args.compress,
-                          apply_mode=args.ps_apply,
-                          gating=args.ps_gating,
-                          straggler=args.ps_straggler,
-                          wire_format=args.ps_wire,
-                          transport=args.transport,
-                          arch=args.arch, smoke=args.smoke,
-                          verbose=True)
-        losses = [l for _, _, l in server.metrics.loss_trajectory]
-        if losses:
-            print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f})")
+        with api.build_session(spec, verbose=True) as session:
+            m = session.run(args.steps)
+        if m["final_loss"] is not None:
+            print(f"final loss {m['final_loss']:.4f} "
+                  f"(first {m['first_loss']:.4f})")
         return
 
-    trainer = Trainer(cfg, data_cfg, sync=args.sync, lr=args.lr,
-                      optimizer=args.optimizer,
-                      s_lower=args.s_lower, s_upper=args.s_upper,
-                      compressor=args.compress,
-                      checkpoint_dir=args.checkpoint_dir or None,
-                      save_every=args.save_every)
-    if args.resume:
-        resumed = trainer.resume()
-        print(f"resume: {'ok, at step ' + str(trainer.step_idx) if resumed else 'no checkpoint'}")
-    print(f"arch={cfg.name} sync={args.sync} params="
-          f"{registry.count_params(cfg):,} "
-          f"loss_floor~{loss_floor(data_cfg):.3f}")
-    log = trainer.train(args.steps, verbose=True)
-    print(f"final loss {log.losses[-1]:.4f} "
-          f"(first {log.losses[0]:.4f}); mean delay "
-          f"{np.mean(log.delays):.2f}")
+    data_cfg = DataConfig(vocab_size=cfg.vocab_size,
+                          seq_len=spec.data.seq_len,
+                          global_batch=spec.data.global_batch,
+                          seed=spec.data.seed)
+    with api.build_session(
+            spec, verbose=True,
+            checkpoint_dir=args.checkpoint_dir or None,
+            save_every=args.save_every,
+            resume=args.resume) as session:
+        session.start()
+        if args.resume:
+            at = session.trainer.step_idx
+            print(f"resume: {'ok, at step ' + str(at) if session.resumed else 'no checkpoint'}")
+        print(f"arch={cfg.name} sync={spec.sync.mode} params="
+              f"{registry.count_params(cfg):,} "
+              f"loss_floor~{loss_floor(data_cfg):.3f}")
+        m = session.run(args.steps)
+    print(f"final loss {m['final_loss']:.4f} "
+          f"(first {m['first_loss']:.4f}); mean delay "
+          f"{m['mean_delay']:.2f}")
 
 
 if __name__ == "__main__":

@@ -21,12 +21,35 @@ from typing import Any, Callable, Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from repro._compat import warn_legacy
+from repro.api.protocol import ParameterServerProtocol
 from repro.core.policies import SyncPolicy
 from repro.core.staleness import StalenessTracker
 from repro.ps.metrics import RunMetrics
 
 Params = Any  # pytree
 Grads = Any   # pytree
+
+#: Trace-time counter for the shared apply (tests assert that LR
+#: changes and additional optimizer instances do NOT retrace).
+APPLY_TRACES = {"count": 0}
+
+
+@jax.jit
+def _momentum_sgd(params, grads, velocity, lr, momentum, scale):
+    """One damped momentum-SGD step, shared by every ServerOptimizer.
+
+    ``lr``/``momentum``/``scale`` arrive as traced f32 scalars, NOT
+    Python closures: changing an optimizer's LR (spec-driven schedules)
+    never retraces, and all optimizer instances with like-shaped trees
+    share one compilation cache entry.
+    """
+    APPLY_TRACES["count"] += 1  # Python side runs only when tracing
+    new_v = jax.tree_util.tree_map(
+        lambda v, g: momentum * v + g * scale, velocity, grads)
+    new_p = jax.tree_util.tree_map(
+        lambda p, v: p - lr * v, params, new_v)
+    return new_p, new_v
 
 
 class ServerOptimizer:
@@ -38,25 +61,20 @@ class ServerOptimizer:
         self.momentum = momentum
         self.staleness_damping = staleness_damping
         self._velocity: Optional[Params] = None
-        self._apply = jax.jit(self._apply_impl)
-
-    def _apply_impl(self, params, grads, velocity, scale):
-        new_v = jax.tree_util.tree_map(
-            lambda v, g: self.momentum * v + g * scale, velocity, grads)
-        new_p = jax.tree_util.tree_map(
-            lambda p, v: p - self.lr * v, params, new_v)
-        return new_p, new_v
 
     def step(self, params: Params, grads: Grads, staleness: int) -> Params:
         if self._velocity is None:
             self._velocity = jax.tree_util.tree_map(jnp.zeros_like, grads)
         scale = 1.0 / (1.0 + staleness) if self.staleness_damping else 1.0
-        params, self._velocity = self._apply(
-            params, grads, self._velocity, jnp.asarray(scale, jnp.float32))
+        params, self._velocity = _momentum_sgd(
+            params, grads, self._velocity,
+            jnp.asarray(self.lr, jnp.float32),
+            jnp.asarray(self.momentum, jnp.float32),
+            jnp.asarray(scale, jnp.float32))
         return params
 
 
-class ParameterServer:
+class ParameterServer(ParameterServerProtocol):
     """Global weight store + Algorithm-1 gating.  Thread-safe.
 
     ``apply_mode='packed'`` makes the plan's lane-aligned (rows, 512)
@@ -71,6 +89,9 @@ class ParameterServer:
                  optimizer: ServerOptimizer, n_workers: int,
                  clock: Callable[[], float] = time.monotonic,
                  apply_mode: str = "tree"):
+        warn_legacy("ParameterServer",
+                    "repro.api.build_session(RunSpec(ps=ServerSpec("
+                    "kind='mono', ...)))")
         if apply_mode not in ("tree", "packed"):
             raise ValueError(f"unknown apply mode {apply_mode!r}")
         self._params: Optional[Params] = params
@@ -207,10 +228,8 @@ class ParameterServer:
             self._cond.notify_all()
 
     # -- inspection ----------------------------------------------------------
-    @property
-    def params(self) -> Params:
-        return self.pull(-1)
-
+    # (``params``/``snapshot``/``shutdown`` and the single-shard
+    # ``*_packed_shard`` defaults come from ParameterServerProtocol.)
     def staleness_profile(self) -> Dict[int, int]:
         with self._cond:
             return self.tracker.staleness_profile()

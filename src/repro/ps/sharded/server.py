@@ -66,6 +66,8 @@ from typing import Any, Callable, Dict, List, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro._compat import warn_legacy
+from repro.api.protocol import ParameterServerProtocol
 from repro.core.policies import Decision, SyncPolicy
 from repro.core.staleness import StalenessTracker
 from repro.optim.compression import Compressor
@@ -151,13 +153,13 @@ class _ShardState:
         self.version += 1
 
 
-class ShardedParameterServer:
+class ShardedParameterServer(ParameterServerProtocol):
     """Partitioned weight store + per-shard Algorithm-1 gating.
 
-    Duck-compatible with ``ParameterServer`` for workers (``pull``,
-    ``push``, ``record_loss``, ``add_worker``, ``remove_worker``,
-    ``stop``, ``stopped``, ``params``, ``metrics``), so ``PSWorker`` and
-    ``run_cluster`` drive it unchanged.
+    Implements ``repro.api.protocol.ParameterServerProtocol`` — the
+    same surface as the monolithic ``ParameterServer`` (plus the
+    overridden per-shard variants), so workers, endpoints and sessions
+    drive either server without a type branch.
     """
 
     def __init__(self, params: Params, policy_factory: Callable[[], SyncPolicy],
@@ -170,6 +172,9 @@ class ShardedParameterServer:
                  wire_compression: Optional[str] = None,
                  topk_fraction: float = 0.05,
                  clock: Callable[[], float] = time.monotonic):
+        warn_legacy("ShardedParameterServer",
+                    "repro.api.build_session(RunSpec(ps=ServerSpec("
+                    "kind='sharded', ...)))")
         if gating not in ("sharded", "global"):
             raise ValueError(f"unknown gating mode {gating!r}")
         if apply_mode not in ("tree", "fused"):
@@ -547,10 +552,7 @@ class ShardedParameterServer:
                 self._gate_cond.notify_all()
 
     # -- inspection ------------------------------------------------------------
-    @property
-    def params(self) -> Params:
-        return self.pull(-1)
-
+    # (``params``/``snapshot``/``shutdown`` come from the protocol base.)
     @property
     def version(self) -> int:
         """Total applied shard-updates.  At S=1 this equals the monolithic

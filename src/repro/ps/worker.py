@@ -27,19 +27,23 @@ import threading
 import time
 from typing import Any, Callable, Iterator, Optional
 
-from repro.ps.server import ParameterServer
+from repro._compat import warn_legacy
+from repro.api.protocol import ParameterServerProtocol
 
 StepFn = Callable[[Any, Any], Any]  # (params, batch) -> (grads, aux)
 
 
 class PSWorker(threading.Thread):
-    def __init__(self, worker_id: int, server: ParameterServer,
+    def __init__(self, worker_id: int, server: ParameterServerProtocol,
                  step_fn: StepFn, batches: Iterator[Any], n_iterations: int,
                  *, speed_factor: float = 1.0,
                  loss_from_aux: Optional[Callable[[Any], float]] = None,
                  wire_format: str = "tree",
                  name: Optional[str] = None):
         super().__init__(name=name or f"ps-worker-{worker_id}", daemon=True)
+        warn_legacy("PSWorker",
+                    "repro.api.build_session (sessions construct and "
+                    "join their own workers)")
         if wire_format not in ("tree", "packed"):
             raise ValueError(f"unknown wire format {wire_format!r}")
         self.worker_id = worker_id
@@ -91,7 +95,7 @@ def _block(tree: Any) -> Any:
     return jax.block_until_ready(tree)
 
 
-def run_cluster(server: ParameterServer, workers: list[PSWorker],
+def run_cluster(server: ParameterServerProtocol, workers: list[PSWorker],
                 timeout: float = 600.0) -> None:
     """Start all workers, join them, re-raise the first worker failure."""
     for w in workers:

@@ -50,16 +50,22 @@ class PSServerEndpoint:
     """
 
     def __init__(self, server, *, shards: Optional[Sequence[int]] = None):
-        mode = getattr(server, "apply_mode", None)
-        if mode not in ("packed", "fused"):
+        # Any ParameterServerProtocol implementation works — per-shard
+        # calls included (single-shard servers answer shard 0 via the
+        # protocol's default impls), so no concrete-type checks here.
+        if not getattr(server, "packed_wire", False):
             raise ValueError(
-                f"endpoint needs a packed-mode server (apply_mode="
-                f"'packed'/'fused'), got {mode!r}")
+                "endpoint needs a packed-wire server (apply_mode="
+                f"'packed'/'fused'), got apply_mode="
+                f"{getattr(server, 'apply_mode', None)!r}")
         self.server = server
         self.shards = None if shards is None else frozenset(shards)
-        if self.shards is not None and not hasattr(server,
-                                                   "push_packed_shard"):
-            raise ValueError("per-shard routing needs a sharded server")
+        if self.shards is not None:
+            known = range(getattr(server, "n_shards", 1))
+            bad = sorted(self.shards - set(known))
+            if bad:
+                raise ValueError(f"endpoint routes shards {bad} but the "
+                                 f"server has {len(known)} shard(s)")
         self._hello_lock = threading.Lock()
         # Pull replies re-serialize the full parameter buffer (device->
         # host) on every request; between applies that is the same

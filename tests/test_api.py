@@ -1,0 +1,550 @@
+"""The repro.api session layer: spec validation, round-trips, engine
+wiring, the server protocol, deprecation shims, and the schema lock.
+
+Covers the PR-4 acceptance surface:
+
+* every sync paradigm x every valid (server, wire, transport)
+  combination builds via ``build_session`` from a plain dict and
+  round-trips ``to_dict``/``from_dict`` bitwise;
+* invalid combinations raise ``SpecError`` with an actionable message;
+* legacy direct construction still works, emits a single
+  ``DeprecationWarning`` naming the replacement, and is behaviorally
+  identical to the api-built server;
+* ``ServerOptimizer`` LR changes and second instances do not retrace;
+* a process-transport run driven purely by a spec matches the
+  pre-refactor manual wiring bitwise (single worker = deterministic).
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import _compat
+from repro.api import (
+    DataSpec,
+    ModelSpec,
+    OptimizerSpec,
+    RunSpec,
+    ServerSpec,
+    SpecError,
+    SyncSpec,
+    TransportSpec,
+    WireSpec,
+    build_session,
+    dump_schema,
+)
+
+SCHEMA_PATH = (pathlib.Path(__file__).parent.parent
+               / "src" / "repro" / "api" / "schema.json")
+
+
+# ---------------------------------------------------------------- helpers
+def tiny_problem():
+    rng = np.random.RandomState(0)
+    x = rng.randn(256, 8).astype(np.float32)
+    y = (x.sum(-1) > 0).astype(np.int32)
+
+    def loss_fn(params, batch):
+        bx, by = batch
+        logp = jax.nn.log_softmax(bx @ params["w"] + params["b"])
+        return -jnp.mean(jnp.take_along_axis(logp, by[:, None], 1))
+
+    @jax.jit
+    def step(params, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        return grads, {"loss": loss}
+
+    def batches(w, n_workers=2, bs=32):
+        sx, sy = x[w::n_workers], y[w::n_workers]
+        rng = np.random.RandomState(100 + w)
+        while True:
+            i = rng.randint(0, len(sx), bs)
+            yield sx[i], sy[i]
+
+    params = {"w": jnp.zeros((8, 2)), "b": jnp.zeros((2,))}
+    return params, step, batches
+
+
+def all_valid_specs():
+    """The full (sync) x (server, apply, wire, transport) grid."""
+    combos = [
+        # (kind, apply, wire_format, transport, compression)
+        ("mono", "tree", "tree", "inproc", "none"),
+        ("mono", "packed", "tree", "inproc", "none"),
+        ("mono", "packed", "packed", "inproc", "none"),
+        ("mono", "packed", "packed", "tcp", "none"),
+        ("mono", "packed", "packed", "shmem", "none"),
+        ("sharded", "tree", "tree", "inproc", "none"),
+        ("sharded", "tree", "tree", "inproc", "int8"),
+        ("sharded", "fused", "tree", "inproc", "topk"),
+        ("sharded", "fused", "packed", "inproc", "int8"),
+        ("sharded", "fused", "packed", "tcp", "none"),
+        ("sharded", "fused", "packed", "tcp", "int8"),
+        ("sharded", "fused", "packed", "shmem", "topk"),
+    ]
+    specs = []
+    for sync in ("bsp", "ssp", "dssp"):          # spmd has no asp
+        specs.append(RunSpec(sync=SyncSpec(mode=sync, s_lower=1,
+                                           s_upper=3)))
+    for sync in ("bsp", "asp", "ssp", "dssp"):
+        for kind, apply_, wire, tp, comp in combos:
+            specs.append(RunSpec(
+                sync=SyncSpec(mode=sync, staleness=2, s_lower=1,
+                              s_upper=3),
+                ps=ServerSpec(kind=kind,
+                              shards=1 if kind == "mono" else 2,
+                              workers=2, apply=apply_),
+                wire=WireSpec(format=wire, compression=comp),
+                transport=TransportSpec(kind=tp)))
+    return specs
+
+
+# ============================================================ spec layer
+def test_every_valid_combo_builds_and_roundtrips():
+    for spec in all_valid_specs():
+        d = spec.to_dict()
+        # bitwise dict round-trip, through JSON
+        again = RunSpec.from_dict(json.loads(json.dumps(d)))
+        assert again == spec
+        assert again.to_dict() == d
+        # and the dict form builds a session of the right engine
+        session = build_session(d)
+        assert session.engine == spec.engine
+        assert not session._started   # building is lazy — no server yet
+
+
+def test_engine_selection():
+    assert RunSpec().engine == "spmd"
+    assert RunSpec(ps=ServerSpec(kind="mono", shards=1)).engine == \
+        "ps-threads"
+    assert RunSpec(ps=ServerSpec(kind="sharded", shards=2, apply="fused"),
+                   wire=WireSpec(format="packed"),
+                   transport=TransportSpec(kind="tcp")).engine == \
+        "ps-transport"
+
+
+@pytest.mark.parametrize("mutate,needle", [
+    # the two combinations the issue names explicitly:
+    (dict(ps=dict(kind="sharded", shards=2, apply="fused"),
+          wire=dict(format="tree"),
+          transport=dict(kind="shmem")), "packed"),
+    (dict(ps=dict(kind="mono", shards=1, apply="fused")), "monolithic"),
+    # and the rest of the cross-field matrix:
+    (dict(ps=dict(kind="sharded", shards=2, apply="packed")), "fused"),
+    (dict(sync=dict(mode="asp")), "SPMD"),
+    (dict(transport=dict(kind="tcp")), "ps.kind='sharded'"),
+    (dict(wire=dict(format="packed")), "wire"),
+    (dict(ps=dict(kind="sharded", shards=2, apply="tree"),
+          wire=dict(format="packed")), "packed-resident"),
+    (dict(ps=dict(kind="mono", shards=1),
+          wire=dict(compression="int8")), "compression"),
+    (dict(ps=dict(kind="mono", shards=1, gating="global")), "gating"),
+    (dict(ps=dict(kind="sharded", shards=0)), "shards"),
+    (dict(ps=dict(kind="none", shards=2)), "shards=0"),
+    (dict(sync=dict(mode="hogwild")), "sync.mode"),
+    (dict(sync=dict(s_lower=5, s_upper=2)), "s_lower"),
+    (dict(model=dict(arch="not-a-real-arch")), "architecture"),
+    (dict(ps=dict(kind="sharded", shards=2),
+          optimizer=dict(name="adamw")), "SGD/momentum"),
+    (dict(optimizer=dict(lr=-1.0)), "lr"),
+])
+def test_invalid_combos_raise_actionable_spec_errors(mutate, needle):
+    base = RunSpec().to_dict()
+    for section, fields in mutate.items():
+        base[section].update(fields)
+    with pytest.raises(SpecError) as e:
+        RunSpec.from_dict(base)
+    assert needle.lower() in str(e.value).lower(), \
+        f"error not actionable: {e.value}"
+
+
+def test_from_dict_rejects_unknown_keys():
+    d = RunSpec().to_dict()
+    d["psx"] = {}
+    with pytest.raises(SpecError, match="psx"):
+        RunSpec.from_dict(d)
+    d2 = RunSpec().to_dict()
+    d2["sync"]["staleness_bound"] = 3
+    with pytest.raises(SpecError, match="staleness_bound"):
+        RunSpec.from_dict(d2)
+
+
+def test_from_dict_missing_sections_use_defaults():
+    spec = RunSpec.from_dict({"sync": {"mode": "ssp", "staleness": 4}})
+    assert spec.sync.staleness == 4
+    assert spec.ps == ServerSpec()
+
+
+def test_json_roundtrip_bitwise():
+    spec = RunSpec(sync=SyncSpec(mode="dssp", s_lower=2, s_upper=9),
+                   ps=ServerSpec(kind="sharded", shards=4, workers=3,
+                                 apply="fused", straggler=2.5),
+                   wire=WireSpec(format="packed", compression="topk",
+                                 topk_fraction=0.125),
+                   transport=TransportSpec(kind="tcp", port=7001))
+    assert RunSpec.from_json(spec.to_json()) == spec
+
+
+def test_schema_lock_matches_checked_in_file():
+    """The CI API-surface lock, enforced as a test too: regenerate with
+    ``python -m repro.api --dump-schema > src/repro/api/schema.json``
+    whenever the spec surface changes (that diff IS the review)."""
+    on_disk = json.loads(SCHEMA_PATH.read_text())
+    assert dump_schema() == on_disk, (
+        "RunSpec surface drifted from src/repro/api/schema.json — "
+        "regenerate it (python -m repro.api --dump-schema) and review "
+        "the diff")
+
+
+def test_build_session_rejects_unknown_overrides():
+    with pytest.raises(SpecError, match="override"):
+        build_session(RunSpec(), frobnicate=1)
+
+
+# ======================================================= session engines
+def test_threaded_mono_session_trains():
+    params, step, batches = tiny_problem()
+    spec = RunSpec(model=ModelSpec(arch="custom"),
+                   optimizer=OptimizerSpec(lr=0.5),
+                   sync=SyncSpec(mode="bsp"),
+                   ps=ServerSpec(kind="mono", shards=1, workers=2))
+    with build_session(spec, params=params, step_fn=step,
+                       batches=batches) as session:
+        m = session.run(30)
+    assert m["pushes"] == 30
+    assert m["final_loss"] < m["first_loss"]
+    assert session.server.stopped
+
+
+def test_threaded_sharded_session_matches_manual_wiring():
+    """The api-built sharded run applies exactly like the pre-refactor
+    direct wiring (single worker => deterministic push sequence)."""
+    from repro.core.policies import make_policy_factory
+    from repro.ps.server import ServerOptimizer
+    from repro.ps.sharded import ShardedParameterServer
+    from repro.ps.worker import PSWorker, run_cluster
+
+    params, step, batches = tiny_problem()
+    spec = RunSpec(model=ModelSpec(arch="custom"),
+                   optimizer=OptimizerSpec(lr=0.3),
+                   sync=SyncSpec(mode="ssp", staleness=2),
+                   ps=ServerSpec(kind="sharded", shards=2, workers=1))
+    with build_session(spec, params=params, step_fn=step,
+                       batches=lambda w: batches(w, 1)) as session:
+        session.run(12)
+        api_params = session.server.params
+
+    manual = ShardedParameterServer(
+        params, make_policy_factory("ssp", n_workers=1, staleness=2),
+        lambda: ServerOptimizer(lr=0.3), 1, 2)
+    workers = [PSWorker(0, manual, step, batches(0, 1), 12,
+                        loss_from_aux=lambda a: float(a["loss"]))]
+    run_cluster(manual, workers, timeout=120.0)
+    for a, b in zip(jax.tree_util.tree_leaves(api_params),
+                    jax.tree_util.tree_leaves(manual.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_spmd_session_matches_direct_trainer():
+    """build_session(spmd spec) == Trainer(...) bitwise (SSP: the delay
+    is fixed, so the run is deterministic)."""
+    from repro.configs import get_smoke_config
+    from repro.data.synthetic import DataConfig
+    from repro.launch.train import Trainer
+
+    spec = RunSpec(model=ModelSpec(arch="xlstm-125m"),
+                   data=DataSpec(seq_len=16, global_batch=4),
+                   optimizer=OptimizerSpec(lr=5e-3),
+                   sync=SyncSpec(mode="ssp", s_lower=1, s_upper=3))
+    with build_session(spec) as session:
+        m = session.run(5)
+
+    cfg = get_smoke_config("xlstm-125m")
+    trainer = Trainer(cfg, DataConfig(vocab_size=cfg.vocab_size,
+                                      seq_len=16, global_batch=4),
+                      sync="ssp", s_lower=1, s_upper=3, lr=5e-3)
+    log = trainer.train(5)
+    assert m["final_loss"] == log.losses[-1]
+    assert m["first_loss"] == log.losses[0]
+
+
+def test_external_workers_session_refuses_run():
+    params, _, _ = tiny_problem()
+    spec = RunSpec(model=ModelSpec(arch="custom"),
+                   sync=SyncSpec(mode="asp"),
+                   ps=ServerSpec(kind="sharded", shards=2, workers=1))
+    session = build_session(spec, params=params, external_workers=True)
+    session.start()
+    with pytest.raises(SpecError, match="external"):
+        session.run(1)
+    assert session.server is not None
+    session.close()
+    assert session.server.stopped
+
+
+def test_custom_arch_without_overrides_is_actionable():
+    spec = RunSpec(model=ModelSpec(arch="custom"),
+                   ps=ServerSpec(kind="mono", shards=1, workers=1),
+                   sync=SyncSpec(mode="asp"))
+    session = build_session(spec)
+    with pytest.raises(SpecError, match="overrides"):
+        session.start()
+
+
+# ===================================================== server protocol
+def test_protocol_single_shard_defaults_on_mono():
+    _compat.reset_legacy_warnings()
+    from repro.core.policies import make_policy
+    from repro.ps.server import ParameterServer, ServerOptimizer
+
+    params = {"w": jnp.ones((16, 8)), "b": jnp.zeros((5,))}
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        server = ParameterServer(params, make_policy("asp"),
+                                 ServerOptimizer(lr=0.1), 1,
+                                 apply_mode="packed")
+    assert server.packed_wire and server.n_shards == 1
+    # shard 0 == the whole store
+    np.testing.assert_array_equal(
+        np.asarray(server.pull_packed_shard(0)),
+        np.asarray(server.pull_packed()))
+    wire_g = jnp.ones_like(server.pull_packed())
+    server.push_packed_shard(0, 0, wire_g)
+    assert server.version == 1
+    with pytest.raises(ValueError, match="shard"):
+        server.pull_packed_shard(1)
+    assert server.shard_versions() == [1]
+    # lifecycle aliases
+    snap = server.snapshot()
+    assert set(snap) == {"w", "b"}
+    server.shutdown()
+    assert server.stopped
+
+
+def test_endpoint_accepts_mono_server_per_shard_routing():
+    """The endpoint no longer type-checks the server: the protocol's
+    single-shard defaults make a packed mono server routable."""
+    _compat.reset_legacy_warnings()
+    from repro.core.policies import make_policy
+    from repro.ps.server import ParameterServer, ServerOptimizer
+    from repro.transport import PSServerEndpoint
+
+    params = {"w": jnp.ones((16, 8))}
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        server = ParameterServer(params, make_policy("asp"),
+                                 ServerOptimizer(lr=0.1), 1,
+                                 apply_mode="packed")
+        endpoint = PSServerEndpoint(server, shards=[0])
+    assert endpoint.wire_rows() == server.plan.wire_layout().total_rows
+    with pytest.raises(ValueError, match="shard"):
+        PSServerEndpoint(server, shards=[0, 1])
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        tree_server = ParameterServer(params, make_policy("asp"),
+                                      ServerOptimizer(lr=0.1), 1)
+    with pytest.raises(ValueError, match="packed"):
+        PSServerEndpoint(tree_server)
+
+
+# ================================================== deprecation shims
+def test_legacy_construction_warns_once_and_behaves_identically():
+    from repro.core.policies import make_policy
+    from repro.ps.server import ParameterServer, ServerOptimizer
+
+    params = {"w": jnp.zeros((6, 3))}
+    grads = {"w": jnp.ones((6, 3))}
+
+    _compat.reset_legacy_warnings()
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        legacy = ParameterServer(params, make_policy("asp"),
+                                 ServerOptimizer(lr=0.1), 1)
+    dep = [w for w in caught
+           if issubclass(w.category, DeprecationWarning)]
+    assert len(dep) == 1 and "repro.api" in str(dep[0].message)
+
+    # a second construction does NOT warn again (single warning)
+    with warnings.catch_warnings(record=True) as caught2:
+        warnings.simplefilter("always")
+        ParameterServer(params, make_policy("asp"),
+                        ServerOptimizer(lr=0.1), 1)
+    assert not [w for w in caught2
+                if issubclass(w.category, DeprecationWarning)]
+
+    # the api-built mono server never warns and applies identically
+    spec = RunSpec(model=ModelSpec(arch="custom"),
+                   optimizer=OptimizerSpec(lr=0.1),
+                   sync=SyncSpec(mode="asp"),
+                   ps=ServerSpec(kind="mono", shards=1, workers=1))
+    _compat.reset_legacy_warnings()
+    with warnings.catch_warnings(record=True) as caught3:
+        warnings.simplefilter("always")
+        session = build_session(spec, params=params,
+                                external_workers=True).start()
+    assert not [w for w in caught3
+                if issubclass(w.category, DeprecationWarning)]
+    legacy.push(0, grads)
+    session.server.push(0, grads)
+    np.testing.assert_array_equal(np.asarray(legacy.params["w"]),
+                                  np.asarray(session.server.params["w"]))
+    session.close()
+    legacy.stop()
+
+
+def test_train_ps_shim_warns_and_trains():
+    from repro.configs import get_smoke_config
+    from repro.data.synthetic import DataConfig
+    from repro.launch.train import train_ps
+
+    cfg = get_smoke_config("xlstm-125m")
+    data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=16,
+                          global_batch=4)
+    with pytest.warns(DeprecationWarning, match="build_session"):
+        server = train_ps(cfg, data_cfg, sync="bsp", n_steps=2, lr=1e-2,
+                          n_shards=2, n_workers=2, arch="xlstm-125m")
+    assert server.version > 0
+    assert server.stopped
+
+
+# ============================================ ServerOptimizer satellite
+def test_server_optimizer_shares_one_trace_across_lr_and_instances():
+    from repro.ps.server import APPLY_TRACES, ServerOptimizer
+
+    # unique leaf shape => guaranteed-fresh jit cache entry
+    params = {"q": jnp.ones((3, 17), jnp.float32)}
+    grads = {"q": jnp.full((3, 17), 2.0, jnp.float32)}
+    opt = ServerOptimizer(lr=0.5)
+    before = APPLY_TRACES["count"]
+    p1 = opt.step(params, grads, staleness=0)
+    assert APPLY_TRACES["count"] == before + 1
+    np.testing.assert_allclose(np.asarray(p1["q"]),
+                               np.asarray(params["q"]) - 0.5 * 2.0)
+
+    # LR change: new math, NO new trace
+    opt.lr = 0.25
+    p2 = opt.step(p1, grads, staleness=0)
+    assert APPLY_TRACES["count"] == before + 1
+    np.testing.assert_allclose(np.asarray(p2["q"]),
+                               np.asarray(p1["q"]) - 0.25 * 2.0)
+
+    # a second instance (different lr AND momentum) shares the entry
+    opt2 = ServerOptimizer(lr=0.1, momentum=0.9,
+                           staleness_damping=True)
+    opt2.step(params, grads, staleness=3)
+    assert APPLY_TRACES["count"] == before + 1
+
+
+def test_server_optimizer_momentum_and_damping_math():
+    from repro.ps.server import ServerOptimizer
+
+    params = {"w": jnp.zeros((4,), jnp.float32)}
+    grads = {"w": jnp.ones((4,), jnp.float32)}
+    opt = ServerOptimizer(lr=1.0, momentum=0.5, staleness_damping=True)
+    p = opt.step(params, grads, staleness=1)      # scale = 1/2
+    np.testing.assert_allclose(np.asarray(p["w"]), -0.5 * np.ones(4))
+    p = opt.step(p, grads, staleness=0)           # v = .5*.5 + 1 = 1.25
+    np.testing.assert_allclose(np.asarray(p["w"]),
+                               -0.5 - 1.25 * np.ones(4))
+
+
+def test_worker_task_from_mono_spec_clamps_shards():
+    """A mono spec may carry ps.shards=0 (the ServerSpec default); the
+    spawn payload must still derive a 1-shard plan or every transport
+    worker dies in build_shard_plan."""
+    from repro.launch.proc_pool import WorkerTask
+
+    spec = RunSpec(model=ModelSpec(arch="xlstm-125m"),
+                   ps=ServerSpec(kind="mono", shards=0, workers=1,
+                                 apply="packed"),
+                   wire=WireSpec(format="packed"),
+                   transport=TransportSpec(kind="tcp"))
+    task = WorkerTask.from_spec(spec, 3)
+    assert task.n_shards == 1
+    assert task.arch == "xlstm-125m" and task.n_iterations == 3
+
+
+def test_cli_spec_rejects_every_wiring_flag():
+    """--spec is the single source of truth: ANY wiring flag alongside
+    it must be rejected, not silently ignored."""
+    import subprocess
+    import sys
+
+    spec_path = "/tmp/test_api_cli_spec.json"
+    with open(spec_path, "w") as f:
+        f.write(RunSpec().to_json())
+    for extra in (["--ps-wire", "packed"], ["--lr", "0.1"],
+                  ["--compress", "int8"], ["--ps-workers", "8"]):
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.launch.train",
+             "--spec", spec_path, *extra],
+            capture_output=True, text=True,
+            env={"PYTHONPATH": "src", "JAX_PLATFORMS": "cpu",
+                 "PATH": "/usr/bin:/bin:/usr/local/bin"},
+            cwd=str(SCHEMA_PATH.parents[3]))
+        assert proc.returncode == 2, (extra, proc.stderr)
+        assert "single source of truth" in proc.stderr
+
+
+# ====================================== spec-driven process transport
+def test_tcp_spec_run_matches_prerefactor_wiring_bitwise():
+    """One worker (deterministic push sequence) through --spec-style
+    build_session vs the literal pre-refactor manual wiring: identical
+    final packed parameters."""
+    from repro.configs import get_smoke_config
+    from repro.core.policies import make_policy_factory
+    from repro.launch.proc_pool import (ProcessWorkerPool, WorkerTask,
+                                        raise_on_failure)
+    from repro.models import registry
+    from repro.ps.server import ServerOptimizer
+    from repro.ps.sharded import ShardedParameterServer
+    from repro.transport import PSServerEndpoint, make_transport
+
+    steps, seq, batch = 3, 16, 4
+    spec = RunSpec(model=ModelSpec(arch="xlstm-125m"),
+                   data=DataSpec(seq_len=seq, global_batch=batch),
+                   optimizer=OptimizerSpec(lr=3e-3),
+                   sync=SyncSpec(mode="dssp", staleness=1, s_lower=1,
+                                 s_upper=3),
+                   ps=ServerSpec(kind="sharded", shards=2, workers=1,
+                                 apply="fused"),
+                   wire=WireSpec(format="packed"),
+                   transport=TransportSpec(kind="tcp"))
+    with build_session(spec) as session:
+        m = session.run(steps)
+        spec_wire = np.asarray(session.server.pull_packed())
+    assert m["iterations_done"] == steps
+
+    # ---- the pre-refactor wiring, by hand ----
+    cfg = get_smoke_config("xlstm-125m")
+    params = registry.init_params(cfg, jax.random.PRNGKey(0))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        server = ShardedParameterServer(
+            params,
+            make_policy_factory("dssp", n_workers=1, staleness=1,
+                                s_lower=1, s_upper=3),
+            lambda: ServerOptimizer(lr=3e-3), 1, 2, apply_mode="fused")
+    endpoint = PSServerEndpoint(server)
+    tp = make_transport("tcp", n_workers=1)
+    tp.serve(endpoint)
+    task = WorkerTask(arch="xlstm-125m", n_shards=2, n_iterations=steps,
+                      smoke=True, seq_len=seq, global_batch=batch)
+    pool = ProcessWorkerPool(tp.address(), task, 1)
+    pool.start()
+    try:
+        results = pool.join(timeout=600.0, endpoint=endpoint)
+    finally:
+        server.stop()
+        tp.shutdown()
+        pool.terminate()
+    raise_on_failure(results)
+    manual_wire = np.asarray(server.pull_packed())
+    np.testing.assert_array_equal(spec_wire, manual_wire)
