@@ -9,10 +9,16 @@ exists to eliminate:
   1. zero-repack contract (absolute, always checked): the ``packed``
      path performs 0 host-side repack events per push at every shard
      count, and the derived ``target_met`` flag is true;
-  2. trajectory (only with ``--previous``): for every (path, shards)
-     row present in both reports, ``repack_events_per_push`` and
-     ``pallas_calls_per_push`` must not increase — a PR may make the
-     hot path cheaper, never quietly more chatty.
+  2. coalescing contract (absolute): every ``coalesced_W*`` row does
+     at most ``shards`` batched-apply launches per round — launch
+     count scales with shards, never shards x workers;
+  3. delta contract (absolute): every ``delta_W*`` row that advanced
+     < 100% of shards ships fewer delta bytes than a full snapshot;
+  4. trajectory (only with ``--previous``): for every (path, shards)
+     row present in both reports, no gated metric —
+     ``repack_events_per_push``, ``pallas_calls_per_push``,
+     ``launches_per_round``, ``delta_bytes_per_pull`` — may increase;
+     a PR may make the hot path cheaper, never quietly more chatty.
 
 Exit code 1 on any violation (the CI job fails), 0 otherwise.
 """
@@ -28,7 +34,9 @@ from typing import Dict, Tuple
 #: forgives float formatting, not a real extra event.
 EPS = 1e-6
 
-GATED_METRICS = ("repack_events_per_push", "pallas_calls_per_push")
+#: Rows carry the metrics that apply to their mode; absent ones skip.
+GATED_METRICS = ("repack_events_per_push", "pallas_calls_per_push",
+                 "launches_per_round", "delta_bytes_per_pull")
 
 
 def _rows_by_key(report: dict) -> Dict[Tuple[str, int], dict]:
@@ -45,6 +53,20 @@ def check(current: dict, previous: dict | None) -> list:
                 f"zero-repack contract broken: {path} at S={shards} does "
                 f"{row['repack_events_per_push']:.2f} repack events/push "
                 f"(expected 0)")
+        if path.startswith("coalesced") and \
+                row["launches_per_round"] > shards + EPS:
+            failures.append(
+                f"coalescing contract broken: {path} at S={shards} does "
+                f"{row['launches_per_round']:.2f} apply launches/round "
+                f"(expected <= {shards} — one batched launch per shard)")
+        if path.startswith("delta") and \
+                row.get("advanced_fraction", 1.0) < 1.0 - EPS and \
+                row["delta_bytes_per_pull"] >= row["full_bytes_per_pull"]:
+            failures.append(
+                f"delta contract broken: {path} at S={shards} ships "
+                f"{row['delta_bytes_per_pull']:.0f} bytes/pull with only "
+                f"{row['advanced_fraction']:.0%} of shards advanced "
+                f"(full snapshot is {row['full_bytes_per_pull']:.0f})")
     if not current.get("derived", {}).get("target_met", False):
         failures.append("derived.target_met is false "
                         "(packed vs tree_fused repack target missed)")
@@ -52,7 +74,10 @@ def check(current: dict, previous: dict | None) -> list:
         prev_rows = _rows_by_key(previous)
         for key in sorted(set(rows) & set(prev_rows)):
             for metric in GATED_METRICS:
-                now, before = rows[key][metric], prev_rows[key][metric]
+                now = rows[key].get(metric)
+                before = prev_rows[key].get(metric)
+                if now is None or before is None:
+                    continue    # metric does not apply to this mode
                 if now > before + EPS:
                     failures.append(
                         f"{key[0]} at S={key[1]}: {metric} regressed "
@@ -80,15 +105,18 @@ def main() -> int:
 
     rows = _rows_by_key(current)
     prev_rows = _rows_by_key(previous) if previous else {}
-    print(f"{'path':>16} {'S':>3} {'repack/push':>14} {'launches/push':>14}")
+    print(f"{'path':>18} {'S':>3}  gated metrics")
     for (path, shards), row in sorted(rows.items()):
         marks = []
         for metric in GATED_METRICS:
+            now = row.get(metric)
+            if now is None:
+                continue
             before = prev_rows.get((path, shards), {}).get(metric)
-            marks.append(f"{row[metric]:.2f}"
+            marks.append(f"{metric}={now:.2f}"
                          + (f" (was {before:.2f})" if before is not None
                             else ""))
-        print(f"{path:>16} {shards:>3} {marks[0]:>14} {marks[1]:>14}")
+        print(f"{path:>18} {shards:>3}  {' '.join(marks)}")
 
     failures = check(current, previous)
     if failures:

@@ -8,6 +8,7 @@ answers the full push/pull surface —
 
     pull / push                tree wire format (per-leaf pytrees)
     pull_packed / push_packed  packed (rows, 512) wire format
+    pull_delta                 version-delta pull (changed shards only)
     pull_packed_shard /        per-shard packed regions (the unit the
     push_packed_shard          transport endpoints route on)
     snapshot / shutdown        lifecycle
@@ -26,10 +27,36 @@ without triggering the rest of ``repro.api`` machinery.
 
 from __future__ import annotations
 
-from typing import Any, Dict, List
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 Params = Any
 Grads = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class DeltaPull:
+    """Result of a version-delta pull: only the shards that advanced.
+
+    ``versions`` is the server's per-shard version vector at snapshot
+    time (the client stores it and sends it back on its next
+    ``pull_delta``); ``shards``/``regions`` are the parallel lists of
+    advanced shard ids and their packed ``(rows, 512)`` regions
+    (jax arrays server-side, numpy host buffers on a transport
+    client).  ``full`` marks a full-snapshot fallback — the client's
+    version vector did not match the server's shard arity (or ran
+    ahead of it), so every non-empty shard's region is included and
+    the client should treat the patch as a complete rebuild.
+    """
+
+    versions: Tuple[int, ...]
+    shards: Tuple[int, ...] = ()
+    regions: Tuple[Any, ...] = ()
+    full: bool = False
+
+    @property
+    def empty(self) -> bool:
+        return not self.shards
 
 
 class ParameterServerProtocol:
@@ -76,6 +103,16 @@ class ParameterServerProtocol:
             "no resident packed store")
 
     def push_packed(self, worker: int, wire) -> None:
+        raise NotImplementedError(
+            f"{type(self).__name__}(apply_mode={self.apply_mode!r}) has "
+            "no resident packed store")
+
+    def pull_delta(self, worker: int,
+                   versions: Optional[Sequence[int]]) -> DeltaPull:
+        """Version-delta pull: the shards that advanced past the
+        client's ``versions`` vector, or a full-snapshot fallback on a
+        vector mismatch.  Packed-mode servers override this; the base
+        raises like the other packed calls."""
         raise NotImplementedError(
             f"{type(self).__name__}(apply_mode={self.apply_mode!r}) has "
             "no resident packed store")

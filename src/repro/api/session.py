@@ -177,6 +177,12 @@ def _server_optimizer_factory(spec: RunSpec):
                                    staleness_damping=damping)
 
 
+def _coalesce_kwargs(spec: RunSpec) -> Dict[str, Any]:
+    wait = spec.ps.coalesce_wait_ms
+    return {"coalesce": spec.ps.coalesce,
+            "coalesce_wait": None if wait is None else wait / 1e3}
+
+
 def _compression_plan(spec: RunSpec):
     """(tree_compressor, wire_compression, frame_compress) — where the
     configured compression actually runs, per the transport/wire combo
@@ -202,7 +208,8 @@ def _build_mono(spec: RunSpec, params):
     return ParameterServer(
         params, policy, _server_optimizer_factory(spec)(),
         spec.ps.workers,
-        apply_mode="packed" if spec.ps.apply == "packed" else "tree")
+        apply_mode="packed" if spec.ps.apply == "packed" else "tree",
+        **_coalesce_kwargs(spec))
 
 
 @register_server("sharded")
@@ -217,7 +224,8 @@ def _build_sharded(spec: RunSpec, params):
         gating=spec.ps.gating, apply_mode=spec.ps.apply,
         compressor=make_compressor(tree_comp) if tree_comp else None,
         wire_compression=wire_comp,
-        topk_fraction=spec.wire.topk_fraction)
+        topk_fraction=spec.wire.topk_fraction,
+        **_coalesce_kwargs(spec))
 
 
 # ===================================================================
@@ -359,6 +367,7 @@ class ThreadedPSSession(TrainingSession):
             PSWorker(i, self.server, make_step(), batches(i), iters,
                      speed_factor=speeds[i],
                      wire_format=spec.wire.format,
+                     delta_pull=spec.wire.delta_pull,
                      loss_from_aux=loss_from_aux)
             for i in range(w)]
         run_cluster(self.server, workers,

@@ -157,6 +157,15 @@ class ServerSpec:
     apply: str = "tree"
     gating: str = "sharded"
     straggler: float = 1.0
+    #: Coalescing window: up to this many concurrent workers' packed
+    #: pushes fold through ONE batched kernel launch per shard.  1 =
+    #: one launch per push (the historical behavior).
+    coalesce: int = 1
+    #: Flusher linger (milliseconds): how long an applying push waits
+    #: for the window to fill before launching a partial batch.  The
+    #: latency/batching trade — 0 batches only genuinely concurrent
+    #: pushes; None keeps the server default (50 ms when coalescing).
+    coalesce_wait_ms: Optional[float] = None
 
     def __post_init__(self):
         _choice(self.kind, "ps.kind", SERVER_KINDS)
@@ -165,6 +174,13 @@ class ServerSpec:
         _require(self.workers >= 1, "ps.workers must be >= 1")
         _require(self.straggler >= 1.0,
                  "ps.straggler is a slowdown factor (>= 1.0)")
+        _require(self.coalesce >= 1,
+                 "ps.coalesce is a window size (>= 1; 1 disables "
+                 "coalescing)")
+        _require(self.coalesce_wait_ms is None
+                 or self.coalesce_wait_ms >= 0.0,
+                 "ps.coalesce_wait_ms is a linger in milliseconds "
+                 "(>= 0, or null for the server default)")
         if self.kind == "none":
             _require(self.shards == 0,
                      "ps.kind='none' (SPMD pipeline) takes ps.shards=0; "
@@ -173,6 +189,10 @@ class ServerSpec:
                      "ps.apply selects a server apply path; the SPMD "
                      "pipeline (ps.kind='none') has none — leave it "
                      "'tree'")
+            _require(self.coalesce == 1,
+                     "ps.coalesce batches server-side applies; the SPMD "
+                     "pipeline (ps.kind='none') has no server — set "
+                     "ps.kind='mono'/'sharded' or leave ps.coalesce=1")
         elif self.kind == "mono":
             _require(self.shards in (0, 1),
                      "the monolithic server is one shard by definition "
@@ -202,6 +222,10 @@ class WireSpec:
     format: str = "tree"
     compression: str = "none"
     topk_fraction: float = 0.05
+    #: Version-delta pulls: workers track the server's per-shard
+    #: version vector and pull only the shard regions that advanced
+    #: (full-snapshot fallback on mismatch).  Packed wire only.
+    delta_pull: bool = False
 
     def __post_init__(self):
         _choice(self.format, "wire.format", WIRE_FORMATS)
@@ -250,7 +274,10 @@ class RunSpec:
     * process transports need a parameter server and a registry arch
       (spawned workers rebuild the model from its config name);
     * compression needs an engine with a compression path (SPMD or the
-      sharded server).
+      sharded server);
+    * ``wire.delta_pull`` (version-delta pulls) and ``ps.coalesce > 1``
+      (batched server apply) ride the packed wire only — over the tree
+      wire both raise.
     """
 
     model: ModelSpec = dataclasses.field(default_factory=ModelSpec)
@@ -284,6 +311,18 @@ class RunSpec:
                      "wire.format='packed' needs a packed-resident "
                      "store: ps.apply='packed' (mono) or 'fused' "
                      "(sharded); ps.apply='tree' re-packs every push")
+        if wire.delta_pull:
+            _require(wire.format == "packed",
+                     "wire.delta_pull serves version-delta pulls of the "
+                     "packed snapshot; the tree wire has no per-shard "
+                     "version vector to diff against — set wire.format="
+                     "'packed' (and ps.apply='fused'/'packed')")
+        if ps.coalesce > 1:
+            _require(wire.format == "packed",
+                     "ps.coalesce batches packed wire buffers through "
+                     "one fused launch; the tree wire has nothing to "
+                     "stack — set wire.format='packed' (and ps.apply="
+                     "'fused'/'packed')")
         if tp.serves_endpoint:
             _require(wire.format == "packed",
                      f"transport.kind={tp.kind!r} carries the packed "

@@ -85,6 +85,119 @@ def fused_update(p: jax.Array, m: jax.Array, g: jax.Array, *,
     return po, mo
 
 
+# ----------------------------------------------------- contributor batching
+# The coalesced server apply: K workers' gradient buffers for the SAME
+# parameter region, folded in one launch.  p and m stream through VMEM
+# once regardless of K; only the gradient traffic scales with the number
+# of contributors — (2 + K) reads + 2 writes per element instead of the
+# 3K + 2K a sequence of ``fused_update`` launches costs.
+#
+# The fold is SEQUENTIAL inside the kernel (contributor 0 first, each
+# step rounding p/m to the storage precision exactly as a standalone
+# launch's store + reload would), so the result matches K back-to-back
+# ``fused_update`` calls in enqueue order — bitwise for f32 state (the
+# equivalence tests assert it) and K=1 for every dtype (dispatched to
+# the standalone kernel outright); narrow-dtype folds at K > 1 may
+# differ by 1 ulp where XLA picks a different FMA contraction around
+# the in-register rounding.  Coalescing changes launch count, not
+# semantics.  K is static: one compilation per distinct window fill
+# (bounded by the coalesce knob).
+
+def _round_to(x: jax.Array, dtype) -> jax.Array:
+    """Round an f32 value to ``dtype``'s precision WITHOUT leaving f32.
+
+    An ``astype(dtype).astype(f32)`` round-trip inside one fused
+    computation is elided by XLA's excess-precision rule, which would
+    make the batched fold drift (by 1 ulp) from K sequential launches
+    that physically store the narrow dtype between steps.
+    ``lax.reduce_precision`` is the documented non-elidable rounding.
+    """
+    if jnp.dtype(dtype) == jnp.float32:
+        return x
+    fi = jnp.finfo(dtype)
+    return jax.lax.reduce_precision(x, fi.nexp, fi.nmant)
+
+
+def _fused_update_batched_kernel(scalars_ref, p_ref, m_ref, g_ref,
+                                 po_ref, mo_ref, *, beta: float, k: int):
+    lr = scalars_ref[0, 0]
+    p = p_ref[...].astype(jnp.float32)
+    m = m_ref[...].astype(jnp.float32)
+    for j in range(k):          # unrolled at trace time (k is static)
+        scale = scalars_ref[0, 1 + j]
+        # A standalone launch updates p with the UNROUNDED f32 momentum
+        # and narrows only at the store; the carried values round like a
+        # store + reload.  Mirror that exactly.
+        mf = beta * m + scale * g_ref[j].astype(jnp.float32)
+        p = _round_to(p - lr * mf, po_ref.dtype)
+        m = _round_to(mf, mo_ref.dtype)
+    po_ref[...] = p.astype(po_ref.dtype)
+    mo_ref[...] = m.astype(mo_ref.dtype)
+
+
+def fused_update_batched(p: jax.Array, m: jax.Array, gs: jax.Array, *,
+                         lr, beta: float = 0.9, scales=None,
+                         interpret: bool = False,
+                         ) -> Tuple[jax.Array, jax.Array]:
+    """One fused momentum fold of K stacked gradients into (p, m).
+
+    ``gs`` has shape ``(K,) + p.shape`` (one stacked buffer per
+    contributor); ``scales`` is a length-K sequence of per-contributor
+    step scales (staleness damping), python floats or traced scalars.
+    Returns (p', m') with the input dtypes, bitwise-identical to K
+    sequential ``fused_update(p, m, gs[j], scale=scales[j])`` calls.
+    """
+    k = gs.shape[0]
+    if gs.shape[1:] != p.shape:
+        raise ValueError(f"stacked grads {gs.shape} do not match "
+                         f"parameter shape {p.shape}")
+    if scales is None:
+        scales = (1.0,) * k
+    if len(scales) != k:
+        raise ValueError(f"{len(scales)} scales for {k} stacked grads")
+    if k == 1:
+        # The standalone kernel IS the K=1 fold — dispatching to it
+        # makes a window of one bitwise-trivially identical to the
+        # uncoalesced path for every dtype.
+        return fused_update(p, m, gs[0], lr=lr, beta=beta,
+                            scale=scales[0], interpret=interpret)
+    WIRE.pallas_calls += 1
+    orig_shape = p.shape
+    n = p.size
+    tile = _ROWS * _LANES
+    pad = (-n) % tile
+    if pad:
+        p2 = jnp.pad(p.reshape(-1), (0, pad))
+        m2 = jnp.pad(m.reshape(-1), (0, pad))
+        g2 = jnp.pad(gs.reshape(k, -1), ((0, 0), (0, pad)))
+    else:
+        p2, m2, g2 = p.reshape(-1), m.reshape(-1), gs.reshape(k, -1)
+    rows = (n + pad) // _LANES
+    p2 = p2.reshape(rows, _LANES)
+    m2 = m2.reshape(rows, _LANES)
+    g2 = g2.reshape(k, rows, _LANES)
+    scalars = jnp.stack(
+        [jnp.asarray(lr, jnp.float32)]
+        + [jnp.asarray(s, jnp.float32) for s in scales]).reshape(1, 1 + k)
+    grid = (rows // _ROWS,)
+
+    spec = pl.BlockSpec((_ROWS, _LANES), lambda i: (i, 0))
+    gspec = pl.BlockSpec((k, _ROWS, _LANES), lambda i: (0, i, 0))
+    po, mo = pl.pallas_call(
+        functools.partial(_fused_update_batched_kernel, beta=beta, k=k),
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, 1 + k), lambda i: (0, 0)),
+                  spec, spec, gspec],
+        out_specs=(spec, spec),
+        out_shape=(jax.ShapeDtypeStruct((rows, _LANES), p.dtype),
+                   jax.ShapeDtypeStruct((rows, _LANES), m.dtype)),
+        interpret=interpret,
+    )(scalars, p2, m2, g2)
+    po = po.reshape(-1)[:n].reshape(orig_shape)
+    mo = mo.reshape(-1)[:n].reshape(orig_shape)
+    return po, mo
+
+
 # ---------------------------------------------------------- shard batching
 # A parameter-server shard holds many small leaves (slices of the model's
 # pytree).  Calling ``fused_update`` per leaf issues one ``pallas_call``

@@ -65,6 +65,14 @@ def fused_update(p: jax.Array, m: jax.Array, g: jax.Array, *,
                             interpret=not on_tpu())
 
 
+def fused_update_batched(p, m, gs, *, lr, beta: float = 0.9, scales=None):
+    """Coalesced apply: K stacked gradient buffers folded through
+    momentum in ONE pallas_call, bitwise-identical to K sequential
+    ``fused_update`` calls in stack order (see kernels/fused_update)."""
+    return _fu.fused_update_batched(p, m, gs, lr=lr, beta=beta,
+                                    scales=scales, interpret=not on_tpu())
+
+
 def fused_update_shard(ps, ms, gs, *, lr, beta: float = 0.9, scale=1.0):
     """Batched shard apply: all leaves through ONE pallas_call (packed
     (rows, 512) layout) — the sharded PS's per-shard update kernel."""

@@ -68,6 +68,26 @@ def fused_update_ref(p: jax.Array, m: jax.Array, g: jax.Array, *,
     return pf.astype(p.dtype), mf.astype(m.dtype)
 
 
+def fused_update_batched_ref(p: jax.Array, m: jax.Array, gs: jax.Array, *,
+                             lr: float, beta: float,
+                             scales=None) -> Tuple[jax.Array, jax.Array]:
+    """Oracle for ``fused_update.fused_update_batched``: K stacked
+    gradients folded through momentum SEQUENTIALLY (enqueue order), each
+    step casting p/m back to the storage dtype exactly like a standalone
+    ``fused_update`` launch does.  This makes the batched kernel
+    bitwise-identical to K sequential ``fused_update`` calls at every K
+    — not merely at K=1 — which is what lets the coalesced server path
+    be equivalence-tested against the uncoalesced one.
+    """
+    k = gs.shape[0]
+    if scales is None:
+        scales = (1.0,) * k
+    for j in range(k):
+        p, m = fused_update_ref(p, m, gs[j], lr=lr, beta=beta,
+                                scale=scales[j])
+    return p, m
+
+
 def _per_tile(buf: jax.Array, rows: int = 8) -> jax.Array:
     """(R, 512) wire buffer -> (R//rows, rows*512) tile-major view."""
     r, lanes = buf.shape

@@ -49,6 +49,7 @@ class WorkerTask:
     global_batch: int = 8
     data_seed: int = 0        # worker w streams shard seed data_seed+1+w
     compress: str = "none"    # frame-level wire compression (int8)
+    delta_pull: bool = False  # version-delta pulls over PULL_DELTA frames
 
     def to_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
@@ -74,7 +75,8 @@ class WorkerTask:
                    global_batch=spec.data.global_batch,
                    data_seed=spec.data.seed,
                    compress=("int8" if spec.wire.compression == "int8"
-                             else "none"))
+                             else "none"),
+                   delta_pull=spec.wire.delta_pull)
 
 
 @dataclasses.dataclass
@@ -131,16 +133,36 @@ def _worker_main(task: Dict[str, Any], address, worker_id: int,
                 f"{layout.total_rows} — task spec out of sync with server")
         wire_g = jnp.zeros((layout.total_rows, WIRE_LANES), layout.dtype)
         stream = batches(cfg, data_cfg)
+        # Version-delta pulls keep a RESIDENT host-side buffer: only the
+        # shard regions whose version advanced since the last pull cross
+        # the wire, and they are patched into the buffer in place.
+        delta_pull = bool(task.get("delta_pull"))
+        wire_host = np.zeros((layout.total_rows, WIRE_LANES),
+                             layout.dtype) if delta_pull else None
+        versions = (-1,) * task["n_shards"]
+        row_start = layout.shard_row_start
         try:
             for it in range(task["n_iterations"]):
                 # copy=True (the default): on CPU, jnp.asarray may ALIAS
                 # host memory instead of copying, and a device buffer
                 # aliasing the shmem slot would outlive the RPC lifetime
                 # contract (and pin the mapping at close).
-                wire_np = client.pull_packed()
-                if wire_np is None:
-                    break  # server stopped
-                wire_p = jnp.asarray(wire_np)
+                if delta_pull:
+                    d = client.pull_delta(versions, copy=False)
+                    if d is None:
+                        break  # server stopped
+                    for j, region in zip(d.shards, d.regions):
+                        wire_host[row_start[j]:
+                                  row_start[j] + region.shape[0]] = region
+                    versions = d.versions
+                    # jnp.array COPIES (asarray may alias on CPU, and
+                    # the resident buffer mutates in place next pull).
+                    wire_p = jnp.array(wire_host)
+                else:
+                    wire_np = client.pull_packed()
+                    if wire_np is None:
+                        break  # server stopped
+                    wire_p = jnp.asarray(wire_np)
                 batch = {k: jnp.asarray(v) for k, v in next(stream).items()}
                 t0 = time.monotonic()
                 wire_g, loss = packed_step(wire_p, wire_g, batch)

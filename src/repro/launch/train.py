@@ -234,7 +234,8 @@ def spec_from_flags(*, arch: str, smoke: bool = True, sync: str = "dssp",
                     compress: str = "none", ps_shards: int = 0,
                     ps_workers: int = 4, ps_apply: str = "tree",
                     ps_wire: str = "tree", ps_gating: str = "sharded",
-                    ps_straggler: float = 1.0,
+                    ps_straggler: float = 1.0, ps_coalesce: int = 1,
+                    delta_pull: bool = False,
                     transport: str = "inproc"):
     """Translate the historical CLI flag surface into a ``RunSpec``.
 
@@ -250,12 +251,23 @@ def spec_from_flags(*, arch: str, smoke: bool = True, sync: str = "dssp",
         ps_shards = 1          # process transports live in the PS layer
     if transport != "inproc":
         ps_wire = "packed"     # frames carry the packed buffer only
+    if (ps_coalesce > 1 or delta_pull) and ps_shards < 1:
+        # No implication here: silently switching the SPMD pipeline to
+        # a parameter server (or dropping the knob) would train a
+        # different run than the user asked for.
+        raise ValueError(
+            "--ps-coalesce/--delta-pull act on the parameter server's "
+            "packed hot path; the SPMD pipeline has no server — add "
+            "--ps-shards N (or --transport tcp/shmem)")
+    if ps_coalesce > 1 or delta_pull:
+        ps_wire = "packed"     # both knobs ride the packed wire
     if ps_wire == "packed" and ps_apply == "tree":
         ps_apply = "fused"     # packed pushes fold through the kernel
     if ps_shards >= 1:
         ps = api.ServerSpec(kind="sharded", shards=ps_shards,
                             workers=ps_workers, apply=ps_apply,
-                            gating=ps_gating, straggler=ps_straggler)
+                            gating=ps_gating, straggler=ps_straggler,
+                            coalesce=ps_coalesce)
         opt = api.OptimizerSpec(lr=lr)
     else:
         ps = api.ServerSpec(kind="none", shards=0, workers=ps_workers)
@@ -268,7 +280,8 @@ def spec_from_flags(*, arch: str, smoke: bool = True, sync: str = "dssp",
                           s_lower=s_lower, s_upper=s_upper),
         ps=ps,
         wire=api.WireSpec(format=ps_wire if ps_shards >= 1 else "tree",
-                          compression=compress),
+                          compression=compress,
+                          delta_pull=delta_pull and ps_shards >= 1),
         transport=api.TransportSpec(kind=transport))
 
 
@@ -322,6 +335,15 @@ def main() -> None:
                     choices=["sharded", "global"])
     ap.add_argument("--ps-straggler", type=float, default=1.0,
                     help="speed factor of the last PS worker (>1 = slower)")
+    ap.add_argument("--ps-coalesce", type=int, default=1, metavar="K",
+                    help="coalescing window: fold up to K concurrent "
+                         "workers' packed pushes through ONE batched "
+                         "kernel launch per shard (implies --ps-wire "
+                         "packed; 1 = one launch per push)")
+    ap.add_argument("--delta-pull", action="store_true",
+                    help="version-delta pulls: workers pull only the "
+                         "shard regions that advanced since their last "
+                         "pull (implies --ps-wire packed)")
     ap.add_argument("--transport", default="inproc",
                     choices=["inproc", "tcp", "shmem"],
                     help="PS worker isolation: inproc = threads sharing "
@@ -352,6 +374,8 @@ def main() -> None:
             ("--ps-wire", "tree", args.ps_wire),
             ("--ps-gating", "sharded", args.ps_gating),
             ("--ps-straggler", 1.0, args.ps_straggler),
+            ("--ps-coalesce", 1, args.ps_coalesce),
+            ("--delta-pull", False, args.delta_pull),
             ("--transport", "inproc", args.transport)) if got != default]
         if wired:
             ap.error(f"--spec is the single source of truth; drop "
@@ -367,6 +391,7 @@ def main() -> None:
             ps_shards=args.ps_shards, ps_workers=args.ps_workers,
             ps_apply=args.ps_apply, ps_wire=args.ps_wire,
             ps_gating=args.ps_gating, ps_straggler=args.ps_straggler,
+            ps_coalesce=args.ps_coalesce, delta_pull=args.delta_pull,
             transport=args.transport)
     if args.dump_spec:
         print(spec.to_json())

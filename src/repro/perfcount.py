@@ -19,7 +19,11 @@ Instrumented sites:
   * ``gathers``       — wire-permutation gathers (one per plan-level
     pack/unpack; the packed path's only data-movement op),
   * ``pallas_calls``  — kernel launches (``fused_update``, the fused
-    compressors).
+    compressors),
+  * ``apply_launches_saved`` — contributions folded into an already-
+    counted ``fused_update_batched`` launch by the coalescing window,
+  * ``delta_bytes_tx`` / ``full_pull_bytes_avoided`` — version-delta
+    pull accounting (``pull_delta`` on either server).
 
 Counters are plain ints bumped under the GIL — cheap enough to stay on
 permanently, precise enough for the single-threaded benchmark and test
@@ -40,6 +44,19 @@ class HotPathCounters:
     unpacks: int = 0
     gathers: int = 0
     pallas_calls: int = 0
+    #: Launches the coalesced server apply amortized away: a window of
+    #: K contributors folded in ONE ``fused_update_batched`` launch
+    #: bumps this by K - 1 (the coalescing contract — launches per
+    #: round scale with shards, not shards x workers — is asserted on
+    #: ``pallas_calls`` + this).
+    apply_launches_saved: int = 0
+    #: Bytes actually shipped by version-delta pulls (changed shard
+    #: regions only; a full-snapshot fallback counts its full size).
+    delta_bytes_tx: int = 0
+    #: Bytes a full ``pull_packed`` snapshot would have shipped minus
+    #: what the delta actually shipped — the tentpole's "bytes
+    #: proportional to change" win, directly benchmarkable.
+    full_pull_bytes_avoided: int = 0
 
     def reset(self) -> None:
         for f in dataclasses.fields(self):

@@ -22,9 +22,10 @@ import jax
 import jax.numpy as jnp
 
 from repro._compat import warn_legacy
-from repro.api.protocol import ParameterServerProtocol
+from repro.api.protocol import DeltaPull, ParameterServerProtocol
 from repro.core.policies import SyncPolicy
 from repro.core.staleness import StalenessTracker
+from repro.perfcount import WIRE
 from repro.ps.metrics import RunMetrics
 
 Params = Any  # pytree
@@ -33,6 +34,102 @@ Grads = Any   # pytree
 #: Trace-time counter for the shared apply (tests assert that LR
 #: changes and additional optimizer instances do NOT retrace).
 APPLY_TRACES = {"count": 0}
+
+#: Default linger (seconds) a coalescing flusher waits for its window
+#: to fill before launching a partial batch — small enough to vanish
+#: next to a training step, large enough for concurrently-pushing
+#: workers to land in one batch.
+DEFAULT_COALESCE_WAIT_S = 0.05
+
+
+class CoalesceWindow:
+    """Bounded micro-batching window over packed applies.
+
+    One instance per lock domain (the mono server, or one shard of the
+    sharded server).  ``submit`` is called UNDER ``cond`` with one
+    contribution; the first contributor with no flush in flight becomes
+    the *flusher*: it lingers up to ``server.coalesce_wait`` for the
+    window to fill (capped at the live worker count — a window larger
+    than the barrier group can ever fill would stall every round),
+    drains up to ``server.coalesce`` contributions, and folds them
+    through ONE ``fused_update_batched`` launch in enqueue order.  The
+    kernel dispatch runs with ``cond`` RELEASED so concurrent pushes
+    can queue into the next window (that concurrency IS the batching);
+    ``install`` re-installs the buffers and the version bump together
+    under the lock, so readers never observe a version that does not
+    match the resident buffer.  Later contributors wait until the
+    flusher has applied their sequence number.
+
+    ``server`` supplies the live knobs (``coalesce``,
+    ``coalesce_wait``, ``stopped``, ``_clock``); ``get_pm`` returns the
+    resident (params, momentum) wire buffers; ``install(p, m, n)``
+    commits them plus an ``n``-contribution version bump (called under
+    ``cond``).
+    """
+
+    def __init__(self, server, cond, optimizer, tracker, get_pm,
+                 install):
+        self.server = server
+        self.cond = cond
+        self.optimizer = optimizer
+        self.tracker = tracker
+        self.get_pm = get_pm
+        self.install = install
+        self.pending: list = []      # (wire_g, scale) tuples
+        self.applying = False        # a flusher owns the window
+        self.enq_seq = 0             # contributions ever queued
+        self.applied_seq = 0         # contributions ever applied
+
+    def submit(self, wire_g, scale: float) -> None:
+        """Queue one contribution (called under ``cond``) and return
+        once it has been applied."""
+        srv = self.server
+        self.pending.append((wire_g, scale))
+        self.enq_seq += 1
+        my_seq = self.enq_seq
+        self.cond.notify_all()       # wake a lingering flusher
+        if self.applying:
+            while self.applied_seq < my_seq and not srv.stopped:
+                self.cond.wait(timeout=0.5)
+            return
+        self.applying = True
+        try:
+            window = max(1, min(srv.coalesce, len(self.tracker.workers)))
+            while self.pending and not srv.stopped:
+                if srv.coalesce_wait > 0.0 and len(self.pending) < window:
+                    deadline = srv._clock() + srv.coalesce_wait
+                    while len(self.pending) < window and not srv.stopped:
+                        remaining = deadline - srv._clock()
+                        if remaining <= 0:
+                            break
+                        self.cond.wait(timeout=remaining)
+                batch = self.pending[:srv.coalesce]
+                del self.pending[:len(batch)]
+                self._flush(batch)
+        finally:
+            self.applying = False
+            self.cond.notify_all()
+
+    def _flush(self, batch: list) -> None:
+        """One batched launch over ``batch`` (called under ``cond``;
+        drops the lock for the kernel dispatch)."""
+        from repro.kernels import ops as kops
+        opt = self.optimizer
+        bufs = [b for b, _ in batch]
+        scales = [s for _, s in batch]
+        p, m = self.get_pm()
+        self.cond.release()
+        try:
+            gs = bufs[0][None] if len(bufs) == 1 else jnp.stack(bufs)
+            new_p, new_m = kops.fused_update_batched(
+                p, m, gs, lr=opt.lr, beta=opt.momentum, scales=scales)
+        finally:
+            self.cond.acquire()
+        self.install(new_p, new_m, len(batch))
+        self.applied_seq += len(batch)
+        if len(batch) > 1:
+            WIRE.apply_launches_saved += len(batch) - 1
+        self.cond.notify_all()
 
 
 @jax.jit
@@ -88,12 +185,18 @@ class ParameterServer(ParameterServerProtocol):
     def __init__(self, params: Params, policy: SyncPolicy,
                  optimizer: ServerOptimizer, n_workers: int,
                  clock: Callable[[], float] = time.monotonic,
-                 apply_mode: str = "tree"):
+                 apply_mode: str = "tree", coalesce: int = 1,
+                 coalesce_wait: Optional[float] = None):
         warn_legacy("ParameterServer",
                     "repro.api.build_session(RunSpec(ps=ServerSpec("
                     "kind='mono', ...)))")
         if apply_mode not in ("tree", "packed"):
             raise ValueError(f"unknown apply mode {apply_mode!r}")
+        if coalesce < 1:
+            raise ValueError(f"coalesce window must be >= 1, got {coalesce}")
+        if coalesce > 1 and apply_mode != "packed":
+            raise ValueError("coalesce > 1 batches packed applies; it "
+                             "requires apply_mode='packed'")
         self._params: Optional[Params] = params
         self.policy = policy
         self.optimizer = optimizer
@@ -105,6 +208,10 @@ class ParameterServer(ParameterServerProtocol):
         self._t0 = clock()
         self.version = 0          # number of applied updates
         self.stopped = False
+        self.coalesce = coalesce
+        self.coalesce_wait = (coalesce_wait if coalesce_wait is not None
+                              else (DEFAULT_COALESCE_WAIT_S
+                                    if coalesce > 1 else 0.0))
         if apply_mode == "packed":
             # The plan (1 shard) carries the wire layout; kernel imports
             # stay inside the apply so `import repro.ps` is kernel-free.
@@ -112,6 +219,9 @@ class ParameterServer(ParameterServerProtocol):
             self.plan = build_shard_plan(params, 1)
             self._wire_p = self.plan.pack(params)
             self._wire_m = jnp.zeros_like(self._wire_p)
+            self._window = CoalesceWindow(
+                self, self._cond, optimizer, self.tracker,
+                self._get_pm, self._install_pm)
         else:
             self.plan = None
 
@@ -141,6 +251,25 @@ class ParameterServer(ParameterServerProtocol):
         with self._cond:
             return self._wire_p
 
+    def pull_delta(self, worker: int,
+                   versions: Optional[Any] = None) -> DeltaPull:
+        """Single-shard version-delta pull: the whole buffer when the
+        version moved (or on a vector mismatch — ``full=True``), an
+        empty delta when the worker is already current."""
+        if self.apply_mode != "packed":
+            raise ValueError("pull_delta requires apply_mode='packed'")
+        with self._cond:
+            wire, version = self._wire_p, self.version
+        full_bytes = int(wire.size) * jnp.dtype(wire.dtype).itemsize
+        mismatch = (versions is None or len(versions) != 1
+                    or int(versions[0]) > version)
+        if not mismatch and int(versions[0]) == version:
+            WIRE.full_pull_bytes_avoided += full_bytes
+            return DeltaPull(versions=(version,))
+        WIRE.delta_bytes_tx += full_bytes
+        return DeltaPull(versions=(version,), shards=(0,),
+                         regions=(wire,), full=mismatch)
+
     def push(self, worker: int, grads: Grads) -> None:
         """Alg. 1 server block: update weights, then gate.  Blocks the
         calling worker thread until the policy releases it."""
@@ -168,11 +297,15 @@ class ParameterServer(ParameterServerProtocol):
             dec = self.policy.on_push(self.tracker, worker, now)
             if dec.apply_update:
                 if self.apply_mode == "packed":
-                    self._apply_packed(payload, rec.staleness)
+                    if self.coalesce > 1:
+                        self._apply_coalesced(payload, rec.staleness)
+                    else:
+                        self._apply_packed(payload, rec.staleness)
+                        self.version += 1
                 else:
                     self._params = self.optimizer.step(
                         self._params, payload, rec.staleness)
-                self.version += 1
+                    self.version += 1
             self.metrics.record_push(
                 worker, rec.staleness, applied=dec.apply_update,
                 credit=dec.credit_used, time=now)
@@ -195,6 +328,23 @@ class ParameterServer(ParameterServerProtocol):
             self._wire_p, self._wire_m, wire_g,
             lr=opt.lr, beta=opt.momentum, scale=scale)
         self._params = None
+
+    # -- coalescing-window plumbing (see ``CoalesceWindow``) ------------------
+    def _get_pm(self):
+        return self._wire_p, self._wire_m
+
+    def _install_pm(self, p, m, n: int) -> None:
+        self._wire_p, self._wire_m = p, m
+        self._params = None
+        self.version += n
+
+    def _apply_coalesced(self, wire_g: jax.Array, staleness: int) -> None:
+        """Route one packed apply through the coalescing window (the
+        mono server is one lock domain = one window).  Called under
+        ``self._cond``."""
+        opt = self.optimizer
+        scale = 1.0 / (1.0 + staleness) if opt.staleness_damping else 1.0
+        self._window.submit(wire_g, scale)
 
     def record_loss(self, step: int, loss: float) -> None:
         """Record (wall_time, applied_update_count, loss).  Keying the

@@ -55,6 +55,26 @@ plan's packed wire format instead — the worker packs its gradients once
 Tree-format ``pull`` in fused mode also rebuilds its per-shard piece
 cache outside the shard lock, so a pull after an apply never stalls
 concurrent pushes to that shard while it unpacks.
+
+Coalesced apply + version-delta pulls (work ∝ rounds + change)
+--------------------------------------------------------------
+With W workers the paths above still do O(W) kernel launches per round
+per shard and ship the full snapshot on every pull.  Two knobs make
+server work scale with *rounds and changed state* instead:
+
+  * ``coalesce=K`` arms a bounded micro-batching window per shard:
+    contributions that arrive while a flush is in flight (or within a
+    short linger, ``coalesce_wait``) are drained together through ONE
+    ``fused_update_batched`` launch — an in-kernel sequential fold, so
+    numerics match the uncoalesced path (bitwise for f32 state and for
+    any window of one) while launches per round drop from S x W toward
+    S.  The sync policy still sees, decides and releases every
+    contributing worker individually: BSP/SSP/DSSP semantics are
+    untouched.
+  * ``pull_delta(worker, versions)`` returns only the shards whose
+    version moved past the worker's last-seen vector (full-snapshot
+    fallback on a vector mismatch), so steady-state pull bytes are
+    proportional to what actually changed.
 """
 
 from __future__ import annotations
@@ -67,12 +87,14 @@ import jax
 import jax.numpy as jnp
 
 from repro._compat import warn_legacy
-from repro.api.protocol import ParameterServerProtocol
+from repro.api.protocol import DeltaPull, ParameterServerProtocol
 from repro.core.policies import Decision, SyncPolicy
 from repro.core.staleness import StalenessTracker
 from repro.optim.compression import Compressor
+from repro.perfcount import WIRE
 from repro.ps.metrics import RunMetrics
-from repro.ps.server import ServerOptimizer
+from repro.ps.server import (DEFAULT_COALESCE_WAIT_S, CoalesceWindow,
+                             ServerOptimizer)
 from repro.ps.sharded.plan import ShardPlan, build_shard_plan
 from repro.wireformat import WIRE_LANES
 
@@ -97,6 +119,9 @@ class _ShardState:
                                   n_workers=len(list(workers)))
         self.version = 0
         self.apply_mode = apply_mode
+        #: set by the server when coalescing is armed (fused mode):
+        #: the shard's ``CoalesceWindow`` over its packed buffers.
+        self.window = None
         if apply_mode == "fused":
             # Params + momentum stay resident in the plan's wire layout
             # (8-row-aligned (rows, 512) region), so an incoming packed
@@ -171,6 +196,8 @@ class ShardedParameterServer(ParameterServerProtocol):
                  compressor: Optional[Compressor] = None,
                  wire_compression: Optional[str] = None,
                  topk_fraction: float = 0.05,
+                 coalesce: int = 1,
+                 coalesce_wait: Optional[float] = None,
                  clock: Callable[[], float] = time.monotonic):
         warn_legacy("ShardedParameterServer",
                     "repro.api.build_session(RunSpec(ps=ServerSpec("
@@ -182,6 +209,15 @@ class ShardedParameterServer(ParameterServerProtocol):
         if wire_compression not in (None, "none", "", "int8", "topk"):
             raise ValueError(
                 f"unknown wire compression {wire_compression!r}")
+        if coalesce < 1:
+            raise ValueError(f"coalesce window must be >= 1, got {coalesce}")
+        if coalesce > 1 and apply_mode != "fused":
+            raise ValueError("coalesce > 1 batches packed applies; it "
+                             "requires apply_mode='fused'")
+        self.coalesce = coalesce
+        self.coalesce_wait = (coalesce_wait if coalesce_wait is not None
+                              else (DEFAULT_COALESCE_WAIT_S
+                                    if coalesce > 1 else 0.0))
         self.plan: ShardPlan = build_shard_plan(
             params, n_shards, split_oversized=split_oversized)
         self.gating = gating
@@ -193,6 +229,9 @@ class ShardedParameterServer(ParameterServerProtocol):
             _ShardState(j, self.plan, pieces[j], policy_factory(),
                         optimizer_factory(), workers, apply_mode)
             for j in range(n_shards)]
+        if apply_mode == "fused":
+            for st in self.shards:
+                st.window = self._make_window(st)
         if gating == "global":
             self._gate_policy = policy_factory()
             self._gate_tracker = StalenessTracker(workers)
@@ -276,10 +315,18 @@ class ShardedParameterServer(ParameterServerProtocol):
         wire = bufs[0] if len(bufs) == 1 else jnp.concatenate(bufs)
         with self._snap_lock:
             # A slower concurrent pull may finish its concat AFTER a
-            # fresher one: only install if some shard moved past the
-            # cached snapshot, so the cache never goes backwards.
+            # fresher one: install only if this snapshot DOMINATES the
+            # cached one (component-wise >=, somewhere >).  The old
+            # any-newer guard let two pulls that interleaved their
+            # per-shard grabs replace a cache entry with one that was
+            # OLDER on some shard — never inconsistent (key and wire
+            # install as a pair), but non-monotone.  The concurrency
+            # regression test hammers push+pull and asserts the cached
+            # key always matches the cached bytes and never regresses.
             cached = self._snap_key
-            if cached is None or any(n > c for n, c in zip(key, cached)):
+            if cached is None or (
+                    all(n >= c for n, c in zip(key, cached))
+                    and any(n > c for n, c in zip(key, cached))):
                 self._snap_key, self._snap_wire = key, wire
         return wire
 
@@ -293,6 +340,49 @@ class ShardedParameterServer(ParameterServerProtocol):
         st = self.shards[shard]
         with st.cond:
             return st._packed_p
+
+    def pull_delta(self, worker: int,
+                   versions: Optional[Sequence[int]]) -> DeltaPull:
+        """Version-delta pull: ship only the shards that advanced.
+
+        ``versions`` is the per-shard version vector the worker saw on
+        its LAST pull; the reply carries the regions of shards whose
+        version moved (each region reference-grabbed with its version
+        under that shard's lock — the same per-shard consistency as
+        ``pull_packed``) plus the fresh vector.  A vector of the wrong
+        arity, or one claiming versions the server has not reached,
+        cannot be diffed against — the reply falls back to a full
+        snapshot (every non-empty shard, ``full=True``).  Bytes shipped
+        and bytes avoided are accounted in ``repro.perfcount.WIRE``.
+        """
+        if self.apply_mode != "fused":
+            raise ValueError("pull_delta requires apply_mode='fused' "
+                             "(tree mode has no resident packed store)")
+        snaps, cur = [], []
+        for st in self.shards:
+            with st.cond:
+                snaps.append(st._packed_p)
+                cur.append(st.version)
+        cur_t = tuple(cur)
+        layout = self.plan.wire_layout()
+        itemsize = jnp.dtype(layout.dtype).itemsize
+        full_bytes = layout.total_rows * WIRE_LANES * itemsize
+        mismatch = (versions is None or len(versions) != self.n_shards
+                    or any(int(v) > c for v, c in zip(versions, cur)))
+        if mismatch:
+            changed = [j for j in range(self.n_shards)
+                       if snaps[j].shape[0]]
+        else:
+            changed = [j for j, (v, c) in enumerate(zip(versions, cur))
+                       if int(v) != c and snaps[j].shape[0]]
+        regions = tuple(snaps[j] for j in changed)
+        delta_bytes = sum(int(r.shape[0]) for r in regions) \
+            * WIRE_LANES * itemsize
+        WIRE.delta_bytes_tx += delta_bytes
+        if not mismatch:
+            WIRE.full_pull_bytes_avoided += full_bytes - delta_bytes
+        return DeltaPull(versions=cur_t, shards=tuple(changed),
+                         regions=regions, full=mismatch)
 
     def push_packed_shard(self, worker: int, shard: int, buf) -> None:
         """Single-shard packed push: the unit of per-shard endpoint
@@ -432,7 +522,10 @@ class ShardedParameterServer(ParameterServerProtocol):
                                credit_used=gate_dec.credit_used)
                 apply_staleness = gate_stale
             if dec.apply_update:
-                if packed:
+                if self.coalesce > 1:
+                    self._apply_coalesced(st, payload, packed,
+                                          apply_staleness)
+                elif packed:
                     st.apply_packed(payload, apply_staleness)
                 else:
                     st.apply(payload, apply_staleness)
@@ -450,6 +543,42 @@ class ShardedParameterServer(ParameterServerProtocol):
                 rec.waited = waited
                 st.metrics.record_wait(worker, waited)
             return rec.staleness, dec.apply_update, dec.credit_used, waited
+
+    def _make_window(self, st: _ShardState) -> CoalesceWindow:
+        """One ``CoalesceWindow`` per shard (the shard's lock domain):
+        ``install`` commits buffers + version together so a reader
+        snapshotting (buffer, version) under ``st.cond`` never sees one
+        without the other (the pull_packed cache is keyed by the
+        vector)."""
+        def get_pm():
+            return st._packed_p, st._packed_m
+
+        def install(p, m, n: int) -> None:
+            st._packed_p, st._packed_m = p, m
+            st._pieces = None
+            st.version += n
+
+        return CoalesceWindow(self, st.cond, st.optimizer, st.tracker,
+                              get_pm, install)
+
+    def _apply_coalesced(self, st: _ShardState, payload: Any,
+                         packed: bool, staleness: int) -> None:
+        """Route one contribution through the shard's coalescing window
+        (``CoalesceWindow`` in ``repro.ps.server`` — the full flusher /
+        linger / lock-release protocol lives there).  Called under
+        ``st.cond``."""
+        opt = st.optimizer
+        scale = (1.0 / (1.0 + staleness)
+                 if opt.staleness_damping else 1.0)
+        if not packed:
+            if not payload:              # empty shard: bookkeeping only
+                st.version += 1
+                return
+            payload = st.plan.pack_shard_pieces(payload, st.index)
+        if payload.shape[0] == 0:        # empty shard region
+            st.version += 1
+            return
+        st.window.submit(payload, scale)
 
     def _gate_decide(self, worker: int):
         """Global-gate bookkeeping + decision (no blocking yet)."""

@@ -19,6 +19,11 @@ unpacks, differentiates and re-packs in one fused program — see
 ``repro.launch.train.train_ps``), and pushes the packed gradient buffer
 back (``push_packed``).  The pytree<->wire boundary is crossed exactly
 once per direction, inside the worker's jit.
+
+``delta_pull=True`` (packed only) replaces the full-snapshot pull with
+``server.pull_delta``: the worker keeps a resident packed buffer plus
+the per-shard version vector from its last pull and patches in only
+the shard regions that advanced — pull bytes proportional to change.
 """
 
 from __future__ import annotations
@@ -39,6 +44,7 @@ class PSWorker(threading.Thread):
                  *, speed_factor: float = 1.0,
                  loss_from_aux: Optional[Callable[[Any], float]] = None,
                  wire_format: str = "tree",
+                 delta_pull: bool = False,
                  name: Optional[str] = None):
         super().__init__(name=name or f"ps-worker-{worker_id}", daemon=True)
         warn_legacy("PSWorker",
@@ -46,6 +52,10 @@ class PSWorker(threading.Thread):
                     "join their own workers)")
         if wire_format not in ("tree", "packed"):
             raise ValueError(f"unknown wire format {wire_format!r}")
+        if delta_pull and wire_format != "packed":
+            raise ValueError("delta_pull tracks per-shard versions of "
+                             "the packed snapshot; it requires "
+                             "wire_format='packed'")
         self.worker_id = worker_id
         self.server = server
         self.step_fn = step_fn
@@ -54,6 +64,7 @@ class PSWorker(threading.Thread):
         self.speed_factor = speed_factor
         self.loss_from_aux = loss_from_aux
         self.wire_format = wire_format
+        self.delta_pull = delta_pull
         self.iterations_done = 0
         self.failure: Optional[BaseException] = None
         self._abort = threading.Event()
@@ -62,9 +73,48 @@ class PSWorker(threading.Thread):
         """Simulate a node failure: the worker exits before its next pull."""
         self._abort.set()
 
+    def _delta_puller(self):
+        """Version-delta pulls: keep a resident HOST buffer and patch
+        only the shard regions whose version advanced since the last
+        pull, in place (the bootstrap vector of -1s makes the first
+        delta carry every shard).  An empty delta returns the previous
+        device buffer untouched — zero copies; a non-empty one costs
+        one device upload of the patched buffer (per-region ``.at[]``
+        scatters would copy the whole buffer once per region).  Returns
+        a drop-in replacement for ``server.pull_packed``."""
+        import jax.numpy as jnp
+        import numpy as np
+
+        from repro.wireformat import WIRE_LANES
+        layout = self.server.plan.wire_layout()
+        state = {
+            "host": np.zeros((layout.total_rows, WIRE_LANES),
+                             layout.dtype),
+            "wire": None,
+            "versions": (-1,) * getattr(self.server, "n_shards", 1),
+        }
+
+        def pull(worker_id: int):
+            d = self.server.pull_delta(worker_id, state["versions"])
+            state["versions"] = d.versions
+            if state["wire"] is not None and d.empty:
+                return state["wire"]
+            for j, region in zip(d.shards, d.regions):
+                start = layout.shard_row_start[j]
+                state["host"][start:start + region.shape[0]] = \
+                    np.asarray(region)
+            # jnp.array COPIES (asarray may alias on CPU, and the host
+            # buffer mutates in place on the next pull)
+            state["wire"] = jnp.array(state["host"])
+            return state["wire"]
+
+        return pull
+
     def run(self) -> None:
         packed = self.wire_format == "packed"
-        pull = self.server.pull_packed if packed else self.server.pull
+        pull = (self._delta_puller() if packed and self.delta_pull
+                else self.server.pull_packed if packed
+                else self.server.pull)
         push = self.server.push_packed if packed else self.server.push
         try:
             for it in range(self.n_iterations):

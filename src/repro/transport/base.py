@@ -29,13 +29,17 @@ from typing import Any, Optional, Tuple
 
 import numpy as np
 
+from repro.api.protocol import DeltaPull
 from repro.wireformat import (
+    FLAG_FULL,
     MSG_BYE,
+    MSG_DELTA,
     MSG_ECHO,
     MSG_ERR,
     MSG_HELLO,
     MSG_LOSS,
     MSG_PULL,
+    MSG_PULL_DELTA,
     MSG_PUSH,
     MSG_STOP,
     Frame,
@@ -110,6 +114,32 @@ class PSTransportClient:
         if reply.payload is None:
             raise FrameError("pull reply carried no payload")
         return np.array(reply.payload) if copy else reply.payload
+
+    def pull_delta(self, versions, *,
+                   copy: bool = True) -> Optional[DeltaPull]:
+        """Version-delta pull: only the shards that advanced past
+        ``versions`` (the vector returned by the previous call, or
+        ``(-1,) * n_shards`` for the bootstrap pull — every shard then
+        arrives, which IS the full snapshot).  Returns ``None`` once
+        the server has stopped.  ``copy=False`` returns regions viewing
+        the transport's receive buffer, valid until the next request on
+        this client."""
+        reply = self._request(Frame(kind=MSG_PULL_DELTA,
+                                    worker=self.worker_id,
+                                    versions=tuple(int(v)
+                                                   for v in versions)))
+        if reply.kind == MSG_STOP:
+            return None
+        if reply.kind != MSG_DELTA:
+            raise FrameError(f"expected a DELTA reply, got kind "
+                             f"{reply.kind}")
+        entries = list(reply.delta or ())
+        return DeltaPull(
+            versions=tuple(reply.versions or ()),
+            shards=tuple(s for s, _ in entries),
+            regions=tuple(np.array(a) if copy else a
+                          for _, a in entries),
+            full=bool(reply.flags & FLAG_FULL))
 
     def push_packed(self, wire, shard: int = -1, clock: int = 0) -> bool:
         """Push a packed gradient buffer; BLOCKS until the server's sync

@@ -24,16 +24,19 @@ import numpy as np
 
 from repro.transport.base import PSTransportClient
 from repro.wireformat import (
+    FLAG_FULL,
     WIRE_LANES,
     Frame,
     FrameError,
     MSG_BYE,
+    MSG_DELTA,
     MSG_ECHO,
     MSG_ERR,
     MSG_HELLO,
     MSG_LOSS,
     MSG_OK,
     MSG_PULL,
+    MSG_PULL_DELTA,
     MSG_PUSH,
     MSG_STOP,
     decode_frame,
@@ -120,6 +123,21 @@ class PSServerEndpoint:
             buf = self._pull(frame)
             return Frame(kind=MSG_OK, worker=frame.worker,
                          clock=server.version, payload=np.asarray(buf))
+        if kind == MSG_PULL_DELTA:
+            if server.stopped:
+                return Frame(kind=MSG_STOP, worker=frame.worker,
+                             clock=server.version)
+            if self.shards is not None:
+                raise FrameError(
+                    "delta pulls need a full-store endpoint; this one "
+                    f"routes shards {sorted(self.shards)} only")
+            d = server.pull_delta(frame.worker, frame.versions)
+            entries = [(int(j), np.asarray(r))
+                       for j, r in zip(d.shards, d.regions)]
+            return Frame(kind=MSG_DELTA, worker=frame.worker,
+                         clock=server.version,
+                         flags=FLAG_FULL if d.full else 0,
+                         versions=tuple(d.versions), delta=entries)
         if kind == MSG_PUSH:
             if server.stopped:
                 return Frame(kind=MSG_STOP, worker=frame.worker,

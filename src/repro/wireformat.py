@@ -101,16 +101,27 @@ MSG_STOP = 6    # server-side stop reply (training over / shutdown)
 MSG_OK = 7      # generic success reply
 MSG_ERR = 8     # error reply; body is a utf-8 message
 MSG_ECHO = 9    # payload round-trip diagnostic (health checks + tests)
+MSG_PULL_DELTA = 10  # request: body = client's per-shard version vector
+MSG_DELTA = 11  # reply: advanced shards' regions + fresh version vector
 
 _KINDS = frozenset((MSG_HELLO, MSG_PULL, MSG_PUSH, MSG_LOSS, MSG_BYE,
-                    MSG_STOP, MSG_OK, MSG_ERR, MSG_ECHO))
+                    MSG_STOP, MSG_OK, MSG_ERR, MSG_ECHO,
+                    MSG_PULL_DELTA, MSG_DELTA))
+
+#: Kinds whose body is NOT one (rows, 512) buffer: MSG_ERR carries a
+#: utf-8 message, MSG_PULL_DELTA an int64 version vector, MSG_DELTA the
+#: structured multi-region delta body (see ``_encode_delta_body``).
+_STRUCTURED_KINDS = frozenset((MSG_ERR, MSG_PULL_DELTA, MSG_DELTA))
 
 # -- flags --------------------------------------------------------------
 #: Payload is int8-quantized; dequant scale travels in ``aux`` and the
 #: logical (pre-quantization) dtype stays in the header dtype field.
 FLAG_INT8 = 0x01
+#: DELTA reply is a full-snapshot fallback (client's version vector
+#: mismatched) — every non-empty shard's region is in the body.
+FLAG_FULL = 0x02
 
-_KNOWN_FLAGS = FLAG_INT8
+_KNOWN_FLAGS = FLAG_INT8 | FLAG_FULL
 
 # -- dtype codes --------------------------------------------------------
 _DTYPE_NAMES = {0: "float32", 1: "bfloat16", 2: "float16", 3: "int8"}
@@ -151,6 +162,11 @@ class Frame:
     aux: float = 0.0
     payload: Optional[np.ndarray] = None
     error: str = ""
+    #: PULL_DELTA request / DELTA reply: per-shard version vector.
+    versions: Optional[Tuple[int, ...]] = None
+    #: DELTA reply: [(shard_id, (rows, 512) region), ...] for the
+    #: shards that advanced past the request's version vector.
+    delta: Optional[Sequence[Tuple[int, np.ndarray]]] = None
 
 
 def _quantize_int8(arr: np.ndarray) -> Tuple[np.ndarray, float]:
@@ -163,6 +179,37 @@ def _quantize_int8(arr: np.ndarray) -> Tuple[np.ndarray, float]:
     return q, scale
 
 
+def _encode_delta_body(frame: Frame) -> Tuple[bytes, int, int]:
+    """DELTA reply body: ``<u32 n_shards> <u32 n_entries>
+    <i64 versions[n_shards]>`` then per entry ``<u32 shard> <u32 rows>``
+    + the shard's (rows, 512) region bytes.  All regions share one wire
+    dtype (the header dtype field); header ``rows`` is the summed
+    region rows, so byte accounting stays comparable with full pulls.
+    """
+    vers = np.asarray(frame.versions if frame.versions is not None
+                      else (), "<i8")
+    entries = list(frame.delta or ())
+    chunks = [struct.pack("<II", vers.size, len(entries)), vers.tobytes()]
+    rows, name = 0, None
+    for sid, region in entries:
+        arr = np.ascontiguousarray(region)
+        if arr.ndim != 2 or arr.shape[1] != WIRE_LANES:
+            raise FrameError(f"delta region {arr.shape} is not a "
+                             f"(rows, {WIRE_LANES}) wire buffer")
+        n = np.dtype(arr.dtype).name
+        if n not in _DTYPE_CODES:
+            raise FrameError(f"dtype {n} has no wire code")
+        if name is None:
+            name = n
+        elif n != name:
+            raise FrameError(f"mixed dtypes in delta body ({name}, {n})")
+        chunks.append(struct.pack("<II", int(sid), arr.shape[0]))
+        chunks.append(arr.tobytes())
+        rows += arr.shape[0]
+    dtype_code = _DTYPE_CODES[name if name is not None else "float32"]
+    return b"".join(chunks), rows, dtype_code
+
+
 def encode_frame(frame: Frame, compress: str = "none") -> bytes:
     """Frame -> header + body bytes (the length-prefixed unit every
     transport moves).  ``compress='int8'`` quantizes the payload."""
@@ -173,6 +220,12 @@ def encode_frame(frame: Frame, compress: str = "none") -> bytes:
     if frame.kind == MSG_ERR:
         body = frame.error.encode("utf-8")
         rows, dtype_code = 0, _DTYPE_CODES["int8"]
+    elif frame.kind == MSG_PULL_DELTA:
+        body = np.asarray(frame.versions if frame.versions is not None
+                          else (), "<i8").tobytes()
+        rows, dtype_code = 0, _DTYPE_CODES["float32"]
+    elif frame.kind == MSG_DELTA:
+        body, rows, dtype_code = _encode_delta_body(frame)
     elif frame.payload is None:
         body = b""
         rows, dtype_code = 0, _DTYPE_CODES["float32"]
@@ -230,7 +283,15 @@ def decode_header(buf: bytes) -> Tuple[Frame, int]:
         if payload_len > MAX_PAYLOAD:
             raise FrameError(f"payload length {payload_len} exceeds "
                              f"{MAX_PAYLOAD}")
-        if kind != MSG_ERR:
+        if kind == MSG_PULL_DELTA and payload_len % 8:
+            raise FrameError(
+                f"PULL_DELTA body of {payload_len} bytes is not an "
+                "int64 version vector")
+        if kind == MSG_DELTA and payload_len < 8:
+            raise FrameError(
+                f"DELTA body of {payload_len} bytes is shorter than "
+                "its counts header")
+        if kind not in _STRUCTURED_KINDS:
             itemsize = (1 if flags & FLAG_INT8
                         else np_wire_dtype(_DTYPE_NAMES[dtype_code]).itemsize)
             if payload_len != rows * WIRE_LANES * itemsize:
@@ -261,6 +322,12 @@ def decode_body(frame: Frame, body) -> Frame:
     if frame.kind == MSG_ERR:
         frame.error = bytes(body).decode("utf-8", "replace")
         return frame
+    if frame.kind == MSG_PULL_DELTA:
+        frame.versions = tuple(
+            int(v) for v in np.frombuffer(body, "<i8"))
+        return frame
+    if frame.kind == MSG_DELTA:
+        return _decode_delta_body(frame, body)
     rows = frame._rows  # type: ignore[attr-defined]
     if rows == 0:
         return frame
@@ -272,6 +339,51 @@ def decode_body(frame: Frame, body) -> Frame:
     else:
         frame.payload = np.frombuffer(
             body, np_wire_dtype(name)).reshape(rows, WIRE_LANES)
+    return frame
+
+
+def _decode_delta_body(frame: Frame, body) -> Frame:
+    """Parse a DELTA body (see ``_encode_delta_body``).  Regions are
+    ``np.frombuffer`` views into ``body`` — in-place for shmem/tcp
+    receive buffers, valid as long as the underlying buffer (same
+    contract as an uncompressed pull payload)."""
+    view = memoryview(body)
+    if len(view) < 8:
+        raise FrameError("truncated DELTA body: no counts header")
+    n_shards, n_entries = struct.unpack_from("<II", view, 0)
+    off = 8
+    vec_bytes = n_shards * 8
+    if len(view) < off + vec_bytes:
+        raise FrameError(f"truncated DELTA body: version vector of "
+                         f"{n_shards} entries does not fit")
+    frame.versions = tuple(
+        int(v) for v in np.frombuffer(view[off:off + vec_bytes], "<i8"))
+    off += vec_bytes
+    dt = np_wire_dtype(frame._dtype_name)  # type: ignore[attr-defined]
+    entries = []
+    total_rows = 0
+    for _ in range(n_entries):
+        if len(view) < off + 8:
+            raise FrameError("truncated DELTA body: entry header")
+        sid, rows = struct.unpack_from("<II", view, off)
+        off += 8
+        nbytes = rows * WIRE_LANES * dt.itemsize
+        if len(view) < off + nbytes:
+            raise FrameError(f"truncated DELTA body: shard {sid} region "
+                             f"of {rows} rows does not fit")
+        entries.append((int(sid),
+                        np.frombuffer(view[off:off + nbytes],
+                                      dt).reshape(rows, WIRE_LANES)))
+        off += nbytes
+        total_rows += rows
+    if off != len(view):
+        raise FrameError(f"DELTA body has {len(view) - off} trailing "
+                         "bytes")
+    if total_rows != frame._rows:  # type: ignore[attr-defined]
+        raise FrameError(
+            f"DELTA body rows {total_rows} do not match header rows "
+            f"{frame._rows}")  # type: ignore[attr-defined]
+    frame.delta = entries
     return frame
 
 

@@ -154,6 +154,16 @@ def test_engine_selection():
     (dict(ps=dict(kind="sharded", shards=2),
           optimizer=dict(name="adamw")), "SGD/momentum"),
     (dict(optimizer=dict(lr=-1.0)), "lr"),
+    # PR-5 knobs: delta pulls and coalescing ride the packed wire only
+    (dict(wire=dict(delta_pull=True)), "delta_pull"),
+    (dict(ps=dict(kind="sharded", shards=2, apply="fused"),
+          wire=dict(format="tree", delta_pull=True)), "packed"),
+    (dict(ps=dict(kind="sharded", shards=2, apply="fused", coalesce=4),
+          wire=dict(format="tree")), "coalesce"),
+    (dict(ps=dict(coalesce=2)), "coalesce"),
+    (dict(ps=dict(kind="sharded", shards=2, coalesce=0)), "window"),
+    (dict(ps=dict(kind="sharded", shards=2, coalesce_wait_ms=-5.0)),
+     "coalesce_wait_ms"),
 ])
 def test_invalid_combos_raise_actionable_spec_errors(mutate, needle):
     base = RunSpec().to_dict()
@@ -469,6 +479,20 @@ def test_worker_task_from_mono_spec_clamps_shards():
     task = WorkerTask.from_spec(spec, 3)
     assert task.n_shards == 1
     assert task.arch == "xlstm-125m" and task.n_iterations == 3
+    assert task.delta_pull is False
+
+
+def test_worker_task_carries_delta_pull():
+    from repro.launch.proc_pool import WorkerTask
+
+    spec = RunSpec(model=ModelSpec(arch="xlstm-125m"),
+                   ps=ServerSpec(kind="sharded", shards=2, workers=2,
+                                 apply="fused", coalesce=2),
+                   wire=WireSpec(format="packed", delta_pull=True),
+                   transport=TransportSpec(kind="tcp"))
+    task = WorkerTask.from_spec(spec, 3)
+    assert task.delta_pull is True
+    assert task.to_dict()["delta_pull"] is True  # crosses the spawn
 
 
 def test_cli_spec_rejects_every_wiring_flag():
