@@ -18,7 +18,11 @@ exists to eliminate:
      row present in both reports, no gated metric —
      ``repack_events_per_push``, ``pallas_calls_per_push``,
      ``launches_per_round``, ``delta_bytes_per_pull`` — may increase;
-     a PR may make the hot path cheaper, never quietly more chatty.
+     a PR may make the hot path cheaper, never quietly more chatty;
+  5. observability (only with ``--obs``, see ``check_obs``): tracing
+     off records 0 events and leaves perfcount hot-path deltas
+     bitwise-identical to tracing on; the disabled-call cost may not
+     regress versus ``--obs-previous``.
 
 Exit code 1 on any violation (the CI job fails), 0 otherwise.
 """
@@ -85,23 +89,74 @@ def check(current: dict, previous: dict | None) -> list:
     return failures
 
 
+def check_obs(current: dict, previous: dict | None) -> list:
+    """Gate over ``BENCH_obs.json`` (``benchmarks/obs_overhead.py``).
+
+    Absolute: tracing off must record 0 events and leave the hot-path
+    perfcount deltas bitwise-identical to the traced run (the recorder
+    never adds counted work).  Trajectory: the disabled-call cost may
+    not blow up versus the previous artifact (generous bound — shared
+    runners are noisy, but a 5x/+200ns jump means someone put real work
+    ahead of the early-return).
+    """
+    failures = []
+    if current.get("events_recorded_off", 0) != 0:
+        failures.append(
+            f"obs contract broken: {current['events_recorded_off']} "
+            "events recorded with tracing disabled (expected 0)")
+    hot = current.get("hotpath", {})
+    if not hot.get("identical", False):
+        failures.append(
+            "obs contract broken: perfcount hot-path deltas differ "
+            "between tracing-off and tracing-on runs "
+            f"(off={hot.get('off')} on={hot.get('on')})")
+    if previous is not None:
+        now = current.get("disabled_ns_per_call")
+        before = previous.get("disabled_ns_per_call")
+        if now is not None and before is not None \
+                and now > max(before * 5.0, before + 200.0):
+            failures.append(
+                f"disabled TRACE call cost regressed "
+                f"{before:.0f}ns -> {now:.0f}ns per call")
+        for group in ("wire", "transport"):
+            cur_off = hot.get("off", {}).get(group, {})
+            prev_off = (previous.get("hotpath", {})
+                        .get("off", {}).get(group, {}))
+            for k in sorted(set(cur_off) & set(prev_off)):
+                if cur_off[k] > prev_off[k] + EPS:
+                    failures.append(
+                        f"tracing-off hot path got chattier: "
+                        f"{group}.{k} {prev_off[k]} -> {cur_off[k]}")
+    return failures
+
+
+def _load(path: str | None, label: str) -> dict | None:
+    if not path:
+        return None
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"perf-gate: no usable {label} artifact ({e}); "
+              "checking absolute contract only")
+        return None
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("current", help="fresh BENCH_push_pull.json")
     ap.add_argument("--previous", default=None,
                     help="prior run's artifact (omit on first run)")
+    ap.add_argument("--obs", default=None,
+                    help="fresh BENCH_obs.json (adds the observability "
+                         "overhead gate)")
+    ap.add_argument("--obs-previous", default=None,
+                    help="prior run's BENCH_obs.json artifact")
     args = ap.parse_args()
 
     with open(args.current) as f:
         current = json.load(f)
-    previous = None
-    if args.previous:
-        try:
-            with open(args.previous) as f:
-                previous = json.load(f)
-        except (OSError, ValueError) as e:
-            print(f"perf-gate: no usable previous artifact ({e}); "
-                  "checking absolute contract only")
+    previous = _load(args.previous, "previous")
 
     rows = _rows_by_key(current)
     prev_rows = _rows_by_key(previous) if previous else {}
@@ -119,6 +174,14 @@ def main() -> int:
         print(f"{path:>18} {shards:>3}  {' '.join(marks)}")
 
     failures = check(current, previous)
+    obs = _load(args.obs, "obs")
+    if obs is not None:
+        obs_prev = _load(args.obs_previous, "obs-previous")
+        print(f"\nobs: disabled_instant="
+              f"{obs.get('disabled_ns_per_call', 0):.0f}ns/call "
+              f"events_off={obs.get('events_recorded_off')} "
+              f"hotpath_identical={obs.get('hotpath', {}).get('identical')}")
+        failures += check_obs(obs, obs_prev)
     if failures:
         print("\nPERF GATE FAILED:")
         for f_ in failures:

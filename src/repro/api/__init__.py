@@ -35,6 +35,7 @@ from repro.api.spec import (
     CUSTOM_ARCH,
     DataSpec,
     ModelSpec,
+    ObsSpec,
     OptimizerSpec,
     RunSpec,
     SERVER_KINDS,
@@ -56,6 +57,7 @@ __all__ = [
     "CUSTOM_ARCH",
     "DataSpec",
     "ModelSpec",
+    "ObsSpec",
     "OptimizerSpec",
     "ParameterServerProtocol",
     "RunSpec",

@@ -165,6 +165,99 @@ class TrainingSession:
 
 
 # ===================================================================
+# observability rig
+# ===================================================================
+class _ObsRig:
+    """Per-session lifecycle for ``spec.obs``: enables the server-side
+    recorder, runs the metrics sampler, merges worker flushes/spills
+    into one ``TraceCollector``, exports on finish.
+
+    All ``repro.obs`` imports are local so specs with tracing off never
+    pay for the package.
+    """
+
+    def __init__(self, obs):
+        from repro.obs import TraceCollector
+        self.obs = obs
+        self.collector = TraceCollector()
+        self.sampler = None
+        self.spill_dir = None
+        self.summary = None
+        self._done = False
+
+    def start(self, metrics_fn=None) -> None:
+        from repro.obs.trace import TRACE
+        TRACE.enable(source="server")
+        if self.obs.sample_every > 0 and metrics_fn is not None:
+            from repro.obs import MetricsSampler
+            self.sampler = MetricsSampler(TRACE, metrics_fn,
+                                          self.obs.sample_every)
+            self.sampler.start()
+
+    def make_spill_dir(self) -> str:
+        """Temp dir spawned workers spill their rings into (recovered
+        on finish, so a killed worker's events still reach the trace)."""
+        import tempfile
+        if self.spill_dir is None:
+            self.spill_dir = tempfile.mkdtemp(prefix="repro-obs-spill-")
+        return self.spill_dir
+
+    def finish(self) -> None:
+        """Stop sampling, drain + merge every source, export, summarize.
+        Idempotent — sessions call it from both ``_run`` and ``_close``."""
+        if self._done:
+            return
+        self._done = True
+        import shutil
+        from repro.obs import summarize, write_chrome_trace, write_jsonl
+        from repro.obs.trace import TRACE
+        if self.sampler is not None:
+            self.sampler.stop()
+        self.collector.ingest_local(TRACE, source="server")
+        TRACE.disable()
+        if self.spill_dir is not None:
+            self.collector.ingest_spill_dir(self.spill_dir)
+            shutil.rmtree(self.spill_dir, ignore_errors=True)
+        events = self.collector.timeline()
+        path = self.obs.trace_path
+        if path:
+            if path.endswith(".jsonl"):
+                write_jsonl(events, path)
+            else:
+                write_chrome_trace(events, path)
+        self.summary = summarize(events)
+
+
+def _obs_snapshot_fn(server):
+    """Sampler callable for the PS engines: counters + the policy's
+    current effective staleness bound (the DSSP threshold timeline)."""
+    from repro.perfcount import snapshot_all
+
+    def snap() -> Dict[str, Any]:
+        m = server.metrics
+        out = {
+            "pushes": m.total_pushes,
+            "applied": m.applied_updates,
+            "version": server.version,
+            "total_wait": round(m.total_wait, 6),
+            "max_staleness": m.max_staleness,
+            "credit_releases": m.credit_releases,
+            "perfcount": snapshot_all(),
+        }
+        shards = getattr(server, "shards", None)
+        pol, trk = ((shards[0].policy, shards[0].tracker) if shards
+                    else (getattr(server, "policy", None),
+                          getattr(server, "tracker", None)))
+        if pol is not None:
+            bound = pol.effective_staleness_bound(trk)
+            out["effective_threshold"] = (None if bound == float("inf")
+                                          else float(bound))
+        return out
+
+    return snap
+
+
+# ===================================================================
 # server builders
 # ===================================================================
 def _server_optimizer_factory(spec: RunSpec):
@@ -285,11 +378,15 @@ class SpmdSession(TrainingSession):
 
     trainer = None
     resumed = False
+    obs_rig = None
 
     def _start(self) -> None:
         from repro.data.synthetic import DataConfig
         from repro.launch.train import Trainer
         spec = self.spec
+        if spec.obs.trace:
+            self.obs_rig = _ObsRig(spec.obs)
+            self.obs_rig.start()  # one process: no PS counters to sample
         cfg = self._ov.get("model_config")
         if cfg is None:
             cfg, data_cfg = _model_setup(spec)
@@ -315,11 +412,13 @@ class SpmdSession(TrainingSession):
 
     def _run(self, steps: int) -> None:
         self.trainer.train(steps, verbose=self.verbose)
+        if self.obs_rig is not None:
+            self.obs_rig.finish()
 
     def metrics(self) -> Dict[str, Any]:
         log = self.trainer.log if self.trainer else None
         losses = log.losses if log else []
-        return {
+        out = {
             "engine": self.engine,
             "steps": len(losses),
             "first_loss": losses[0] if losses else None,
@@ -327,6 +426,13 @@ class SpmdSession(TrainingSession):
             "mean_delay": (sum(log.delays) / len(log.delays)
                            if log and log.delays else 0.0),
         }
+        if self.obs_rig is not None and self.obs_rig.summary is not None:
+            out["obs"] = self.obs_rig.summary
+        return out
+
+    def _close(self) -> None:
+        if self.obs_rig is not None:
+            self.obs_rig.finish()
 
 
 # ===================================================================
@@ -343,9 +449,13 @@ class ThreadedPSSession(TrainingSession):
     })
 
     server = None
+    obs_rig = None
 
     def _start(self) -> None:
         self.server = build_server(self.spec, self._ov.get("params"))
+        if self.spec.obs.trace:
+            self.obs_rig = _ObsRig(self.spec.obs)
+            self.obs_rig.start(_obs_snapshot_fn(self.server))
         if self.verbose and self.spec.ps.kind == "sharded":
             print(self.server.plan.describe())
 
@@ -372,6 +482,8 @@ class ThreadedPSSession(TrainingSession):
             for i in range(w)]
         run_cluster(self.server, workers,
                     timeout=self._ov.get("timeout", 1200.0))
+        if self.obs_rig is not None:
+            self.obs_rig.finish()
         if self.verbose:
             m = self.server.metrics
             print(f"pushes={m.total_pushes} applied_updates="
@@ -452,11 +564,13 @@ class ThreadedPSSession(TrainingSession):
 
     # -- reporting ----------------------------------------------------
     def metrics(self) -> Dict[str, Any]:
-        return _ps_metrics(self.engine, self.server)
+        return _ps_metrics(self.engine, self.server, self.obs_rig)
 
     def _close(self) -> None:
         if self.server is not None:
             self.server.shutdown()
+        if self.obs_rig is not None:
+            self.obs_rig.finish()
 
 
 # ===================================================================
@@ -476,12 +590,19 @@ class TransportPSSession(TrainingSession):
     endpoint = None
     transport = None
     results = None
+    obs_rig = None
 
     def _start(self) -> None:
         from repro.transport import PSServerEndpoint, make_transport
         spec = self.spec
         self.server = build_server(spec, self._ov.get("params"))
-        self.endpoint = PSServerEndpoint(self.server)
+        if spec.obs.trace:
+            self.obs_rig = _ObsRig(spec.obs)
+        self.endpoint = PSServerEndpoint(
+            self.server,
+            collector=self.obs_rig.collector if self.obs_rig else None)
+        if self.obs_rig is not None:
+            self.obs_rig.start(_obs_snapshot_fn(self.server))
         self.transport = make_transport(
             spec.transport.kind, n_workers=spec.ps.workers,
             host=spec.transport.host, port=spec.transport.port)
@@ -514,7 +635,10 @@ class TransportPSSession(TrainingSession):
         spec = self.spec
         w = spec.ps.workers
         iters = max(1, steps // w)
-        task = WorkerTask.from_spec(spec, iters)
+        task = WorkerTask.from_spec(
+            spec, iters,
+            trace_spill=(self.obs_rig.make_spill_dir()
+                         if self.obs_rig else ""))
         slowdowns = _speed_factors(spec, self._ov.get("speed_factors"))
         pool = ProcessWorkerPool(self.transport.address(), task, w,
                                  slowdowns=slowdowns)
@@ -538,7 +662,7 @@ class TransportPSSession(TrainingSession):
                   f"max_stale={m.max_staleness}")
 
     def metrics(self) -> Dict[str, Any]:
-        out = _ps_metrics(self.engine, self.server)
+        out = _ps_metrics(self.engine, self.server, self.obs_rig)
         if self.results is not None:
             out["iterations_done"] = sum(r.iterations_done
                                          for r in self.results)
@@ -549,19 +673,31 @@ class TransportPSSession(TrainingSession):
             self.server.shutdown()
         if self.transport is not None:
             self.transport.shutdown()
+        # After the transport is down: every in-flight TRACE frame has
+        # either been dispatched into the collector or lost to the
+        # spill files the rig is about to recover.
+        if self.obs_rig is not None:
+            self.obs_rig.finish()
 
 
-def _ps_metrics(engine: str, server) -> Dict[str, Any]:
+def _ps_metrics(engine: str, server, obs_rig=None) -> Dict[str, Any]:
     if server is None:
         return {"engine": engine}
+    from repro.perfcount import snapshot_all
     m = server.metrics
     losses = [loss for _, _, loss in m.loss_trajectory]
-    return {
+    out = {
         "engine": engine,
         "pushes": m.total_pushes,
         "applied_updates": server.version,
         "max_staleness": m.max_staleness,
         "total_wait": m.total_wait,
+        "wait_fraction": m.wait_fraction(),
+        "credit_releases": m.credit_releases,
         "first_loss": losses[0] if losses else None,
         "final_loss": losses[-1] if losses else None,
+        "perfcount": snapshot_all(),
     }
+    if obs_rig is not None and obs_rig.summary is not None:
+        out["obs"] = obs_rig.summary
+    return out

@@ -260,6 +260,37 @@ class TransportSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class ObsSpec:
+    """Run-wide tracing & telemetry (``repro.obs``).
+
+    ``trace=True`` arms the trace recorders everywhere the run executes
+    (server process AND spawned workers — their rings merge into one
+    timeline).  ``trace_path`` exports the merged trace on session
+    close: ``.jsonl`` writes JSONL, anything else writes Chrome
+    ``trace_event`` JSON (Perfetto-loadable).  ``sample_every`` > 0
+    additionally samples server metrics (staleness histogram, per-worker
+    wait, effective threshold) into the trace on that interval
+    (seconds).
+    """
+
+    trace: bool = False
+    trace_path: str = ""
+    sample_every: float = 0.0
+
+    def __post_init__(self):
+        _require(self.sample_every >= 0.0,
+                 "obs.sample_every is an interval in seconds (>= 0; "
+                 "0 disables sampling)")
+        if not self.trace:
+            _require(not self.trace_path,
+                     "obs.trace_path exports the recorded trace; it "
+                     "needs obs.trace=true")
+            _require(self.sample_every == 0.0,
+                     "obs.sample_every samples into the recorded trace; "
+                     "it needs obs.trace=true")
+
+
+@dataclasses.dataclass(frozen=True)
 class RunSpec:
     """The whole run, validated as a unit.
 
@@ -289,6 +320,7 @@ class RunSpec:
     wire: WireSpec = dataclasses.field(default_factory=WireSpec)
     transport: TransportSpec = dataclasses.field(
         default_factory=TransportSpec)
+    obs: ObsSpec = dataclasses.field(default_factory=ObsSpec)
 
     def __post_init__(self):
         ps, wire, tp, sync = self.ps, self.wire, self.transport, self.sync

@@ -33,6 +33,7 @@ from typing import Callable, Dict, Optional
 
 from repro.core.controller import SynchronizationController
 from repro.core.staleness import StalenessTracker, dssp_effective_bound
+from repro.obs.trace import TRACE
 
 
 @dataclasses.dataclass
@@ -123,6 +124,23 @@ class DSSPPolicy(SyncPolicy):
         self.credits_granted = 0
         self.credits_spent = 0
 
+    def _trace_decision(self, tracker, worker: int, reason: str,
+                        gap: int, threshold: int, r_star: int = 0) -> None:
+        """``dssp_decision`` instant: the Algorithm-1/2 gate outcome.
+
+        ``reason`` is one of ``credit_spend`` / ``credit_void`` /
+        ``free`` / ``grant`` / ``block``; the threshold *extensions*
+        (``grant`` + ``credit_spend``) are exactly the pushes
+        ``RunMetrics`` counts in ``credit_releases``.
+        """
+        TRACE.instant(
+            "dssp_decision", worker=worker,
+            clock=tracker.counts.get(worker, -1),
+            args={"reason": reason, "gap": gap, "threshold": threshold,
+                  "s_lower": self.s_lower, "s_upper": self.s_upper,
+                  "r_star": r_star,
+                  "credits_left": tracker.credits[worker]})
+
     def on_push(self, tracker, worker, timestamp):
         # Feed the interval estimator on *every* push (table A upkeep).
         self.controller.observe_push(tracker, worker)
@@ -136,12 +154,21 @@ class DSSPPolicy(SyncPolicy):
             if gap <= self.s_upper:
                 tracker.credits[worker] -= 1
                 self.credits_spent += 1
+                if TRACE.enabled:
+                    self._trace_decision(tracker, worker, "credit_spend",
+                                         gap, self.s_upper)
                 return Decision(apply_update=True, release_now=True,
                                 credit_used=True)
             tracker.credits[worker] = 0
+            if TRACE.enabled:
+                self._trace_decision(tracker, worker, "credit_void",
+                                     gap, self.s_lower)
 
         # Lines 8-9: within the lower bound — free to go.
         if gap <= self.s_lower:
+            if TRACE.enabled:
+                self._trace_decision(tracker, worker, "free", gap,
+                                     self.s_lower)
             return Decision(apply_update=True, release_now=True)
 
         # Lines 11-15: only the *current fastest* worker consults the
@@ -160,10 +187,18 @@ class DSSPPolicy(SyncPolicy):
                     # Figure-2 semantics: this OK is the first of r* releases.
                     tracker.credits[worker] = r_star - 1
                     self.credits_granted += r_star
+                    if TRACE.enabled:
+                        self._trace_decision(
+                            tracker, worker, "grant", gap,
+                            min(self.s_upper, gap + r_star - 1),
+                            r_star=r_star)
                     return Decision(apply_update=True, release_now=True,
                                     credit_used=True)
 
         # Line 17: block until the slowest catches up to within s_L.
+        if TRACE.enabled:
+            self._trace_decision(tracker, worker, "block", gap,
+                                 self.s_lower)
         return Decision(apply_update=True, release_now=False)
 
     def may_release(self, tracker, worker):

@@ -40,6 +40,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.obs.trace import TRACE
 from repro.perfcount import WIRE
 from repro.wireformat import WIRE_LANES as _LANES
 from repro.wireformat import WIRE_ROWS as _ROWS
@@ -82,6 +83,8 @@ def fused_int8_ef(g: jax.Array, err: jax.Array, *,
     if rows == 0:
         return g, err
     WIRE.pallas_calls += 1
+    if TRACE.enabled:
+        TRACE.instant("kernel_launch", args={"kernel": "fused_int8_ef"})
     spec = pl.BlockSpec((_ROWS, _LANES), lambda i: (i, 0))
     return pl.pallas_call(
         _int8_ef_kernel,
@@ -130,6 +133,8 @@ def fused_topk_ef(g: jax.Array, err: jax.Array, *, fraction: float = 0.05,
     if rows == 0:
         return g, err
     WIRE.pallas_calls += 1
+    if TRACE.enabled:
+        TRACE.instant("kernel_launch", args={"kernel": "fused_topk_ef"})
     spec = pl.BlockSpec((_ROWS, _LANES), lambda i: (i, 0))
     return pl.pallas_call(
         functools.partial(_topk_ef_kernel, fraction=fraction),

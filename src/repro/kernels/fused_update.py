@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.obs.trace import TRACE
 from repro.perfcount import WIRE
 from repro.wireformat import WIRE_LANES as _LANES
 from repro.wireformat import WIRE_ROWS as _ROWS
@@ -53,6 +54,8 @@ def fused_update(p: jax.Array, m: jax.Array, g: jax.Array, *,
     floats or traced scalars (no recompile on change).
     """
     WIRE.pallas_calls += 1
+    if TRACE.enabled:
+        TRACE.instant("kernel_launch", args={"kernel": "fused_update"})
     orig_shape = p.shape
     n = p.size
     tile = _ROWS * _LANES
@@ -162,6 +165,8 @@ def fused_update_batched(p: jax.Array, m: jax.Array, gs: jax.Array, *,
         return fused_update(p, m, gs[0], lr=lr, beta=beta,
                             scale=scales[0], interpret=interpret)
     WIRE.pallas_calls += 1
+    if TRACE.enabled:
+        TRACE.instant("kernel_launch", args={"kernel": "fused_update_batched"})
     orig_shape = p.shape
     n = p.size
     tile = _ROWS * _LANES

@@ -50,12 +50,16 @@ class WorkerTask:
     data_seed: int = 0        # worker w streams shard seed data_seed+1+w
     compress: str = "none"    # frame-level wire compression (int8)
     delta_pull: bool = False  # version-delta pulls over PULL_DELTA frames
+    trace: bool = False       # arm the worker's repro.obs ring buffer
+    trace_spill: str = ""     # dir for the per-worker JSONL spill file
+    trace_flush_every: int = 32  # iterations between TRACE-frame flushes
 
     def to_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
 
     @classmethod
-    def from_spec(cls, spec, n_iterations: int) -> "WorkerTask":
+    def from_spec(cls, spec, n_iterations: int, *, trace_spill: str = "",
+                  trace_flush_every: int = 32) -> "WorkerTask":
         """Derive the spawn payload from a ``repro.api.RunSpec``.
 
         Only the int8 compression rides the frames (bytes shrink on the
@@ -76,7 +80,11 @@ class WorkerTask:
                    data_seed=spec.data.seed,
                    compress=("int8" if spec.wire.compression == "int8"
                              else "none"),
-                   delta_pull=spec.wire.delta_pull)
+                   delta_pull=spec.wire.delta_pull,
+                   trace=bool(getattr(spec, "obs", None)
+                              and spec.obs.trace),
+                   trace_spill=trace_spill,
+                   trace_flush_every=trace_flush_every)
 
 
 @dataclasses.dataclass
@@ -125,7 +133,39 @@ def _worker_main(task: Dict[str, Any], address, worker_id: int,
                 loss_fn, has_aux=True)(p, batch)
             return wire_g_prev.at[:].set(plan.pack(grads)), loss
 
+        tracer = spill_fh = None
+        if task.get("trace"):
+            from repro.obs.trace import TRACE as tracer
+            tracer.enable(source=f"w{worker_id}")
+            if task.get("trace_spill"):
+                # Append-mode JSONL spill: every drained batch lands on
+                # disk BEFORE the frame send, so a worker killed mid-run
+                # leaves its events recoverable (collector dedups the
+                # ones that also made it over the wire).
+                os.makedirs(task["trace_spill"], exist_ok=True)
+                spill_fh = open(os.path.join(task["trace_spill"],
+                                             f"w{worker_id}.jsonl"),
+                                "a", encoding="utf-8")
+
         client = connect(address, worker_id, compress=task["compress"])
+
+        def flush_trace() -> None:
+            if tracer is None:
+                return
+            events = tracer.drain()
+            if not events:
+                return
+            if spill_fh is not None:
+                import json
+                for e in events:
+                    spill_fh.write(json.dumps(e, separators=(",", ":")))
+                    spill_fh.write("\n")
+                spill_fh.flush()
+            try:
+                client.send_trace(events)
+            except Exception:
+                pass  # server gone — the spill file still has them
+
         rows = client.hello()
         if rows != layout.total_rows:
             raise ValueError(
@@ -164,20 +204,32 @@ def _worker_main(task: Dict[str, Any], address, worker_id: int,
                         break  # server stopped
                     wire_p = jnp.asarray(wire_np)
                 batch = {k: jnp.asarray(v) for k, v in next(stream).items()}
+                t_tr = tracer.now() if tracer is not None else 0.0
                 t0 = time.monotonic()
                 wire_g, loss = packed_step(wire_p, wire_g, batch)
                 loss = float(jax.block_until_ready(loss))
                 compute = time.monotonic() - t0
                 if slowdown > 1.0:
+                    # The sleep IS the emulated slower device, so the
+                    # compute_step span includes it.
                     time.sleep(compute * (slowdown - 1.0))
+                if tracer is not None:
+                    tracer.span("compute_step", t_tr, worker=worker_id,
+                                clock=it, args={"loss": loss})
                 client.record_loss(it, loss)
                 if not client.push_packed(np.asarray(wire_g), clock=it):
                     done += 1
                     break  # released with a STOP: training is over
                 done += 1
+                if (it + 1) % max(1, task.get("trace_flush_every", 32)) \
+                        == 0:
+                    flush_trace()
         finally:
+            flush_trace()
             client.bye()
             client.close()
+            if spill_fh is not None:
+                spill_fh.close()
         queue.put(WorkerResult(worker_id, done))
     except BaseException:
         queue.put(WorkerResult(worker_id, done,

@@ -31,6 +31,7 @@ from repro.core import dssp_spmd
 from repro.data.synthetic import DataConfig, batches, loss_floor
 from repro.models import registry
 from repro.models.sharding import use_rules
+from repro.obs.trace import TRACE
 from repro.optim import make_optimizer
 from repro.optim.compression import make_compressor
 
@@ -157,6 +158,7 @@ class Trainer:
                 delay = max(self.s_lower, 1)
             else:
                 delay = 0
+            t_tr = TRACE.now() if TRACE.enabled else 0.0
             t0 = time.monotonic()
             (self.params, self.opt_state, self.pipeline,
              self.err_state, loss) = self._jit_step(
@@ -164,6 +166,10 @@ class Trainer:
                 self.err_state, batch, jnp.int32(delay))
             loss = jax.block_until_ready(loss)
             dt = time.monotonic() - t0
+            if TRACE.enabled:
+                TRACE.span("compute_step", t_tr, worker=0,
+                           clock=self.step_idx,
+                           args={"loss": float(loss), "delay": int(delay)})
             self.controller.observe(dt, self.collective_time_fn())
             self.log.record(self.step_idx, loss, delay, dt)
             if verbose and self.step_idx % log_every == 0:
@@ -236,7 +242,8 @@ def spec_from_flags(*, arch: str, smoke: bool = True, sync: str = "dssp",
                     ps_wire: str = "tree", ps_gating: str = "sharded",
                     ps_straggler: float = 1.0, ps_coalesce: int = 1,
                     delta_pull: bool = False,
-                    transport: str = "inproc"):
+                    transport: str = "inproc",
+                    trace_path: str = ""):
     """Translate the historical CLI flag surface into a ``RunSpec``.
 
     Keeps the old implication chain (`--transport tcp` implies the
@@ -282,7 +289,8 @@ def spec_from_flags(*, arch: str, smoke: bool = True, sync: str = "dssp",
         wire=api.WireSpec(format=ps_wire if ps_shards >= 1 else "tree",
                           compression=compress,
                           delta_pull=delta_pull and ps_shards >= 1),
-        transport=api.TransportSpec(kind=transport))
+        transport=api.TransportSpec(kind=transport),
+        obs=api.ObsSpec(trace=bool(trace_path), trace_path=trace_path))
 
 
 # -------------------------------------------------------------------- CLI
@@ -344,6 +352,11 @@ def main() -> None:
                     help="version-delta pulls: workers pull only the "
                          "shard regions that advanced since their last "
                          "pull (implies --ps-wire packed)")
+    ap.add_argument("--trace", default="", metavar="PATH",
+                    help="record a run-wide trace (repro.obs) and write "
+                         "it here on exit: .jsonl = raw event lines, "
+                         "anything else = Chrome trace_event JSON "
+                         "(load in Perfetto / chrome://tracing)")
     ap.add_argument("--transport", default="inproc",
                     choices=["inproc", "tcp", "shmem"],
                     help="PS worker isolation: inproc = threads sharing "
@@ -376,6 +389,7 @@ def main() -> None:
             ("--ps-straggler", 1.0, args.ps_straggler),
             ("--ps-coalesce", 1, args.ps_coalesce),
             ("--delta-pull", False, args.delta_pull),
+            ("--trace", "", args.trace),
             ("--transport", "inproc", args.transport)) if got != default]
         if wired:
             ap.error(f"--spec is the single source of truth; drop "
@@ -392,7 +406,7 @@ def main() -> None:
             ps_apply=args.ps_apply, ps_wire=args.ps_wire,
             ps_gating=args.ps_gating, ps_straggler=args.ps_straggler,
             ps_coalesce=args.ps_coalesce, delta_pull=args.delta_pull,
-            transport=args.transport)
+            transport=args.transport, trace_path=args.trace)
     if args.dump_spec:
         print(spec.to_json())
         return
@@ -418,6 +432,10 @@ def main() -> None:
         if m["final_loss"] is not None:
             print(f"final loss {m['final_loss']:.4f} "
                   f"(first {m['first_loss']:.4f})")
+        if spec.obs.trace_path:
+            print(f"trace written: {spec.obs.trace_path} "
+                  f"(python -m repro.obs summarize "
+                  f"{spec.obs.trace_path})")
         return
 
     data_cfg = DataConfig(vocab_size=cfg.vocab_size,
@@ -440,6 +458,9 @@ def main() -> None:
     print(f"final loss {m['final_loss']:.4f} "
           f"(first {m['first_loss']:.4f}); mean delay "
           f"{m['mean_delay']:.2f}")
+    if spec.obs.trace_path:
+        print(f"trace written: {spec.obs.trace_path} "
+              f"(python -m repro.obs summarize {spec.obs.trace_path})")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,48 @@
+"""Run-wide tracing & live telemetry for the DSSP stack.
+
+The paper's contribution is a *runtime* decision — the staleness
+threshold is re-chosen per iteration from workers' measured intervals —
+so this package makes the runtime observable: typed spans for every
+push / gate wait / apply / pull, the DSSP decision timeline, periodic
+metrics snapshots, cross-process collection over the existing frame
+transports, and Chrome ``trace_event`` (Perfetto-loadable) export.
+
+Layers (see ``src/repro/obs/README.md`` for the event schema and the
+overhead contract):
+
+  * ``trace``     — ``TRACE``, the process-local bounded ring-buffer
+    recorder every hook writes through.  Disabled (the default) it is
+    a no-op attribute check; nothing is allocated, no hot-path event
+    counter moves (gated by ``benchmarks/obs_overhead.py``).
+  * ``collect``   — ``TraceCollector`` merges drained ring buffers from
+    many processes into one run timeline (dedup by ``(src, seq)``,
+    stable order by ``(worker, clock)``), plus the ``MetricsSampler``
+    interval thread.
+  * ``export``    — Chrome trace JSON / JSONL writers and the
+    format-sniffing reader.
+  * ``summarize`` — the paper's quantities (wait fraction, threshold
+    timeline, staleness percentiles) from a trace;
+    ``python -m repro.obs summarize <trace>`` on the CLI.
+
+Everything here is stdlib-only: spawned worker processes import it
+long before they touch jax.
+"""
+
+from repro.obs.collect import MetricsSampler, TraceCollector
+from repro.obs.export import (read_jsonl, read_trace, write_chrome_trace,
+                              write_jsonl)
+from repro.obs.summarize import format_summary, summarize
+from repro.obs.trace import TRACE, TraceRecorder
+
+__all__ = [
+    "TRACE",
+    "TraceRecorder",
+    "TraceCollector",
+    "MetricsSampler",
+    "write_chrome_trace",
+    "write_jsonl",
+    "read_jsonl",
+    "read_trace",
+    "summarize",
+    "format_summary",
+]

@@ -38,7 +38,23 @@ from typing import Dict
 
 
 @dataclasses.dataclass
-class HotPathCounters:
+class _CounterBase:
+    """Shared reset/snapshot/delta over a dataclass of int fields."""
+
+    def reset(self) -> None:
+        for f in dataclasses.fields(self):
+            setattr(self, f.name, 0)
+
+    def snapshot(self) -> Dict[str, int]:
+        return {f.name: getattr(self, f.name)
+                for f in dataclasses.fields(self)}
+
+    def delta(self, before: Dict[str, int]) -> Dict[str, int]:
+        return {k: v - before.get(k, 0) for k, v in self.snapshot().items()}
+
+
+@dataclasses.dataclass
+class HotPathCounters(_CounterBase):
     leaf_concats: int = 0
     packs: int = 0
     unpacks: int = 0
@@ -58,17 +74,6 @@ class HotPathCounters:
     #: proportional to change" win, directly benchmarkable.
     full_pull_bytes_avoided: int = 0
 
-    def reset(self) -> None:
-        for f in dataclasses.fields(self):
-            setattr(self, f.name, 0)
-
-    def snapshot(self) -> Dict[str, int]:
-        return {f.name: getattr(self, f.name)
-                for f in dataclasses.fields(self)}
-
-    def delta(self, before: Dict[str, int]) -> Dict[str, int]:
-        return {k: v - before.get(k, 0) for k, v in self.snapshot().items()}
-
 
 #: Process-global counters — reset + snapshot around the region of
 #: interest (see ``benchmarks/push_pull_latency.py``).
@@ -76,7 +81,7 @@ WIRE = HotPathCounters()
 
 
 @dataclasses.dataclass
-class TransportCounters:
+class TransportCounters(_CounterBase):
     """Bytes-on-the-wire accounting for the frame codec + transports.
 
     Bumped at the ``repro.wireformat`` encode/decode boundary, so every
@@ -93,17 +98,13 @@ class TransportCounters:
     bytes_rx: int = 0
     header_rejects: int = 0
 
-    def reset(self) -> None:
-        for f in dataclasses.fields(self):
-            setattr(self, f.name, 0)
-
-    def snapshot(self) -> Dict[str, int]:
-        return {f.name: getattr(self, f.name)
-                for f in dataclasses.fields(self)}
-
-    def delta(self, before: Dict[str, int]) -> Dict[str, int]:
-        return {k: v - before.get(k, 0) for k, v in self.snapshot().items()}
-
 
 #: Process-global transport counters (see ``repro.wireformat``).
 TRANSPORT = TransportCounters()
+
+
+def snapshot_all() -> Dict[str, Dict[str, int]]:
+    """One combined view of every process-global counter group —
+    ``session.metrics()`` and the obs metrics snapshots both read this
+    instead of enumerating the globals themselves."""
+    return {"wire": WIRE.snapshot(), "transport": TRANSPORT.snapshot()}

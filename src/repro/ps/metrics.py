@@ -9,8 +9,22 @@ convergence-vs-wall-clock plots (paper Fig. 3/4).
 from __future__ import annotations
 
 import dataclasses
-import statistics
 from typing import Dict, List, Optional, Tuple
+
+#: Trajectory lists are decimated (every other point dropped, endpoints
+#: kept) whenever they reach this length, so a long run holds at most
+#: ~CAP points instead of one tuple per push.
+TRAJECTORY_CAP = 8192
+
+
+def _decimate(lst: List) -> None:
+    """Halve a trajectory in place, keeping the first and last points
+    (readers depend on ``lst[0]``/``lst[-1]`` being the run endpoints)."""
+    last = lst[-1]
+    dec = lst[::2]
+    if dec[-1] != last:
+        dec.append(last)
+    lst[:] = dec
 
 
 @dataclasses.dataclass
@@ -46,7 +60,15 @@ class RunMetrics:
         if credit:
             self.credit_releases += 1
         self.update_trajectory.append((time, self.applied_updates))
+        if len(self.update_trajectory) >= TRAJECTORY_CAP:
+            _decimate(self.update_trajectory)
         self.total_time = max(self.total_time, time)
+
+    def record_loss_point(self, time: float, step: int,
+                          loss: float) -> None:
+        self.loss_trajectory.append((time, step, loss))
+        if len(self.loss_trajectory) >= TRAJECTORY_CAP:
+            _decimate(self.loss_trajectory)
 
     def record_wait(self, worker: int, waited: float) -> None:
         self.wait_time[worker] = self.wait_time.get(worker, 0.0) + waited
@@ -120,12 +142,44 @@ def compare(metrics: List[RunMetrics]) -> str:
     return "\n".join(out)
 
 
+def hist_percentile(hist: Dict[int, int], q: float) -> float:
+    """q-quantile (q in [0,1]) of a value->count histogram.
+
+    Weighted quantile straight off the histogram — O(distinct values),
+    never materializing one entry per observation.  Matches
+    ``statistics.quantiles(xs, n=100, method='exclusive')`` at the
+    percentile index the old list-based implementation used, so results
+    are bit-identical to the pre-histogram code path.
+    """
+    items = sorted((s, c) for s, c in hist.items() if c > 0)
+    total = sum(c for _, c in items)
+    if total == 0:
+        return 0.0
+    if total == 1:
+        return float(items[0][0])
+
+    def order_stat(k: int) -> int:
+        # 0-indexed k-th smallest observation, by cumulative count.
+        cum = 0
+        for s, c in items:
+            cum += c
+            if k < cum:
+                return s
+        return items[-1][0]
+
+    # statistics.quantiles(n=100) exclusive method, at cut point i:
+    #   j = clamp(i * (N + 1) // 100, 1, N - 1)
+    #   delta = i * (N + 1) - j * 100      (after clamping, so it can
+    #                                       leave [0, 100] at the tails)
+    #   result = (x[j-1] * (100 - delta) + x[j] * delta) / 100
+    i = min(98, max(0, int(q * 100) - 1)) + 1
+    m = total + 1
+    j = min(max(i * m // 100, 1), total - 1)
+    delta = i * m - j * 100
+    lo, hi = order_stat(j - 1), order_stat(j)
+    return (lo * (100 - delta) + hi * delta) / 100
+
+
 def staleness_percentile(m: RunMetrics, q: float) -> float:
     """q-quantile of observed staleness (q in [0,1])."""
-    xs: List[int] = []
-    for s, c in sorted(m.staleness_hist.items()):
-        xs.extend([s] * c)
-    if not xs:
-        return 0.0
-    return float(statistics.quantiles(xs, n=100)[min(98, max(0, int(q * 100) - 1))]) \
-        if len(xs) > 1 else float(xs[0])
+    return hist_percentile(m.staleness_hist, q)

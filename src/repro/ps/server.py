@@ -25,6 +25,7 @@ from repro._compat import warn_legacy
 from repro.api.protocol import DeltaPull, ParameterServerProtocol
 from repro.core.policies import SyncPolicy
 from repro.core.staleness import StalenessTracker
+from repro.obs.trace import TRACE
 from repro.perfcount import WIRE
 from repro.ps.metrics import RunMetrics
 
@@ -114,6 +115,7 @@ class CoalesceWindow:
         """One batched launch over ``batch`` (called under ``cond``;
         drops the lock for the kernel dispatch)."""
         from repro.kernels import ops as kops
+        t0 = TRACE.now() if TRACE.enabled else 0.0
         opt = self.optimizer
         bufs = [b for b, _ in batch]
         scales = [s for _, s in batch]
@@ -129,6 +131,8 @@ class CoalesceWindow:
         self.applied_seq += len(batch)
         if len(batch) > 1:
             WIRE.apply_launches_saved += len(batch) - 1
+        if TRACE.enabled:
+            TRACE.span("coalesce_flush", t0, args={"n": len(batch)})
         self.cond.notify_all()
 
 
@@ -234,22 +238,35 @@ class ParameterServer(ParameterServerProtocol):
         OUTSIDE the lock, so a pull right after an apply never blocks
         concurrent pushes for the duration of the unpack.
         """
+        t0 = TRACE.now() if TRACE.enabled else 0.0
         with self._cond:
             if self._params is not None:
-                return self._params
+                params, version = self._params, self.version
+                if TRACE.enabled:
+                    TRACE.span("pull", t0, worker=worker,
+                               args={"version": version, "cached": True})
+                return params
             wire, version = self._wire_p, self.version
         params = self.plan.unpack(wire)
         with self._cond:
             if self.version == version and self._params is None:
                 self._params = params
+            if TRACE.enabled:
+                TRACE.span("pull", t0, worker=worker,
+                           args={"version": version, "cached": False})
             return params
 
     def pull_packed(self, worker: int = -1) -> jax.Array:
         """The packed wire buffer itself — already a consistent snapshot."""
         if self.apply_mode != "packed":
             raise ValueError("pull_packed requires apply_mode='packed'")
+        t0 = TRACE.now() if TRACE.enabled else 0.0
         with self._cond:
-            return self._wire_p
+            wire, version = self._wire_p, self.version
+        if TRACE.enabled:
+            TRACE.span("pull", t0, worker=worker,
+                       args={"version": version, "packed": True})
+        return wire
 
     def pull_delta(self, worker: int,
                    versions: Optional[Any] = None) -> DeltaPull:
@@ -258,6 +275,7 @@ class ParameterServer(ParameterServerProtocol):
         empty delta when the worker is already current."""
         if self.apply_mode != "packed":
             raise ValueError("pull_delta requires apply_mode='packed'")
+        t0 = TRACE.now() if TRACE.enabled else 0.0
         with self._cond:
             wire, version = self._wire_p, self.version
         full_bytes = int(wire.size) * jnp.dtype(wire.dtype).itemsize
@@ -265,8 +283,14 @@ class ParameterServer(ParameterServerProtocol):
                     or int(versions[0]) > version)
         if not mismatch and int(versions[0]) == version:
             WIRE.full_pull_bytes_avoided += full_bytes
+            if TRACE.enabled:
+                TRACE.span("pull_delta", t0, worker=worker,
+                           args={"version": version, "empty": True})
             return DeltaPull(versions=(version,))
         WIRE.delta_bytes_tx += full_bytes
+        if TRACE.enabled:
+            TRACE.span("pull_delta", t0, worker=worker,
+                       args={"version": version, "full": mismatch})
         return DeltaPull(versions=(version,), shards=(0,),
                          regions=(wire,), full=mismatch)
 
@@ -286,6 +310,7 @@ class ParameterServer(ParameterServerProtocol):
         self._push(worker, wire, packed=True)
 
     def _push(self, worker: int, payload: Any, packed: bool) -> None:
+        t_push = TRACE.now() if TRACE.enabled else 0.0
         if self.apply_mode == "packed" and not packed:
             # Packing depends only on the (immutable) payload — do it
             # BEFORE taking the lock so concurrent pulls/pushes never
@@ -296,6 +321,7 @@ class ParameterServer(ParameterServerProtocol):
             rec = self.tracker.record_push(worker, now)
             dec = self.policy.on_push(self.tracker, worker, now)
             if dec.apply_update:
+                t_apply = TRACE.now() if TRACE.enabled else 0.0
                 if self.apply_mode == "packed":
                     if self.coalesce > 1:
                         self._apply_coalesced(payload, rec.staleness)
@@ -306,19 +332,31 @@ class ParameterServer(ParameterServerProtocol):
                     self._params = self.optimizer.step(
                         self._params, payload, rec.staleness)
                     self.version += 1
+                if TRACE.enabled:
+                    TRACE.span("apply", t_apply, worker=worker,
+                               clock=rec.iteration)
             self.metrics.record_push(
                 worker, rec.staleness, applied=dec.apply_update,
                 credit=dec.credit_used, time=now)
             self._cond.notify_all()
-            if dec.release_now:
-                return
-            arrival = self._clock()
-            while (not self.stopped
-                   and not self.policy.may_release(self.tracker, worker)):
-                self._cond.wait(timeout=0.5)
-            waited = self._clock() - arrival
-            rec.waited = waited
-            self.metrics.record_wait(worker, waited)
+            if not dec.release_now:
+                t_wait = TRACE.now() if TRACE.enabled else 0.0
+                arrival = self._clock()
+                while (not self.stopped
+                       and not self.policy.may_release(self.tracker, worker)):
+                    self._cond.wait(timeout=0.5)
+                waited = self._clock() - arrival
+                rec.waited = waited
+                self.metrics.record_wait(worker, waited)
+                if TRACE.enabled:
+                    TRACE.span("gate_wait", t_wait, worker=worker,
+                               clock=rec.iteration)
+            if TRACE.enabled:
+                TRACE.span("push", t_push, worker=worker,
+                           clock=rec.iteration,
+                           args={"staleness": rec.staleness,
+                                 "applied": dec.apply_update,
+                                 "credit": dec.credit_used})
 
     def _apply_packed(self, wire_g: jax.Array, staleness: int) -> None:
         from repro.kernels import ops as kops
@@ -354,8 +392,7 @@ class ParameterServer(ParameterServerProtocol):
         asynchrony wins — see benchmarks/paper_tables.py)."""
         with self._cond:
             now = self._clock() - self._t0
-            self.metrics.loss_trajectory.append(
-                (now, self.version, float(loss)))
+            self.metrics.record_loss_point(now, self.version, float(loss))
 
     # -- elastic membership ---------------------------------------------------
     def add_worker(self, worker: int) -> None:

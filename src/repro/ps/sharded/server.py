@@ -90,6 +90,7 @@ from repro._compat import warn_legacy
 from repro.api.protocol import DeltaPull, ParameterServerProtocol
 from repro.core.policies import Decision, SyncPolicy
 from repro.core.staleness import StalenessTracker
+from repro.obs.trace import TRACE
 from repro.optim.compression import Compressor
 from repro.perfcount import WIRE
 from repro.ps.metrics import RunMetrics
@@ -287,8 +288,12 @@ class ShardedParameterServer(ParameterServerProtocol):
         is internally consistent; cross-shard skew is bounded by the
         gating policies).
         """
-        return self.plan.assemble(
+        t0 = TRACE.now() if TRACE.enabled else 0.0
+        params = self.plan.assemble(
             [self._shard_snapshot(st) for st in self.shards])
+        if TRACE.enabled:
+            TRACE.span("pull", t0, worker=worker)
+        return params
 
     def pull_packed(self, worker: int = -1) -> jax.Array:
         """Full (total_rows, 512) wire snapshot of the parameters.
@@ -302,6 +307,7 @@ class ShardedParameterServer(ParameterServerProtocol):
         if self.apply_mode != "fused":
             raise ValueError("pull_packed requires apply_mode='fused' "
                              "(tree mode has no resident packed store)")
+        t0 = TRACE.now() if TRACE.enabled else 0.0
         snaps, versions = [], []
         for st in self.shards:
             with st.cond:
@@ -310,7 +316,11 @@ class ShardedParameterServer(ParameterServerProtocol):
         key = tuple(versions)
         with self._snap_lock:
             if self._snap_key == key:
-                return self._snap_wire
+                wire = self._snap_wire
+                if TRACE.enabled:
+                    TRACE.span("pull", t0, worker=worker,
+                               args={"packed": True, "cached": True})
+                return wire
         bufs = [b for b in snaps if b.shape[0]]
         wire = bufs[0] if len(bufs) == 1 else jnp.concatenate(bufs)
         with self._snap_lock:
@@ -328,6 +338,9 @@ class ShardedParameterServer(ParameterServerProtocol):
                     all(n >= c for n, c in zip(key, cached))
                     and any(n > c for n, c in zip(key, cached))):
                 self._snap_key, self._snap_wire = key, wire
+        if TRACE.enabled:
+            TRACE.span("pull", t0, worker=worker,
+                       args={"packed": True, "cached": False})
         return wire
 
     def pull_packed_shard(self, shard: int, worker: int = -1) -> jax.Array:
@@ -358,6 +371,7 @@ class ShardedParameterServer(ParameterServerProtocol):
         if self.apply_mode != "fused":
             raise ValueError("pull_delta requires apply_mode='fused' "
                              "(tree mode has no resident packed store)")
+        t0 = TRACE.now() if TRACE.enabled else 0.0
         snaps, cur = [], []
         for st in self.shards:
             with st.cond:
@@ -381,6 +395,10 @@ class ShardedParameterServer(ParameterServerProtocol):
         WIRE.delta_bytes_tx += delta_bytes
         if not mismatch:
             WIRE.full_pull_bytes_avoided += full_bytes - delta_bytes
+        if TRACE.enabled:
+            TRACE.span("pull_delta", t0, worker=worker,
+                       args={"shards": len(changed), "bytes": delta_bytes,
+                             "full": mismatch})
         return DeltaPull(versions=cur_t, shards=tuple(changed),
                          regions=regions, full=mismatch)
 
@@ -475,6 +493,7 @@ class ShardedParameterServer(ParameterServerProtocol):
 
     def _push_payloads(self, worker: int, payloads: Sequence[Any],
                        packed: bool) -> None:
+        t_push = TRACE.now() if TRACE.enabled else 0.0
         order = range(self.n_shards)
         now = self._clock() - self._t0
         # Global mode: the gate decides FIRST (monolithic order — decide,
@@ -501,6 +520,11 @@ class ShardedParameterServer(ParameterServerProtocol):
                                      credit=any_credit, time=now)
             if total_wait > 0:
                 self.metrics.record_wait(worker, total_wait)
+            clock = self.metrics.pushes.get(worker, -1)
+        if TRACE.enabled:
+            TRACE.span("push", t_push, worker=worker, clock=clock,
+                       args={"staleness": max_stale, "applied": any_applied,
+                             "credit": any_credit})
 
     def _push_shard(self, j: int, worker: int, payload: Any,
                     packed: bool = False,
@@ -522,6 +546,7 @@ class ShardedParameterServer(ParameterServerProtocol):
                                credit_used=gate_dec.credit_used)
                 apply_staleness = gate_stale
             if dec.apply_update:
+                t_apply = TRACE.now() if TRACE.enabled else 0.0
                 if self.coalesce > 1:
                     self._apply_coalesced(st, payload, packed,
                                           apply_staleness)
@@ -529,12 +554,16 @@ class ShardedParameterServer(ParameterServerProtocol):
                     st.apply_packed(payload, apply_staleness)
                 else:
                     st.apply(payload, apply_staleness)
+                if TRACE.enabled:
+                    TRACE.span("apply", t_apply, worker=worker, shard=j,
+                               clock=rec.iteration)
             st.metrics.record_push(worker, rec.staleness,
                                    applied=dec.apply_update,
                                    credit=dec.credit_used, time=now)
             st.cond.notify_all()
             waited = 0.0
             if not dec.release_now:
+                t_wait = TRACE.now() if TRACE.enabled else 0.0
                 arrival = self._clock()
                 while (not self.stopped
                        and not st.policy.may_release(st.tracker, worker)):
@@ -542,6 +571,9 @@ class ShardedParameterServer(ParameterServerProtocol):
                 waited = self._clock() - arrival
                 rec.waited = waited
                 st.metrics.record_wait(worker, waited)
+                if TRACE.enabled:
+                    TRACE.span("gate_wait", t_wait, worker=worker, shard=j,
+                               clock=rec.iteration)
             return rec.staleness, dec.apply_update, dec.credit_used, waited
 
     def _make_window(self, st: _ShardState) -> CoalesceWindow:
@@ -592,13 +624,17 @@ class ShardedParameterServer(ParameterServerProtocol):
     def _gate_wait(self, worker: int, dec: Decision) -> float:
         if dec.release_now:
             return 0.0
+        t_wait = TRACE.now() if TRACE.enabled else 0.0
         with self._gate_cond:
             arrival = self._clock()
             while (not self.stopped
                    and not self._gate_policy.may_release(
                        self._gate_tracker, worker)):
                 self._gate_cond.wait(timeout=0.5)
-            return self._clock() - arrival
+            waited = self._clock() - arrival
+        if TRACE.enabled:
+            TRACE.span("gate_wait", t_wait, worker=worker)
+        return waited
 
     def _compress(self, worker: int,
                   pieces_per_shard: List[List[jax.Array]]):
@@ -635,8 +671,7 @@ class ShardedParameterServer(ParameterServerProtocol):
     def record_loss(self, step: int, loss: float) -> None:
         with self._metrics_lock:
             now = self._clock() - self._t0
-            self.metrics.loss_trajectory.append((now, self.version,
-                                                 float(loss)))
+            self.metrics.record_loss_point(now, self.version, float(loss))
 
     # -- elastic membership ----------------------------------------------------
     def add_worker(self, worker: int) -> None:

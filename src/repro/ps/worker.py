@@ -34,6 +34,7 @@ from typing import Any, Callable, Iterator, Optional
 
 from repro._compat import warn_legacy
 from repro.api.protocol import ParameterServerProtocol
+from repro.obs.trace import TRACE
 
 StepFn = Callable[[Any, Any], Any]  # (params, batch) -> (grads, aux)
 
@@ -121,12 +122,18 @@ class PSWorker(threading.Thread):
                 if self._abort.is_set() or self.server.stopped:
                     break
                 params = pull(self.worker_id)
+                t_tr = TRACE.now() if TRACE.enabled else 0.0
                 t0 = time.monotonic()
                 grads, aux = self.step_fn(params, next(self.batches))
                 grads = _block(grads)
                 compute = time.monotonic() - t0
                 if self.speed_factor > 1.0:
+                    # The sleep IS the emulated (slower-device) compute,
+                    # so the compute_step span includes it.
                     time.sleep(compute * (self.speed_factor - 1.0))
+                if TRACE.enabled:
+                    TRACE.span("compute_step", t_tr,
+                               worker=self.worker_id, clock=it)
                 if self.loss_from_aux is not None:
                     self.server.record_loss(it, self.loss_from_aux(aux))
                 push(self.worker_id, grads)

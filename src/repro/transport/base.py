@@ -25,7 +25,8 @@ frames numpy bytes; only the jitted step itself touches jax.
 from __future__ import annotations
 
 import abc
-from typing import Any, Optional, Tuple
+import json
+from typing import Any, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -42,6 +43,7 @@ from repro.wireformat import (
     MSG_PULL_DELTA,
     MSG_PUSH,
     MSG_STOP,
+    MSG_TRACE,
     Frame,
     FrameError,
     encode_frame,
@@ -154,6 +156,17 @@ class PSTransportClient:
     def record_loss(self, step: int, loss: float) -> None:
         self._request(Frame(kind=MSG_LOSS, worker=self.worker_id,
                             clock=int(step), aux=float(loss)))
+
+    def send_trace(self, events: Sequence[dict]) -> None:
+        """Flush a drained ``repro.obs`` event batch to the server-side
+        collector (no-op reply; dropped silently by endpoints without
+        one)."""
+        if not events:
+            return
+        blob = json.dumps(list(events),
+                          separators=(",", ":")).encode("utf-8")
+        self._request(Frame(kind=MSG_TRACE, worker=self.worker_id,
+                            blob=blob))
 
     def echo(self, arr, compress: str = "none") -> np.ndarray:
         """Payload round-trip diagnostic (health checks + codec tests)."""

@@ -17,6 +17,7 @@ splits a full wire buffer across such endpoints.
 
 from __future__ import annotations
 
+import json
 import threading
 from typing import Dict, Optional, Sequence
 
@@ -39,6 +40,7 @@ from repro.wireformat import (
     MSG_PULL_DELTA,
     MSG_PUSH,
     MSG_STOP,
+    MSG_TRACE,
     decode_frame,
     encode_frame,
 )
@@ -52,7 +54,8 @@ class PSServerEndpoint:
     server's ``push_packed_shard`` / ``pull_packed_shard``.
     """
 
-    def __init__(self, server, *, shards: Optional[Sequence[int]] = None):
+    def __init__(self, server, *, shards: Optional[Sequence[int]] = None,
+                 collector=None):
         # Any ParameterServerProtocol implementation works — per-shard
         # calls included (single-shard servers answer shard 0 via the
         # protocol's default impls), so no concrete-type checks here.
@@ -62,6 +65,9 @@ class PSServerEndpoint:
                 f"'packed'/'fused'), got apply_mode="
                 f"{getattr(server, 'apply_mode', None)!r}")
         self.server = server
+        #: ``repro.obs.TraceCollector`` to merge MSG_TRACE flushes into;
+        #: without one the frames are acknowledged and dropped.
+        self.collector = collector
         self.shards = None if shards is None else frozenset(shards)
         if self.shards is not None:
             known = range(getattr(server, "n_shards", 1))
@@ -152,6 +158,16 @@ class PSServerEndpoint:
                          clock=server.version)
         if kind == MSG_BYE:
             server.remove_worker(frame.worker)
+            return Frame(kind=MSG_OK, worker=frame.worker,
+                         clock=server.version)
+        if kind == MSG_TRACE:
+            if self.collector is not None and frame.blob:
+                try:
+                    events = json.loads(frame.blob)
+                except json.JSONDecodeError:
+                    events = None
+                if isinstance(events, list):
+                    self.collector.ingest(f"w{frame.worker}", events)
             return Frame(kind=MSG_OK, worker=frame.worker,
                          clock=server.version)
         # MSG_STOP is a server-side REPLY kind only: accepting it as a

@@ -31,6 +31,7 @@ from typing import Iterable, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.obs.trace import TRACE
 from repro.perfcount import TRANSPORT, WIRE
 
 #: Lane width of the packed wire buffer — the Pallas tile's last dim.
@@ -103,15 +104,18 @@ MSG_ERR = 8     # error reply; body is a utf-8 message
 MSG_ECHO = 9    # payload round-trip diagnostic (health checks + tests)
 MSG_PULL_DELTA = 10  # request: body = client's per-shard version vector
 MSG_DELTA = 11  # reply: advanced shards' regions + fresh version vector
+MSG_TRACE = 12  # worker ring-buffer flush: body = utf-8 JSON event list
 
 _KINDS = frozenset((MSG_HELLO, MSG_PULL, MSG_PUSH, MSG_LOSS, MSG_BYE,
                     MSG_STOP, MSG_OK, MSG_ERR, MSG_ECHO,
-                    MSG_PULL_DELTA, MSG_DELTA))
+                    MSG_PULL_DELTA, MSG_DELTA, MSG_TRACE))
 
 #: Kinds whose body is NOT one (rows, 512) buffer: MSG_ERR carries a
 #: utf-8 message, MSG_PULL_DELTA an int64 version vector, MSG_DELTA the
-#: structured multi-region delta body (see ``_encode_delta_body``).
-_STRUCTURED_KINDS = frozenset((MSG_ERR, MSG_PULL_DELTA, MSG_DELTA))
+#: structured multi-region delta body (see ``_encode_delta_body``),
+#: MSG_TRACE a JSON-encoded drained event batch (``repro.obs``).
+_STRUCTURED_KINDS = frozenset((MSG_ERR, MSG_PULL_DELTA, MSG_DELTA,
+                               MSG_TRACE))
 
 # -- flags --------------------------------------------------------------
 #: Payload is int8-quantized; dequant scale travels in ``aux`` and the
@@ -167,6 +171,9 @@ class Frame:
     #: DELTA reply: [(shard_id, (rows, 512) region), ...] for the
     #: shards that advanced past the request's version vector.
     delta: Optional[Sequence[Tuple[int, np.ndarray]]] = None
+    #: TRACE flush: raw utf-8 JSON bytes of a drained event batch (kept
+    #: opaque here — the obs collector parses it, the codec just moves it).
+    blob: Optional[bytes] = None
 
 
 def _quantize_int8(arr: np.ndarray) -> Tuple[np.ndarray, float]:
@@ -226,6 +233,9 @@ def encode_frame(frame: Frame, compress: str = "none") -> bytes:
         rows, dtype_code = 0, _DTYPE_CODES["float32"]
     elif frame.kind == MSG_DELTA:
         body, rows, dtype_code = _encode_delta_body(frame)
+    elif frame.kind == MSG_TRACE:
+        body = frame.blob or b""
+        rows, dtype_code = 0, _DTYPE_CODES["int8"]
     elif frame.payload is None:
         body = b""
         rows, dtype_code = 0, _DTYPE_CODES["float32"]
@@ -253,6 +263,12 @@ def encode_frame(frame: Frame, compress: str = "none") -> bytes:
                          frame.clock, rows, len(body), aux)
     TRANSPORT.frames_tx += 1
     TRANSPORT.bytes_tx += HEADER_SIZE + len(body)
+    if TRACE.enabled and frame.kind != MSG_TRACE:
+        # TRACE flushes are not themselves traced — a flush that
+        # recorded an event per flush would feed its own ring forever.
+        TRACE.instant("frame_tx", worker=frame.worker, shard=frame.shard,
+                      args={"kind": frame.kind,
+                            "bytes": HEADER_SIZE + len(body)})
     return header + body
 
 
@@ -319,8 +335,15 @@ def decode_body(frame: Frame, body) -> Frame:
     """
     TRANSPORT.frames_rx += 1
     TRANSPORT.bytes_rx += HEADER_SIZE + len(body)
+    if TRACE.enabled and frame.kind != MSG_TRACE:
+        TRACE.instant("frame_rx", worker=frame.worker, shard=frame.shard,
+                      args={"kind": frame.kind,
+                            "bytes": HEADER_SIZE + len(body)})
     if frame.kind == MSG_ERR:
         frame.error = bytes(body).decode("utf-8", "replace")
+        return frame
+    if frame.kind == MSG_TRACE:
+        frame.blob = bytes(body)
         return frame
     if frame.kind == MSG_PULL_DELTA:
         frame.versions = tuple(
