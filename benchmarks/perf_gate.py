@@ -130,6 +130,52 @@ def check_obs(current: dict, previous: dict | None) -> list:
     return failures
 
 
+def check_recovery(current: dict, previous: dict | None) -> list:
+    """Gate over ``BENCH_recovery.json`` (``benchmarks/recovery.py``).
+
+    Absolute: the per-shard snapshot pause is bounded (no global
+    stop-the-world hides in the capture path), the on-disk restore
+    round-trips (``resume.ok``), and every client reconnected in one
+    re-HELLO against an idle rebound listener.  Trajectory: the pause
+    and restore time may not blow up versus the previous artifact
+    (generous bounds — shared runners are noisy, but a 5x jump means
+    the capture started holding locks across real work).
+    """
+    failures = []
+    snap = current.get("snapshot", {})
+    pause = snap.get("pause_per_shard_us_max")
+    if pause is None:
+        failures.append("recovery report carries no "
+                        "snapshot.pause_per_shard_us_max")
+    elif pause > 50_000.0:
+        failures.append(
+            f"snapshot pause contract broken: a shard's lock was held "
+            f"{pause:.0f}us for capture (bound 50ms — the per-shard "
+            "pause must stay bounded; is capture doing work under the "
+            "lock?)")
+    if not current.get("resume", {}).get("ok", False):
+        failures.append("resume contract broken: restore_latest did not "
+                        "round-trip the snapshotted server version")
+    mean_rc = current.get("reconnect", {}).get("mean_reconnects")
+    if mean_rc is not None and mean_rc > 1.0 + EPS:
+        failures.append(
+            f"reconnect contract broken: {mean_rc:.2f} reconnects/client "
+            "against an idle rebound listener (expected exactly 1)")
+    if previous is not None:
+        for path_, label in ((("snapshot", "pause_per_shard_us_max"),
+                              "per-shard snapshot pause (us)"),
+                             (("resume", "restore_ms"),
+                              "restore wall time (ms)")):
+            sec, key = path_
+            now = current.get(sec, {}).get(key)
+            before = previous.get(sec, {}).get(key)
+            if now is not None and before is not None \
+                    and now > max(before * 5.0, before + 1000.0):
+                failures.append(
+                    f"{label} regressed {before:.1f} -> {now:.1f}")
+    return failures
+
+
 def _load(path: str | None, label: str) -> dict | None:
     if not path:
         return None
@@ -144,7 +190,9 @@ def _load(path: str | None, label: str) -> dict | None:
 
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("current", help="fresh BENCH_push_pull.json")
+    ap.add_argument("current", nargs="?", default=None,
+                    help="fresh BENCH_push_pull.json (optional when only "
+                         "--recovery is gated, as in the chaos CI job)")
     ap.add_argument("--previous", default=None,
                     help="prior run's artifact (omit on first run)")
     ap.add_argument("--obs", default=None,
@@ -152,28 +200,49 @@ def main() -> int:
                          "overhead gate)")
     ap.add_argument("--obs-previous", default=None,
                     help="prior run's BENCH_obs.json artifact")
+    ap.add_argument("--recovery", default=None,
+                    help="fresh BENCH_recovery.json (adds the fault-"
+                         "tolerance recovery gate)")
+    ap.add_argument("--recovery-previous", default=None,
+                    help="prior run's BENCH_recovery.json artifact")
     args = ap.parse_args()
+    if args.current is None and args.recovery is None:
+        ap.error("nothing to gate: pass BENCH_push_pull.json and/or "
+                 "--recovery")
 
-    with open(args.current) as f:
-        current = json.load(f)
-    previous = _load(args.previous, "previous")
+    failures = []
+    previous = None
+    if args.current is not None:
+        with open(args.current) as f:
+            current = json.load(f)
+        previous = _load(args.previous, "previous")
 
-    rows = _rows_by_key(current)
-    prev_rows = _rows_by_key(previous) if previous else {}
-    print(f"{'path':>18} {'S':>3}  gated metrics")
-    for (path, shards), row in sorted(rows.items()):
-        marks = []
-        for metric in GATED_METRICS:
-            now = row.get(metric)
-            if now is None:
-                continue
-            before = prev_rows.get((path, shards), {}).get(metric)
-            marks.append(f"{metric}={now:.2f}"
-                         + (f" (was {before:.2f})" if before is not None
-                            else ""))
-        print(f"{path:>18} {shards:>3}  {' '.join(marks)}")
+        rows = _rows_by_key(current)
+        prev_rows = _rows_by_key(previous) if previous else {}
+        print(f"{'path':>18} {'S':>3}  gated metrics")
+        for (path, shards), row in sorted(rows.items()):
+            marks = []
+            for metric in GATED_METRICS:
+                now = row.get(metric)
+                if now is None:
+                    continue
+                before = prev_rows.get((path, shards), {}).get(metric)
+                marks.append(f"{metric}={now:.2f}"
+                             + (f" (was {before:.2f})"
+                                if before is not None else ""))
+            print(f"{path:>18} {shards:>3}  {' '.join(marks)}")
+        failures += check(current, previous)
 
-    failures = check(current, previous)
+    recovery = _load(args.recovery, "recovery")
+    if recovery is not None:
+        recovery_prev = _load(args.recovery_previous, "recovery-previous")
+        snap = recovery.get("snapshot", {})
+        print(f"\nrecovery: pause_max="
+              f"{snap.get('pause_per_shard_us_max', 0):.0f}us "
+              f"restore={recovery.get('resume', {}).get('restore_ms', 0):.1f}ms "
+              f"reconnects/client="
+              f"{recovery.get('reconnect', {}).get('mean_reconnects')}")
+        failures += check_recovery(recovery, recovery_prev)
     obs = _load(args.obs, "obs")
     if obs is not None:
         obs_prev = _load(args.obs_previous, "obs-previous")

@@ -34,6 +34,7 @@ from repro.api.spec import (
     APPLY_MODES,
     CUSTOM_ARCH,
     DataSpec,
+    FtSpec,
     ModelSpec,
     ObsSpec,
     OptimizerSpec,
@@ -56,6 +57,7 @@ __all__ = [
     "APPLY_MODES",
     "CUSTOM_ARCH",
     "DataSpec",
+    "FtSpec",
     "ModelSpec",
     "ObsSpec",
     "OptimizerSpec",

@@ -228,6 +228,45 @@ class _ObsRig:
         self.summary = summarize(events)
 
 
+class _FtRig:
+    """Per-session lifecycle for ``spec.ft`` on the PS engines: the
+    checkpoint manager, the optional resume-before-serve, and the
+    periodic ``ServerSnapshotter``.  All ``repro.ft`` imports are local
+    so specs without fault tolerance never pay for the package."""
+
+    def __init__(self, ft, server):
+        from repro.checkpoint.manager import CheckpointManager
+        from repro.ft.snapshot import ServerSnapshotter, restore_latest
+        self.manager = CheckpointManager(ft.dir, keep=ft.keep)
+        # Resume BEFORE anything serves: endpoint pull caches are keyed
+        # by version, and a restore moves versions backwards.
+        self.resumed_step = (restore_latest(server, self.manager)
+                             if ft.resume else None)
+        self.snapshotter = (
+            ServerSnapshotter(server, self.manager,
+                              ft.snapshot_every_s).start()
+            if ft.snapshot_every_s > 0 else None)
+        self._done = False
+
+    def finish(self) -> None:
+        """Final snapshot + writer flush; surfaces any async-save
+        failure the snapshotter thread parked.  Idempotent."""
+        if self._done:
+            return
+        self._done = True
+        if self.snapshotter is not None:
+            self.snapshotter.stop(final_save=True)
+        self.manager.wait()
+
+    def metrics(self) -> Dict[str, Any]:
+        return {
+            "resumed_step": self.resumed_step,
+            "snapshots": (self.snapshotter.snapshots
+                          if self.snapshotter else 0),
+            "latest_step": self.manager.latest_step(),
+        }
+
+
 def _obs_snapshot_fn(server):
     """Sampler callable for the PS engines: counters + the policy's
     current effective staleness bound (the DSSP threshold timeline)."""
@@ -450,9 +489,12 @@ class ThreadedPSSession(TrainingSession):
 
     server = None
     obs_rig = None
+    ft_rig = None
 
     def _start(self) -> None:
         self.server = build_server(self.spec, self._ov.get("params"))
+        if self.spec.ft.snapshots:
+            self.ft_rig = _FtRig(self.spec.ft, self.server)
         if self.spec.obs.trace:
             self.obs_rig = _ObsRig(self.spec.obs)
             self.obs_rig.start(_obs_snapshot_fn(self.server))
@@ -564,9 +606,14 @@ class ThreadedPSSession(TrainingSession):
 
     # -- reporting ----------------------------------------------------
     def metrics(self) -> Dict[str, Any]:
-        return _ps_metrics(self.engine, self.server, self.obs_rig)
+        out = _ps_metrics(self.engine, self.server, self.obs_rig)
+        if self.ft_rig is not None:
+            out["ft"] = self.ft_rig.metrics()
+        return out
 
     def _close(self) -> None:
+        if self.ft_rig is not None:
+            self.ft_rig.finish()
         if self.server is not None:
             self.server.shutdown()
         if self.obs_rig is not None:
@@ -591,11 +638,14 @@ class TransportPSSession(TrainingSession):
     transport = None
     results = None
     obs_rig = None
+    ft_rig = None
 
     def _start(self) -> None:
         from repro.transport import PSServerEndpoint, make_transport
         spec = self.spec
         self.server = build_server(spec, self._ov.get("params"))
+        if spec.ft.snapshots:
+            self.ft_rig = _FtRig(spec.ft, self.server)
         if spec.obs.trace:
             self.obs_rig = _ObsRig(spec.obs)
         self.endpoint = PSServerEndpoint(
@@ -666,9 +716,13 @@ class TransportPSSession(TrainingSession):
         if self.results is not None:
             out["iterations_done"] = sum(r.iterations_done
                                          for r in self.results)
+        if self.ft_rig is not None:
+            out["ft"] = self.ft_rig.metrics()
         return out
 
     def _close(self) -> None:
+        if self.ft_rig is not None:
+            self.ft_rig.finish()
         if self.server is not None:
             self.server.shutdown()
         if self.transport is not None:

@@ -291,6 +291,85 @@ class ObsSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class FtSpec:
+    """Fault tolerance (``repro.ft``): server snapshots, failover
+    resume, worker reconnect, and deterministic chaos injection.
+
+    Snapshots (``snapshot_every_s > 0``) periodically checkpoint the
+    server's packed per-shard buffers + momentum + version vector +
+    sync-policy state into ``dir`` (keep-K, atomic); ``resume=True``
+    restores the latest snapshot before serving.  ``reconnect_tries``
+    arms the worker-side failover loop: on a dead server a worker
+    backs off (``reconnect_base_s`` doubling up to ``reconnect_max_s``,
+    jittered) and re-HELLOs up to that many times.  The ``fault_*``
+    fields are the ``FaultPlan`` (kill the server at aggregate push
+    round R; worker W SIGKILLs itself at its local iteration R';
+    drop/delay frames of a wireformat kind) — ``-1``/``0.0`` sentinels
+    mean "never", and the seed makes injected chaos reproducible.
+    """
+
+    snapshot_every_s: float = 0.0  # 0 disables periodic snapshots
+    keep: int = 3                  # keep-K snapshot GC
+    dir: str = ""                  # checkpoint directory
+    resume: bool = False           # restore latest snapshot on start
+    reconnect_tries: int = 0       # 0 disables worker reconnect
+    reconnect_base_s: float = 0.1
+    reconnect_max_s: float = 2.0
+    fault_kill_server_round: int = -1
+    fault_kill_worker: int = -1
+    fault_kill_worker_round: int = -1
+    fault_drop_kind: int = 0
+    fault_drop_prob: float = 0.0
+    fault_delay_kind: int = 0
+    fault_delay_ms: float = 0.0
+    fault_seed: int = 0
+
+    def __post_init__(self):
+        _require(self.snapshot_every_s >= 0.0,
+                 "ft.snapshot_every_s is an interval in seconds (>= 0; "
+                 "0 disables snapshots)")
+        _require(self.keep >= 1, "ft.keep must keep at least one "
+                 "snapshot (>= 1)")
+        _require(self.reconnect_tries >= 0,
+                 "ft.reconnect_tries must be >= 0 (0 disables worker "
+                 "reconnect)")
+        _require(self.reconnect_base_s > 0 and self.reconnect_max_s > 0,
+                 "ft reconnect backoff delays must be positive")
+        _require(0.0 <= self.fault_drop_prob <= 1.0,
+                 "ft.fault_drop_prob is a probability in [0, 1]")
+        _require(self.fault_delay_ms >= 0.0,
+                 "ft.fault_delay_ms is a latency in milliseconds (>= 0)")
+        if self.snapshot_every_s > 0 or self.resume:
+            _require(bool(self.dir),
+                     "ft snapshots/resume need ft.dir (the checkpoint "
+                     "directory)")
+
+    @property
+    def snapshots(self) -> bool:
+        return self.snapshot_every_s > 0 or self.resume
+
+    @property
+    def faults(self) -> bool:
+        return (self.fault_kill_server_round >= 0
+                or (self.fault_kill_worker >= 0
+                    and self.fault_kill_worker_round >= 0)
+                or self.fault_drop_prob > 0.0 or self.fault_delay_ms > 0.0)
+
+    def fault_plan(self):
+        """The picklable ``repro.ft.FaultPlan`` these fields describe."""
+        from repro.ft.faults import FaultPlan
+        return FaultPlan(
+            kill_server_round=self.fault_kill_server_round,
+            kill_worker=self.fault_kill_worker,
+            kill_worker_round=self.fault_kill_worker_round,
+            drop_kind=self.fault_drop_kind,
+            drop_prob=self.fault_drop_prob,
+            delay_kind=self.fault_delay_kind,
+            delay_ms=self.fault_delay_ms,
+            seed=self.fault_seed)
+
+
+@dataclasses.dataclass(frozen=True)
 class RunSpec:
     """The whole run, validated as a unit.
 
@@ -308,7 +387,12 @@ class RunSpec:
       sharded server);
     * ``wire.delta_pull`` (version-delta pulls) and ``ps.coalesce > 1``
       (batched server apply) ride the packed wire only — over the tree
-      wire both raise.
+      wire both raise;
+    * ``ft`` snapshots capture the packed-resident store, so they need
+      a parameter server with ``ps.apply='fused'``/``'packed'``; the
+      ``FaultPlan`` kills/drops cross a process boundary, so faults and
+      worker reconnect need a process transport (and killing/restarting
+      the server needs tcp — shmem segments die with their owner).
     """
 
     model: ModelSpec = dataclasses.field(default_factory=ModelSpec)
@@ -321,9 +405,34 @@ class RunSpec:
     transport: TransportSpec = dataclasses.field(
         default_factory=TransportSpec)
     obs: ObsSpec = dataclasses.field(default_factory=ObsSpec)
+    ft: FtSpec = dataclasses.field(default_factory=FtSpec)
 
     def __post_init__(self):
         ps, wire, tp, sync = self.ps, self.wire, self.transport, self.sync
+        ft = self.ft
+        if ft.snapshots:
+            _require(ps.kind != "none",
+                     "ft snapshots checkpoint a parameter server's "
+                     "packed store; the SPMD pipeline (ps.kind='none') "
+                     "has its own checkpointing — set ps.kind='mono'/"
+                     "'sharded'")
+            _require(ps.apply in ("fused", "packed"),
+                     "ft snapshots capture the packed-resident store; "
+                     "ps.apply='tree' keeps no packed buffers to "
+                     "snapshot — set ps.apply='fused' (sharded) or "
+                     "'packed' (mono)")
+        if ft.faults:
+            _require(tp.kind != "inproc",
+                     "the FaultPlan kills processes and drops frames; "
+                     "over transport.kind='inproc' there is no process "
+                     "boundary to fault — set transport.kind='tcp' or "
+                     "'shmem'")
+        if ft.fault_kill_server_round >= 0 or ft.reconnect_tries > 0:
+            _require(tp.kind == "tcp",
+                     "killing/restarting the server (and reconnecting "
+                     "to it) needs transport.kind='tcp': shmem segments "
+                     "die with the server process, so there is nothing "
+                     "left to reconnect to")
         if ps.kind == "none":
             _require(sync.mode != "asp",
                      "sync.mode='asp' is not trainable on the SPMD "

@@ -7,9 +7,13 @@ Layout:
 
 Guarantees:
   * atomicity — a crash mid-save never corrupts the latest checkpoint
-    (readers only see fully-renamed directories),
+    (readers only see fully-renamed directories); leftover ``.tmp_``
+    directories from a crash are garbage-collected on construction and
+    ``steps()``/``latest_step`` skip torn snapshots,
   * async — ``save`` returns immediately; the writer thread serializes
-    host-transferred arrays so the train loop never blocks on disk,
+    host-transferred arrays so the train loop never blocks on disk; a
+    failed async write re-raises on the NEXT ``save()``/``wait()``
+    (synchronous saves raise at the call site),
   * keep-K garbage collection,
   * restart — ``latest_step`` + ``restore`` rebuild (params, opt_state,
     DSSP pipeline state, data cursor, controller state) exactly.
@@ -42,6 +46,7 @@ class CheckpointManager:
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
         os.makedirs(directory, exist_ok=True)
+        self._gc_tmp()
 
     # ---------------------------------------------------------------- save
     def save(self, step: int, tree: Any,
@@ -52,10 +57,13 @@ class CheckpointManager:
         self.wait()
         if self.async_save:
             self._thread = threading.Thread(
-                target=self._write, args=(step, host, extras or {}),
+                target=self._write_async, args=(step, host, extras or {}),
                 daemon=True)
             self._thread.start()
         else:
+            # Sync saves fail AT THE CALL SITE — routing them through
+            # self._error would swallow the exception until a later
+            # wait() a synchronous caller has no reason to make.
             self._write(step, host, extras or {})
 
     def wait(self) -> None:
@@ -67,38 +75,51 @@ class CheckpointManager:
             err, self._error = self._error, None
             raise err
 
-    def _write(self, step: int, host, extras: Dict[str, Any]) -> None:
+    def _write_async(self, step: int, host,
+                     extras: Dict[str, Any]) -> None:
+        """Writer-thread wrapper: park the failure for the next
+        ``save()``/``wait()`` to re-raise on the caller's thread."""
         try:
-            final = self._step_dir(step)
-            tmp = final + ".tmp_"
-            if os.path.exists(tmp):
-                shutil.rmtree(tmp)
-            os.makedirs(tmp)
-            manifest = {"step": step, "extras": extras, "leaves": []}
-            for i, (name, arr) in enumerate(host):
-                fname = f"arr_{i:05d}.npy"
-                np.save(os.path.join(tmp, fname), arr)
-                manifest["leaves"].append(
-                    {"name": name, "file": fname,
-                     "shape": list(arr.shape), "dtype": str(arr.dtype)})
-            with open(os.path.join(tmp, "manifest.json"), "w") as f:
-                json.dump(manifest, f)
-            if os.path.exists(final):
-                shutil.rmtree(final)
-            os.rename(tmp, final)          # the atomic commit point
-            self._gc()
-        except BaseException as e:  # surfaced on next wait()/save()
+            self._write(step, host, extras)
+        except BaseException as e:
             self._error = e
+
+    def _write(self, step: int, host, extras: Dict[str, Any]) -> None:
+        final = self._step_dir(step)
+        tmp = final + ".tmp_"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        manifest = {"step": step, "extras": extras, "leaves": []}
+        for i, (name, arr) in enumerate(host):
+            fname = f"arr_{i:05d}.npy"
+            np.save(os.path.join(tmp, fname), arr)
+            manifest["leaves"].append(
+                {"name": name, "file": fname,
+                 "shape": list(arr.shape), "dtype": str(arr.dtype)})
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)          # the atomic commit point
+        self._gc()
 
     # -------------------------------------------------------------- restore
     def steps(self) -> List[int]:
         out = []
         for d in os.listdir(self.directory):
-            if d.startswith("step_") and not d.endswith(".tmp_"):
-                try:
-                    out.append(int(d[5:]))
-                except ValueError:
-                    pass
+            if not d.startswith("step_") or d.endswith(".tmp_"):
+                continue
+            # The rename commit point makes a manifest-less step_ dir
+            # impossible in normal operation, but a restore must never
+            # pick a torn snapshot some foreign writer left behind.
+            if not os.path.exists(os.path.join(self.directory, d,
+                                               "manifest.json")):
+                continue
+            try:
+                out.append(int(d[5:]))
+            except ValueError:
+                pass
         return sorted(out)
 
     def latest_step(self) -> Optional[int]:
@@ -139,6 +160,15 @@ class CheckpointManager:
         steps = self.steps()
         for s in steps[:-self.keep] if self.keep > 0 else []:
             shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    def _gc_tmp(self) -> None:
+        """Drop ``.tmp_`` directories a crash-mid-save left behind: they
+        are torn by construction (the rename never happened) and must
+        never shadow or outlive real snapshots."""
+        for d in os.listdir(self.directory):
+            if d.startswith("step_") and d.endswith(".tmp_"):
+                shutil.rmtree(os.path.join(self.directory, d),
+                              ignore_errors=True)
 
     def _step_dir(self, step: int) -> str:
         return os.path.join(self.directory, f"step_{step:09d}")

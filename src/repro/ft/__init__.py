@@ -1,0 +1,48 @@
+"""Fault tolerance: snapshots, failover, reconnect, chaos injection.
+
+Submodules (see ``src/repro/ft/README.md`` for the protocol):
+
+  * ``backoff``     — shared bounded-exponential-backoff retry helper
+  * ``snapshot``    — server state capture/restore + ``ServerSnapshotter``
+  * ``faults``      — deterministic ``FaultPlan`` chaos injection
+  * ``server_proc`` — restartable out-of-process server host
+
+Only ``backoff`` is imported eagerly (it is stdlib-only and the
+transport layer depends on it); the rest load lazily so importing
+``repro.transport`` never drags jax-adjacent snapshot code into a
+spawned worker that does not need it.
+"""
+
+from __future__ import annotations
+
+from repro.ft.backoff import (  # noqa: F401
+    BackoffPolicy,
+    CONNECT_POLICY,
+    RECONNECT_POLICY,
+    retry,
+)
+
+_LAZY = {
+    "snapshot_server": "repro.ft.snapshot",
+    "restore_server": "repro.ft.snapshot",
+    "restore_latest": "repro.ft.snapshot",
+    "ServerSnapshotter": "repro.ft.snapshot",
+    "SNAPSHOT_VERSION": "repro.ft.snapshot",
+    "FaultPlan": "repro.ft.faults",
+    "FaultyChannel": "repro.ft.faults",
+    "wrap_channel": "repro.ft.faults",
+    "ServerProcess": "repro.ft.server_proc",
+}
+
+
+def __getattr__(name: str):
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(f"module 'repro.ft' has no attribute {name!r}")
+    import importlib
+
+    return getattr(importlib.import_module(mod), name)
+
+
+__all__ = ["BackoffPolicy", "CONNECT_POLICY", "RECONNECT_POLICY",
+           "retry", *_LAZY]

@@ -53,6 +53,11 @@ class WorkerTask:
     trace: bool = False       # arm the worker's repro.obs ring buffer
     trace_spill: str = ""     # dir for the per-worker JSONL spill file
     trace_flush_every: int = 32  # iterations between TRACE-frame flushes
+    # -- fault tolerance (repro.ft) ---------------------------------
+    reconnect_tries: int = 0  # per-outage reconnect budget (0 = die)
+    reconnect_base_s: float = 0.1
+    reconnect_max_s: float = 2.0
+    fault_plan: Optional[Dict[str, Any]] = None  # FaultPlan.to_dict()
 
     def to_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
@@ -84,7 +89,12 @@ class WorkerTask:
                    trace=bool(getattr(spec, "obs", None)
                               and spec.obs.trace),
                    trace_spill=trace_spill,
-                   trace_flush_every=trace_flush_every)
+                   trace_flush_every=trace_flush_every,
+                   reconnect_tries=spec.ft.reconnect_tries,
+                   reconnect_base_s=spec.ft.reconnect_base_s,
+                   reconnect_max_s=spec.ft.reconnect_max_s,
+                   fault_plan=(spec.ft.fault_plan().to_dict()
+                               if spec.ft.faults else None))
 
 
 @dataclasses.dataclass
@@ -133,6 +143,17 @@ def _worker_main(task: Dict[str, Any], address, worker_id: int,
                 loss_fn, has_aux=True)(p, batch)
             return wire_g_prev.at[:].set(plan.pack(grads)), loss
 
+        from repro.ft.backoff import BackoffPolicy
+        from repro.ft.faults import FaultPlan, kill_self, wrap_channel
+        from repro.transport.base import TransportClosed
+
+        fault_plan = FaultPlan.from_dict(task.get("fault_plan"))
+        reconnect_tries = int(task.get("reconnect_tries", 0))
+        reconnect_policy = (BackoffPolicy(
+            base_s=task.get("reconnect_base_s", 0.1), factor=2.0,
+            max_s=task.get("reconnect_max_s", 2.0),
+            max_tries=reconnect_tries) if reconnect_tries > 0 else None)
+
         tracer = spill_fh = None
         if task.get("trace"):
             from repro.obs.trace import TRACE as tracer
@@ -148,6 +169,14 @@ def _worker_main(task: Dict[str, Any], address, worker_id: int,
                                 "a", encoding="utf-8")
 
         client = connect(address, worker_id, compress=task["compress"])
+        if fault_plan.wants_channel:
+            # Drop/delay faults wrap the live channel AND the factory,
+            # so a post-reconnect channel stays faulty too.
+            client.channel = wrap_channel(client.channel, fault_plan, worker_id)
+            inner_factory = client.channel_factory
+            if inner_factory is not None:
+                client.channel_factory = (
+                    lambda: wrap_channel(inner_factory(), fault_plan, worker_id))
 
         def flush_trace() -> None:
             if tracer is None:
@@ -182,47 +211,73 @@ def _worker_main(task: Dict[str, Any], address, worker_id: int,
         versions = (-1,) * task["n_shards"]
         row_start = layout.shard_row_start
         try:
-            for it in range(task["n_iterations"]):
-                # copy=True (the default): on CPU, jnp.asarray may ALIAS
-                # host memory instead of copying, and a device buffer
-                # aliasing the shmem slot would outlive the RPC lifetime
-                # contract (and pin the mapping at close).
-                if delta_pull:
-                    d = client.pull_delta(versions, copy=False)
-                    if d is None:
-                        break  # server stopped
-                    for j, region in zip(d.shards, d.regions):
-                        wire_host[row_start[j]:
-                                  row_start[j] + region.shape[0]] = region
-                    versions = d.versions
-                    # jnp.array COPIES (asarray may alias on CPU, and
-                    # the resident buffer mutates in place next pull).
-                    wire_p = jnp.array(wire_host)
-                else:
-                    wire_np = client.pull_packed()
-                    if wire_np is None:
-                        break  # server stopped
-                    wire_p = jnp.asarray(wire_np)
-                batch = {k: jnp.asarray(v) for k, v in next(stream).items()}
-                t_tr = tracer.now() if tracer is not None else 0.0
-                t0 = time.monotonic()
-                wire_g, loss = packed_step(wire_p, wire_g, batch)
-                loss = float(jax.block_until_ready(loss))
-                compute = time.monotonic() - t0
-                if slowdown > 1.0:
-                    # The sleep IS the emulated slower device, so the
-                    # compute_step span includes it.
-                    time.sleep(compute * (slowdown - 1.0))
-                if tracer is not None:
-                    tracer.span("compute_step", t_tr, worker=worker_id,
-                                clock=it, args={"loss": loss})
-                client.record_loss(it, loss)
-                if not client.push_packed(np.asarray(wire_g), clock=it):
-                    done += 1
-                    break  # released with a STOP: training is over
+            it = 0
+            while it < task["n_iterations"]:
+                if fault_plan.worker_kill_due(worker_id, it):
+                    flush_trace()
+                    kill_self()  # pragma: no cover - process dies here
+                try:
+                    # copy=True (the default): on CPU, jnp.asarray may
+                    # ALIAS host memory instead of copying, and a device
+                    # buffer aliasing the shmem slot would outlive the
+                    # RPC lifetime contract (and pin the mapping at
+                    # close).
+                    if delta_pull:
+                        d = client.pull_delta(versions, copy=False)
+                        if d is None:
+                            break  # server stopped
+                        for j, region in zip(d.shards, d.regions):
+                            wire_host[row_start[j]:
+                                      row_start[j]
+                                      + region.shape[0]] = region
+                        versions = d.versions
+                        # jnp.array COPIES (asarray may alias on CPU,
+                        # and the resident buffer mutates in place next
+                        # pull).
+                        wire_p = jnp.array(wire_host)
+                    else:
+                        wire_np = client.pull_packed()
+                        if wire_np is None:
+                            break  # server stopped
+                        wire_p = jnp.asarray(wire_np)
+                    batch = {k: jnp.asarray(v)
+                             for k, v in next(stream).items()}
+                    t_tr = tracer.now() if tracer is not None else 0.0
+                    t0 = time.monotonic()
+                    wire_g, loss = packed_step(wire_p, wire_g, batch)
+                    loss = float(jax.block_until_ready(loss))
+                    compute = time.monotonic() - t0
+                    if slowdown > 1.0:
+                        # The sleep IS the emulated slower device, so
+                        # the compute_step span includes it.
+                        time.sleep(compute * (slowdown - 1.0))
+                    if tracer is not None:
+                        tracer.span("compute_step", t_tr,
+                                    worker=worker_id, clock=it,
+                                    args={"loss": loss})
+                    client.record_loss(it, loss)
+                    if not client.push_packed(np.asarray(wire_g),
+                                              clock=it):
+                        done += 1
+                        break  # released with a STOP: training is over
+                except (TransportClosed, OSError):
+                    # The server died under us.  With a reconnect
+                    # budget: back off, rebuild the channel, re-HELLO
+                    # (idempotent — the seat is re-acquired, never
+                    # duplicated), and RETRY this same iteration.  The
+                    # kept `versions` vector is now ahead of the
+                    # restored server's, so the next pull_delta
+                    # dominance check forces a full resync; a push that
+                    # died mid-gate is re-sent (duplicate-apply is
+                    # ordinary async-SGD noise, loss is never lost
+                    # silently).
+                    if reconnect_policy is None:
+                        raise
+                    client.reconnect(reconnect_policy, seed=worker_id)
+                    continue
                 done += 1
-                if (it + 1) % max(1, task.get("trace_flush_every", 32)) \
-                        == 0:
+                it += 1
+                if it % max(1, task.get("trace_flush_every", 32)) == 0:
                     flush_trace()
         finally:
             flush_trace()
@@ -257,22 +312,45 @@ class ProcessWorkerPool:
     def start(self) -> None:
         task = self.task.to_dict()
         for w in range(self.n_workers):
-            p = self._ctx.Process(
-                target=_worker_main,
-                args=(task, self.address, w, self.slowdowns[w],
-                      self._queue),
-                name=f"ps-proc-worker-{w}", daemon=True)
-            p.start()
-            self.procs.append(p)
+            self.procs.append(self._spawn(w, task))
 
-    def join(self, timeout: float = 900.0, *,
-             endpoint=None) -> List[WorkerResult]:
+    def _spawn(self, w: int, task: Dict[str, Any]):
+        p = self._ctx.Process(
+            target=_worker_main,
+            args=(task, self.address, w, self.slowdowns[w], self._queue),
+            name=f"ps-proc-worker-{w}", daemon=True)
+        p.start()
+        return p
+
+    @staticmethod
+    def _respawn_task(task: Dict[str, Any]) -> Dict[str, Any]:
+        """The task a replacement worker runs: identical, minus the
+        self-kill fault (a respawned worker re-killing itself at the
+        same round would churn forever)."""
+        clean = dict(task)
+        fp = dict(clean.get("fault_plan") or {})
+        if fp:
+            fp["kill_worker"] = -1
+            fp["kill_worker_round"] = -1
+            clean["fault_plan"] = fp
+        return clean
+
+    def join(self, timeout: float = 900.0, *, endpoint=None,
+             respawn: int = 0) -> List[WorkerResult]:
         """Join all workers; reap stragglers; surface per-worker results.
 
         ``endpoint`` (a ``PSServerEndpoint``) gets ``on_disconnect`` for
         every abnormal exit — transports without connection semantics
         (shmem) cannot detect a dead peer themselves, and a corpse must
         not keep its seat in the barrier group.
+
+        ``respawn`` is the elastic-fleet budget: up to that many
+        abnormally-dead workers are replaced by fresh processes running
+        the same task (its barrier seat was freed by ``on_disconnect``
+        first, and the replacement's HELLO re-acquires it — exactly
+        once).  The replacement restarts its local loop from iteration
+        0: worker iterations are interchangeable SGD contributions, so
+        elasticity costs repeated work, never corrupted state.
         """
         deadline = time.monotonic() + timeout
         # Poll instead of a blocking per-process join: a worker that
@@ -282,15 +360,24 @@ class ProcessWorkerPool:
         # this by EOF on its own; shmem has no connection, so this loop
         # is the only death detector it gets.
         reported = set()
+        respawn_left = int(respawn)
+        respawn_task = self._respawn_task(self.task.to_dict())
+        self.respawned: List[int] = []
         while time.monotonic() < deadline:
             alive = False
             for w, p in enumerate(self.procs):
                 if p.is_alive():
                     alive = True
-                elif (p.exitcode not in (0, None) and w not in reported
-                        and endpoint is not None):
-                    endpoint.on_disconnect(w)
+                elif p.exitcode not in (0, None) and w not in reported:
+                    if endpoint is not None:
+                        endpoint.on_disconnect(w)
                     reported.add(w)
+                    if respawn_left > 0:
+                        respawn_left -= 1
+                        self.procs[w] = self._spawn(w, respawn_task)
+                        self.respawned.append(w)
+                        reported.discard(w)
+                        alive = True
             if not alive:
                 break
             time.sleep(0.05)

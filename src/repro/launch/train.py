@@ -243,7 +243,9 @@ def spec_from_flags(*, arch: str, smoke: bool = True, sync: str = "dssp",
                     ps_straggler: float = 1.0, ps_coalesce: int = 1,
                     delta_pull: bool = False,
                     transport: str = "inproc",
-                    trace_path: str = ""):
+                    trace_path: str = "",
+                    ckpt_dir: str = "", snapshot_every: float = 5.0,
+                    resume: bool = False):
     """Translate the historical CLI flag surface into a ``RunSpec``.
 
     Keeps the old implication chain (`--transport tcp` implies the
@@ -270,6 +272,11 @@ def spec_from_flags(*, arch: str, smoke: bool = True, sync: str = "dssp",
         ps_wire = "packed"     # both knobs ride the packed wire
     if ps_wire == "packed" and ps_apply == "tree":
         ps_apply = "fused"     # packed pushes fold through the kernel
+    if ckpt_dir and ps_shards >= 1 and ps_apply == "tree":
+        ps_apply = "fused"     # snapshots capture the packed store
+    ft = (api.FtSpec(snapshot_every_s=snapshot_every, dir=ckpt_dir,
+                     resume=resume)
+          if ckpt_dir and ps_shards >= 1 else api.FtSpec())
     if ps_shards >= 1:
         ps = api.ServerSpec(kind="sharded", shards=ps_shards,
                             workers=ps_workers, apply=ps_apply,
@@ -290,7 +297,8 @@ def spec_from_flags(*, arch: str, smoke: bool = True, sync: str = "dssp",
                           compression=compress,
                           delta_pull=delta_pull and ps_shards >= 1),
         transport=api.TransportSpec(kind=transport),
-        obs=api.ObsSpec(trace=bool(trace_path), trace_path=trace_path))
+        obs=api.ObsSpec(trace=bool(trace_path), trace_path=trace_path),
+        ft=ft)
 
 
 # -------------------------------------------------------------------- CLI
@@ -322,9 +330,23 @@ def main() -> None:
     ap.add_argument("--s-upper", type=int, default=3)
     ap.add_argument("--compress", default="none",
                     choices=["none", "int8", "topk"])
-    ap.add_argument("--checkpoint-dir", default="")
+    ap.add_argument("--checkpoint-dir", default="",
+                    help="SPMD trainer state checkpoints (see --ckpt-dir "
+                         "for the parameter-server engines)")
     ap.add_argument("--save-every", type=int, default=100)
-    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the latest checkpoint "
+                         "(--checkpoint-dir on SPMD, --ckpt-dir on the "
+                         "PS engines)")
+    ap.add_argument("--ckpt-dir", default="", metavar="DIR",
+                    help="parameter-server snapshots (repro.ft): "
+                         "periodically checkpoint the packed shard "
+                         "store + version vector + sync-policy state "
+                         "here; with --resume, restore the latest "
+                         "snapshot before serving (needs --ps-shards)")
+    ap.add_argument("--snapshot-every", type=float, default=5.0,
+                    metavar="SECONDS",
+                    help="server snapshot interval for --ckpt-dir")
     ap.add_argument("--ps-shards", type=int, default=0, metavar="N",
                     help="train through a sharded threaded parameter "
                          "server with N shards (0 = SPMD pipeline path)")
@@ -390,7 +412,10 @@ def main() -> None:
             ("--ps-coalesce", 1, args.ps_coalesce),
             ("--delta-pull", False, args.delta_pull),
             ("--trace", "", args.trace),
-            ("--transport", "inproc", args.transport)) if got != default]
+            ("--transport", "inproc", args.transport),
+            ("--ckpt-dir", "", args.ckpt_dir),
+            ("--snapshot-every", 5.0, args.snapshot_every)) \
+            if got != default]
         if wired:
             ap.error(f"--spec is the single source of truth; drop "
                      f"{', '.join(wired)} (edit the JSON instead)")
@@ -406,7 +431,9 @@ def main() -> None:
             ps_apply=args.ps_apply, ps_wire=args.ps_wire,
             ps_gating=args.ps_gating, ps_straggler=args.ps_straggler,
             ps_coalesce=args.ps_coalesce, delta_pull=args.delta_pull,
-            transport=args.transport, trace_path=args.trace)
+            transport=args.transport, trace_path=args.trace,
+            ckpt_dir=args.ckpt_dir, snapshot_every=args.snapshot_every,
+            resume=args.resume)
     if args.dump_spec:
         print(spec.to_json())
         return
@@ -417,18 +444,26 @@ def main() -> None:
     if spec.engine != "spmd":
         ignored = [flag for flag, on in (
             ("--checkpoint-dir", bool(args.checkpoint_dir)),
-            ("--resume", args.resume),
+            ("--resume", args.resume and not spec.ft.snapshots),
             ("--optimizer", args.optimizer is not None)) if on]
         if ignored:
             print(f"warning: {', '.join(ignored)} only apply to the SPMD "
                   "path and are ignored with --ps-shards (the PS server "
-                  "optimizer is SGD/momentum; checkpointing the sharded "
-                  "store is future work)")
+                  "optimizer is SGD/momentum; the PS snapshot dir is "
+                  "--ckpt-dir, and --resume works with it)")
         print(f"arch={cfg.name} sync={spec.sync.mode} "
               f"ps_shards={spec.ps.shards} workers={spec.ps.workers} "
               f"params={registry.count_params(cfg):,}")
         with api.build_session(spec, verbose=True) as session:
+            session.start()
+            rig = getattr(session, "ft_rig", None)
+            if spec.ft.resume and rig is not None:
+                at = rig.resumed_step
+                print(f"resume: {'ok, at server version ' + str(at) if at is not None else 'no snapshot'}")
             m = session.run(args.steps)
+        if spec.ft.snapshots and "ft" in m:
+            print(f"snapshots: {m['ft']['snapshots']} taken, latest "
+                  f"step {m['ft']['latest_step']} in {spec.ft.dir}")
         if m["final_loss"] is not None:
             print(f"final loss {m['final_loss']:.4f} "
                   f"(first {m['first_loss']:.4f})")

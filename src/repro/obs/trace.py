@@ -70,6 +70,12 @@ EVENT_NAMES = (
     "frame_tx",          # instant: one encoded transport frame
     "frame_rx",          # instant: one decoded transport frame
     "metrics_snapshot",  # instant: periodic MetricsSampler sample
+    "snapshot",          # span: one whole server checkpoint (repro.ft)
+    "snapshot_shard",    # span: one shard's state grab UNDER its lock —
+                         #       the only pause a snapshot imposes
+    "reconnect",         # span: a client's backoff reconnect loop
+    "failover",          # span: server restart-and-resume from a snapshot
+    "fault",             # instant: one injected FaultPlan event
 )
 
 

@@ -46,6 +46,7 @@ class PSWorker(threading.Thread):
                  loss_from_aux: Optional[Callable[[Any], float]] = None,
                  wire_format: str = "tree",
                  delta_pull: bool = False,
+                 reconnect: Optional[Callable[[], Any]] = None,
                  name: Optional[str] = None):
         super().__init__(name=name or f"ps-worker-{worker_id}", daemon=True)
         warn_legacy("PSWorker",
@@ -66,6 +67,12 @@ class PSWorker(threading.Thread):
         self.loss_from_aux = loss_from_aux
         self.wire_format = wire_format
         self.delta_pull = delta_pull
+        #: Failover hook (``repro.ft``): a zero-arg callable returning a
+        #: fresh server handle after the current one dies with a
+        #: ``ConnectionError`` — the worker rebinds pull/push against it
+        #: and retries the interrupted iteration.  ``None`` = die.
+        self.reconnect = reconnect
+        self.reconnects = 0
         self.iterations_done = 0
         self.failure: Optional[BaseException] = None
         self._abort = threading.Event()
@@ -111,33 +118,54 @@ class PSWorker(threading.Thread):
 
         return pull
 
-    def run(self) -> None:
+    def _bind(self):
+        """(pull, push) against the CURRENT ``self.server`` — re-run
+        after a reconnect swaps the handle."""
         packed = self.wire_format == "packed"
         pull = (self._delta_puller() if packed and self.delta_pull
                 else self.server.pull_packed if packed
                 else self.server.pull)
         push = self.server.push_packed if packed else self.server.push
+        return pull, push
+
+    def run(self) -> None:
+        pull, push = self._bind()
         try:
-            for it in range(self.n_iterations):
+            it = 0
+            while it < self.n_iterations:
                 if self._abort.is_set() or self.server.stopped:
                     break
-                params = pull(self.worker_id)
-                t_tr = TRACE.now() if TRACE.enabled else 0.0
-                t0 = time.monotonic()
-                grads, aux = self.step_fn(params, next(self.batches))
-                grads = _block(grads)
-                compute = time.monotonic() - t0
-                if self.speed_factor > 1.0:
-                    # The sleep IS the emulated (slower-device) compute,
-                    # so the compute_step span includes it.
-                    time.sleep(compute * (self.speed_factor - 1.0))
-                if TRACE.enabled:
-                    TRACE.span("compute_step", t_tr,
-                               worker=self.worker_id, clock=it)
-                if self.loss_from_aux is not None:
-                    self.server.record_loss(it, self.loss_from_aux(aux))
-                push(self.worker_id, grads)
+                try:
+                    params = pull(self.worker_id)
+                    t_tr = TRACE.now() if TRACE.enabled else 0.0
+                    t0 = time.monotonic()
+                    grads, aux = self.step_fn(params, next(self.batches))
+                    grads = _block(grads)
+                    compute = time.monotonic() - t0
+                    if self.speed_factor > 1.0:
+                        # The sleep IS the emulated (slower-device)
+                        # compute, so the compute_step span includes it.
+                        time.sleep(compute * (self.speed_factor - 1.0))
+                    if TRACE.enabled:
+                        TRACE.span("compute_step", t_tr,
+                                   worker=self.worker_id, clock=it)
+                    if self.loss_from_aux is not None:
+                        self.server.record_loss(it,
+                                                self.loss_from_aux(aux))
+                    push(self.worker_id, grads)
+                except ConnectionError:
+                    # The server handle died mid-iteration.  With a
+                    # failover hook: swap in a fresh handle, rebind, and
+                    # retry the SAME iteration (its push may double —
+                    # ordinary async-SGD noise, never lost progress).
+                    if self.reconnect is None:
+                        raise
+                    self.server = self.reconnect()
+                    pull, push = self._bind()
+                    self.reconnects += 1
+                    continue
                 self.iterations_done += 1
+                it += 1
         except BaseException as e:  # surfaced by join_all
             self.failure = e
         finally:

@@ -26,11 +26,13 @@ from __future__ import annotations
 
 import abc
 import json
-from typing import Any, Optional, Sequence, Tuple
+from typing import Any, Callable, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.api.protocol import DeltaPull
+from repro.ft.backoff import RECONNECT_POLICY, BackoffPolicy, retry
+from repro.obs.trace import TRACE
 from repro.wireformat import (
     FLAG_FULL,
     MSG_BYE,
@@ -74,15 +76,26 @@ class PSTransportClient:
     plus an ``echo`` diagnostic.  ``push_packed``/``pull_packed``
     return ``False``/``None`` once the server has stopped — the worker
     loop's clean-exit signal.
+
+    ``channel_factory`` (when the backend provides one — tcp does)
+    arms ``reconnect()``: after the server dies mid-RPC
+    (``TransportClosed`` / ``OSError``), the client rebuilds its
+    channel with bounded exponential backoff and re-HELLOs.  HELLO is
+    idempotent server-side, so a reconnect never acquires a second
+    barrier seat; the worker keeps its last-seen version vector and
+    the delta-pull dominance rule decides full-vs-delta resync.
     """
 
     def __init__(self, channel: Channel, worker_id: int, *,
-                 compress: str = "none"):
+                 compress: str = "none",
+                 channel_factory: Optional[Callable[[], Channel]] = None):
         self.channel = channel
         self.worker_id = worker_id
         self.compress = compress
+        self.channel_factory = channel_factory
         self.server_rows: Optional[int] = None
         self.clock = 0
+        self.reconnects = 0
 
     # -- plumbing --------------------------------------------------------
     def _request(self, frame: Frame, compress: str = "none") -> Frame:
@@ -173,6 +186,45 @@ class PSTransportClient:
         reply = self._request(Frame(kind=MSG_ECHO, worker=self.worker_id,
                                     payload=np.asarray(arr)), compress)
         return np.array(reply.payload)
+
+    def reconnect(self, policy: BackoffPolicy = RECONNECT_POLICY, *,
+                  seed: Optional[int] = None) -> int:
+        """Failover path: tear down the dead channel, rebuild one via
+        ``channel_factory`` with jittered backoff, and re-HELLO.
+
+        Returns the server's wire-row count (the HELLO reply); raises
+        ``TransportClosed`` when no factory exists or the backoff
+        budget is exhausted — at that point the server is genuinely
+        gone, not restarting.
+        """
+        if self.channel_factory is None:
+            raise TransportClosed(
+                "this transport cannot reconnect (no channel factory)")
+        try:
+            self.channel.close()
+        except OSError:
+            pass
+        t0 = TRACE.now() if TRACE.enabled else 0.0
+        tries = [0]
+
+        def attempt() -> int:
+            tries[0] += 1
+            channel = self.channel_factory()
+            try:
+                self.channel = channel
+                return self.hello()
+            except BaseException:
+                channel.close()
+                raise
+
+        rows = retry(attempt, policy,
+                     seed=self.worker_id if seed is None else seed,
+                     retry_on=(TransportClosed, OSError))
+        self.reconnects += 1
+        if TRACE.enabled:
+            TRACE.span("reconnect", t0, worker=self.worker_id,
+                       args={"tries": tries[0], "rows": rows})
+        return rows
 
     def bye(self) -> None:
         """Leave the barrier group so survivors are not gated on us."""

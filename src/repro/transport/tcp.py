@@ -20,6 +20,7 @@ import socket
 import threading
 from typing import Optional, Tuple
 
+from repro.ft.backoff import CONNECT_POLICY, retry
 from repro.transport.base import (
     Channel,
     PSTransportClient,
@@ -91,6 +92,15 @@ class TcpTransport(Transport):
     def shutdown(self) -> None:
         self._stopping = True
         if self._listener is not None:
+            try:
+                # close() alone is not enough: the accept thread parked
+                # in accept() holds a kernel reference, so the port
+                # would stay in LISTEN until a connection woke it — and
+                # a same-port failover rebind would see EADDRINUSE.
+                # shutdown() aborts the blocked accept immediately.
+                self._listener.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
             try:
                 self._listener.close()
             except OSError:
@@ -191,8 +201,14 @@ def connect(address: Tuple, worker_id: int, *,
     kind, host, port = address
     if kind != "tcp":
         raise ValueError(f"not a tcp address: {address!r}")
-    return PSTransportClient(TcpChannel(host, port), worker_id,
-                             compress=compress)
+    # Bounded connect-retry: a spawned worker routinely races the
+    # server's bind (and, under failover, its restart) — ECONNREFUSED
+    # here means "not yet", not "never".  TcpChannel.__init__ raises
+    # plain OSError, which is exactly what the policy retries on.
+    factory = lambda: TcpChannel(host, port)  # noqa: E731
+    channel = retry(factory, CONNECT_POLICY, seed=worker_id)
+    return PSTransportClient(channel, worker_id, compress=compress,
+                             channel_factory=factory)
 
 
 __all__ = ["TcpTransport", "TcpChannel", "connect"]

@@ -164,6 +164,27 @@ def test_engine_selection():
     (dict(ps=dict(kind="sharded", shards=2, coalesce=0)), "window"),
     (dict(ps=dict(kind="sharded", shards=2, coalesce_wait_ms=-5.0)),
      "coalesce_wait_ms"),
+    # PR-7 knobs: the ft block needs a PS, a packed store, a faultable
+    # transport, and a restartable (tcp) one for server kills
+    (dict(ft=dict(snapshot_every_s=1.0, dir="/tmp/ck")),
+     "parameter server"),
+    (dict(ps=dict(kind="sharded", shards=2, apply="tree"),
+          ft=dict(snapshot_every_s=1.0, dir="/tmp/ck")),
+     "packed-resident"),
+    (dict(ps=dict(kind="sharded", shards=2, apply="fused"),
+          wire=dict(format="packed"),
+          ft=dict(fault_drop_prob=0.1)), "transport.kind"),
+    (dict(ps=dict(kind="sharded", shards=2, apply="fused"),
+          wire=dict(format="packed"), transport=dict(kind="shmem"),
+          ft=dict(fault_kill_server_round=5)), "tcp"),
+    (dict(ps=dict(kind="sharded", shards=2, apply="fused"),
+          wire=dict(format="packed"), transport=dict(kind="shmem"),
+          ft=dict(reconnect_tries=3)), "tcp"),
+    (dict(ft=dict(keep=0)), "keep"),
+    (dict(ps=dict(kind="sharded", shards=2, apply="fused"),
+          wire=dict(format="packed"), transport=dict(kind="tcp"),
+          ft=dict(snapshot_every_s=1.0)), "ft.dir"),
+    (dict(ft=dict(fault_drop_prob=1.5)), "probability"),
 ])
 def test_invalid_combos_raise_actionable_spec_errors(mutate, needle):
     base = RunSpec().to_dict()
