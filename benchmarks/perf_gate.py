@@ -22,7 +22,11 @@ exists to eliminate:
   5. observability (only with ``--obs``, see ``check_obs``): tracing
      off records 0 events and leaves perfcount hot-path deltas
      bitwise-identical to tracing on; the disabled-call cost may not
-     regress versus ``--obs-previous``.
+     regress versus ``--obs-previous``;
+  6. serving (only with ``--serving``, see ``check_serving``): zero
+     staleness-bound violations and a request stream that was actually
+     served from advancing versions; latency/throughput may not blow
+     up versus ``--serving-previous``.
 
 Exit code 1 on any violation (the CI job fails), 0 otherwise.
 """
@@ -176,6 +180,55 @@ def check_recovery(current: dict, previous: dict | None) -> list:
     return failures
 
 
+def check_serving(current: dict, previous: dict | None) -> list:
+    """Gate over ``BENCH_serving.json`` (``benchmarks/serving.py``).
+
+    Absolute: the freshness contract held — ZERO admissions above
+    ``serve.staleness_bound`` (a single violation means the gate served
+    stale weights), every closed-loop request was served, and the
+    replicas decoded against a LIVE store (served versions advanced
+    while the workers trained).  Trajectory: decode latency and
+    throughput may not blow up versus the previous artifact (generous
+    bounds — shared runners are noisy, but a 5x p99 jump means real
+    work landed on the admission/decode path).
+    """
+    failures = []
+    serve = current.get("serve", {})
+    violations = serve.get("violations")
+    if violations is None:
+        failures.append("serving report carries no serve.violations")
+    elif violations > 0:
+        failures.append(
+            f"freshness contract broken: {violations} admissions above "
+            f"staleness_bound={current.get('staleness_bound')} — the "
+            "admission gate served stale weights")
+    if serve.get("requests", 0) <= 0:
+        failures.append("serving contract broken: no requests were "
+                        "served (replicas never came up?)")
+    if serve.get("version_max", -1) <= 0:
+        failures.append(
+            "serving contract broken: served versions never advanced — "
+            "replicas decoded a dead store while training ran")
+    if serve.get("p99_ms") is None:
+        failures.append("serving report carries no serve.p99_ms")
+    if previous is not None:
+        now_p99 = serve.get("p99_ms")
+        before_p99 = previous.get("serve", {}).get("p99_ms")
+        if now_p99 is not None and before_p99 is not None \
+                and now_p99 > max(before_p99 * 5.0, before_p99 + 1000.0):
+            failures.append(
+                f"decode p99 latency regressed "
+                f"{before_p99:.1f}ms -> {now_p99:.1f}ms")
+        now_rps = serve.get("requests_per_s")
+        before_rps = previous.get("serve", {}).get("requests_per_s")
+        if now_rps is not None and before_rps is not None \
+                and before_rps > 0 and now_rps < before_rps / 5.0:
+            failures.append(
+                f"serving throughput regressed "
+                f"{before_rps:.1f} -> {now_rps:.1f} requests/s")
+    return failures
+
+
 def _load(path: str | None, label: str) -> dict | None:
     if not path:
         return None
@@ -205,10 +258,16 @@ def main() -> int:
                          "tolerance recovery gate)")
     ap.add_argument("--recovery-previous", default=None,
                     help="prior run's BENCH_recovery.json artifact")
+    ap.add_argument("--serving", default=None,
+                    help="fresh BENCH_serving.json (adds the online-"
+                         "serving freshness gate)")
+    ap.add_argument("--serving-previous", default=None,
+                    help="prior run's BENCH_serving.json artifact")
     args = ap.parse_args()
-    if args.current is None and args.recovery is None:
+    if args.current is None and args.recovery is None \
+            and args.serving is None:
         ap.error("nothing to gate: pass BENCH_push_pull.json and/or "
-                 "--recovery")
+                 "--recovery and/or --serving")
 
     failures = []
     previous = None
@@ -243,6 +302,17 @@ def main() -> int:
               f"reconnects/client="
               f"{recovery.get('reconnect', {}).get('mean_reconnects')}")
         failures += check_recovery(recovery, recovery_prev)
+    serving = _load(args.serving, "serving")
+    if serving is not None:
+        serving_prev = _load(args.serving_previous, "serving-previous")
+        sv = serving.get("serve", {})
+        print(f"\nserving: requests={sv.get('requests')} "
+              f"violations={sv.get('violations')} "
+              f"p99={sv.get('p99_ms', 0):.1f}ms "
+              f"rps={sv.get('requests_per_s', 0):.1f} "
+              f"versions=[{sv.get('version_min')}, "
+              f"{sv.get('version_max')}]")
+        failures += check_serving(serving, serving_prev)
     obs = _load(args.obs, "obs")
     if obs is not None:
         obs_prev = _load(args.obs_previous, "obs-previous")

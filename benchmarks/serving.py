@@ -1,0 +1,114 @@
+"""Serving-tier benchmark: what the online replicas actually deliver.
+
+One spec-driven run — ``--workers`` tcp training workers push at a
+live sharded server while ``--replicas`` serving replicas subscribe,
+refresh via version-delta pulls, and decode continuously-batched
+Markov prompts behind the ``staleness_bound`` admission gate — emitted
+as ``BENCH_serving.json``:
+
+  * **serve** — the consumer-side contract: requests served, decode
+    throughput (``requests_per_s``), latency percentiles (p50/p99 ms,
+    enqueue -> tokens), admission-staleness histogram/max, and the two
+    hard invariants the gate checks: ``violations`` (served staleness
+    above the bound — must be 0) and versions that actually advance
+    while training runs.
+  * **train** — the producer side of the same run (pushes, applied
+    updates, final loss): serving must not be measured against an idle
+    server.
+
+Run: ``PYTHONPATH=src python benchmarks/serving.py [--smoke]``.
+Gate: ``perf_gate.py --serving BENCH_serving.json
+[--serving-previous <prior>]``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+SCHEMA = "serving/v1"
+
+
+def build_spec(args):
+    from repro.api import (
+        DataSpec,
+        ModelSpec,
+        RunSpec,
+        ServeSpec,
+        ServerSpec,
+        SyncSpec,
+        TransportSpec,
+        WireSpec,
+    )
+    return RunSpec(
+        model=ModelSpec(arch=args.arch, smoke=True),
+        data=DataSpec(seq_len=args.seq_len, global_batch=args.batch),
+        ps=ServerSpec(kind="sharded", shards=args.shards,
+                      workers=args.workers, apply="fused"),
+        sync=SyncSpec(mode="dssp", s_lower=1, s_upper=4),
+        wire=WireSpec(format="packed", delta_pull=True),
+        transport=TransportSpec(kind="tcp", endpoint=True),
+        serve=ServeSpec(replicas=args.replicas,
+                        requests=args.requests,
+                        request_every_ms=args.request_every_ms,
+                        start_at_version=1,
+                        staleness_bound=args.staleness_bound,
+                        max_batch=args.max_batch,
+                        prompt_len=args.prompt_len,
+                        max_new=args.max_new))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="h2o-danube-1.8b")
+    ap.add_argument("--workers", type=int, default=2)
+    ap.add_argument("--shards", type=int, default=2)
+    ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--requests", type=int, default=24,
+                    help="closed-loop requests per replica")
+    ap.add_argument("--request-every-ms", type=float, default=60.0)
+    ap.add_argument("--staleness-bound", type=int, default=4)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=4)
+    ap.add_argument("--seq-len", type=int, default=32)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI sizing: shorter run, fewer requests")
+    ap.add_argument("--out", default="BENCH_serving.json")
+    args = ap.parse_args()
+    if args.smoke:
+        args.steps = 30
+        args.requests = 8
+        args.request_every_ms = 100.0
+
+    from repro.api import build_session
+    with build_session(build_spec(args)) as session:
+        metrics = session.run(steps=args.steps)
+
+    serve = metrics["serve"]
+    report = {
+        "schema": SCHEMA,
+        "arch": args.arch,
+        "workers": args.workers,
+        "replicas": args.replicas,
+        "staleness_bound": args.staleness_bound,
+        "serve": serve,
+        "train": {
+            "steps": args.steps,
+            "pushes": metrics["pushes"],
+            "applied_updates": metrics["applied_updates"],
+            "final_loss": metrics["final_loss"],
+        },
+    }
+
+    print(json.dumps(report, indent=2, sort_keys=True))
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    print(f"\nwrote {os.path.abspath(args.out)}")
+
+
+if __name__ == "__main__":
+    main()

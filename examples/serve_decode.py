@@ -1,79 +1,69 @@
-"""Serving demo: batched prefill + greedy decode with a KV cache.
+"""Serving demo: train and serve the SAME parameters, live.
 
-A small dense LM is trained briefly on the synthetic Markov stream, then
-serves a batch of prompts: one prefill computes last-token logits AND the
-packed KV cache (exactly what the decode_32k / long_500k dry-run cells
-lower at scale), and the decode loop appends tokens with the ring cache.
-The model should continue prompts more plausibly than chance (it learned
-the chain's transitions).
+One ``RunSpec`` drives the whole thing — two worker processes train a
+small dense LM over tcp (DSSP gating, packed wire, version-delta
+pulls) while two serving replicas subscribe to the SAME parameter
+server, keep a resident packed buffer fresh via delta pulls, and
+decode continuously-batched Markov prompts behind the
+``serve.staleness_bound`` admission gate.  No checkpoint sits between
+training and serving: a decode is served from parameters at most
+``staleness_bound`` applied updates behind the trainer.
 
 Run:  PYTHONPATH=src python examples/serve_decode.py
 """
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.data.synthetic import DataConfig, MarkovLM
-from repro.launch.train import Trainer
-from repro.models import transformer
-from repro.models.config import ModelConfig
+import json
 
 
 def main() -> None:
-    cfg = ModelConfig(name="serve-demo", family="dense", n_layers=2,
-                      d_model=128, n_heads=4, n_kv_heads=2, d_ff=384,
-                      vocab_size=512, dtype="float32", remat="none")
-    data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=48,
-                          global_batch=8)
-    print("training a tiny LM for 120 steps ...")
-    trainer = Trainer(cfg, data_cfg, sync="dssp", lr=5e-3, s_lower=1,
-                      s_upper=2, optimizer="adamw")
-    log = trainer.train(120, verbose=False)
-    print(f"  loss {log.losses[0]:.3f} -> {log.losses[-1]:.3f}")
-    params = trainer.params
+    from repro.api import (
+        DataSpec,
+        ModelSpec,
+        RunSpec,
+        ServeSpec,
+        ServerSpec,
+        SyncSpec,
+        TransportSpec,
+        WireSpec,
+        build_session,
+    )
 
-    # ---- build prompts from the same chain (the model knows it)
-    chain = MarkovLM(data_cfg)
-    rows = chain.sample_rows(step=10_000, rows=np.arange(4))
-    prompt_len, max_new = 16, 16
-    prompts = jnp.asarray(rows[:, :prompt_len])
+    spec = RunSpec(
+        model=ModelSpec(arch="h2o-danube-1.8b", smoke=True),
+        data=DataSpec(seq_len=32, global_batch=4),
+        ps=ServerSpec(kind="sharded", shards=2, workers=2,
+                      apply="fused"),
+        sync=SyncSpec(mode="dssp", s_lower=1, s_upper=4),
+        wire=WireSpec(format="packed", delta_pull=True),
+        transport=TransportSpec(kind="tcp", endpoint=True),
+        serve=ServeSpec(replicas=2, requests=12, request_every_ms=150.0,
+                        start_at_version=1, prompt_len=8, max_new=4,
+                        max_batch=4, staleness_bound=4))
 
-    # ---- prefill: last-token logits + packed KV cache
-    prefill = jax.jit(lambda p, t: transformer.forward_prefill(cfg, p, t))
-    logits, cache = prefill(params, prompts)
-    total = prompt_len + max_new
-    cache = {k: jnp.pad(v, ((0, 0), (0, 0), (0, total - prompt_len),
-                            (0, 0), (0, 0))) for k, v in cache.items()}
-    next_tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+    print("training 2 tcp workers while 2 replicas serve ...")
+    with build_session(spec) as session:
+        metrics = session.run(steps=40)
 
-    # ---- decode loop
-    decode = jax.jit(lambda p, t, c, i: transformer.forward_decode(
-        cfg, p, t, c, i))
-    out_tokens = [next_tok]
-    for step in range(max_new - 1):
-        logits, cache = decode(params, next_tok, cache,
-                               jnp.int32(prompt_len + step))
-        next_tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
-        out_tokens.append(next_tok)
-    generated = np.asarray(jnp.concatenate(out_tokens, axis=1))
+    serve = metrics["serve"]
+    print(f"train: pushes={metrics['pushes']} "
+          f"applied_updates={metrics['applied_updates']} "
+          f"loss {metrics['first_loss']:.3f} -> "
+          f"{metrics['final_loss']:.3f}")
+    print("serve:", json.dumps(serve, indent=2, sort_keys=True))
 
-    # ---- evaluate: is each generated token a LEGAL chain successor?
-    legal = 0
-    for b in range(generated.shape[0]):
-        prev = int(prompts[b, -1])
-        for t in range(generated.shape[1]):
-            tok = int(generated[b, t])
-            if tok in set(chain.successors[prev]):
-                legal += 1
-            prev = tok
-    frac = legal / generated.size
-    chance = data_cfg.branching / data_cfg.vocab_size
-    print(f"prompts {prompts.shape} -> generated {generated.shape}")
-    print(f"legal-successor rate {frac:.2f} vs chance {chance:.3f}")
-    print("sample:", generated[0][:12].tolist())
-    assert frac > 10 * chance, "model failed to learn the chain"
-    print("OK: serving path (prefill -> ring-cache decode) works.")
+    # The freshness contract: every admission stayed within the bound.
+    assert serve["violations"] == 0, "staleness-bound violations"
+    assert serve["requests"] == 2 * 12, "not every request was served"
+    # Replicas decoded against a LIVE store: the versions they served
+    # from advanced as the trainers pushed.
+    assert serve["version_max"] > 0, "served versions never advanced"
+    # Language probe (soft): the smoke model only trains for a few
+    # steps here, so report the legal-successor rate rather than
+    # gating on it — `python -m repro.launch.serve --steps 400` shows
+    # it climbing toward 1.0 as the served parameters improve.
+    print(f"legal-successor rate {serve['legal_fraction']:.3f} "
+          f"(chance ~{32 / 256:.3f})")
+    print("OK: train-and-serve over one live parameter server works.")
 
 
 if __name__ == "__main__":

@@ -41,6 +41,7 @@ from repro.api.spec import (
     RunSpec,
     SERVER_KINDS,
     SPEC_VERSION,
+    ServeSpec,
     ServerSpec,
     SpecError,
     SYNC_MODES,
@@ -66,6 +67,7 @@ __all__ = [
     "SERVER_KINDS",
     "SPEC_VERSION",
     "SYNC_MODES",
+    "ServeSpec",
     "ServerSpec",
     "SpecError",
     "SpmdSession",

@@ -402,6 +402,78 @@ def _default_loss_from_aux(aux) -> float:
 
 
 # ===================================================================
+# serving rig (both PS engines)
+# ===================================================================
+def _serve_threads(session) -> tuple:
+    """Start ``spec.serve.replicas`` in-heap replica threads against a
+    live server (the ps-threads engine's serve tier: replicas read the
+    server directly, no transport).  Returns ``(threads, results)`` —
+    join the threads, then read the results list."""
+    spec = session.spec
+    if spec.serve.replicas <= 0:
+        return [], []
+    import threading
+    import traceback
+
+    from repro.data.synthetic import DataConfig, MarkovLM
+    from repro.serve import (
+        BatchQueue,
+        Decoder,
+        DirectSubscription,
+        ParamSubscriber,
+        Refresher,
+        ReplicaResult,
+        ReplicaWorker,
+        drive_replica,
+    )
+    cfg, _ = _model_setup(spec)
+    plan = session.server.plan
+    layout = plan.wire_layout()
+    sv = spec.serve
+    w = spec.ps.workers
+    results: List = [None] * sv.replicas
+    threads = []
+
+    def run_one(i: int, rid: int) -> None:
+        sub = DirectSubscription(session.server, rid)
+        subscriber = ParamSubscriber(sub, layout, replica_id=rid)
+        refresher = Refresher(subscriber, sv.refresh_every_s)
+        refresher.start()
+        try:
+            decoder = Decoder(cfg, plan, prompt_len=sv.prompt_len,
+                              max_new=sv.max_new, max_batch=sv.max_batch)
+            decoder.warmup()  # compile before the first real request
+            chain = MarkovLM(DataConfig(
+                vocab_size=cfg.vocab_size,
+                seq_len=sv.prompt_len + sv.max_new, global_batch=1,
+                seed=spec.data.seed + 1000 + rid))
+            worker = ReplicaWorker(
+                rid, subscriber, BatchQueue(), decoder,
+                staleness_bound=sv.staleness_bound,
+                batch_window_ms=sv.batch_window_ms,
+                max_batch=sv.max_batch)
+            results[i] = drive_replica(
+                worker, chain, requests=sv.requests,
+                prompt_len=sv.prompt_len,
+                pace_s=sv.request_every_ms / 1e3,
+                start_at_version=sv.start_at_version)
+        except Exception:
+            results[i] = ReplicaResult(rid,
+                                       error=traceback.format_exc())
+        finally:
+            refresher.stop()
+
+    for i in range(sv.replicas):
+        # Replica ids sit AFTER the trainers' (workers 0..W-1), same
+        # slot convention as the transport engine.
+        t = threading.Thread(target=run_one, args=(i, w + i),
+                             daemon=True, name=f"serve-replica-{w + i}")
+        t.start()
+        threads.append(t)
+    return threads, results
+
+
+# ===================================================================
 # engine: SPMD delayed-gradient pipeline
 # ===================================================================
 @register_engine("spmd")
@@ -490,6 +562,7 @@ class ThreadedPSSession(TrainingSession):
     server = None
     obs_rig = None
     ft_rig = None
+    serve_results = None
 
     def _start(self) -> None:
         self.server = build_server(self.spec, self._ov.get("params"))
@@ -522,8 +595,18 @@ class ThreadedPSSession(TrainingSession):
                      delta_pull=spec.wire.delta_pull,
                      loss_from_aux=loss_from_aux)
             for i in range(w)]
+        serve_threads, serve_results = _serve_threads(self)
         run_cluster(self.server, workers,
                     timeout=self._ov.get("timeout", 1200.0))
+        for t in serve_threads:
+            t.join(timeout=self._ov.get("timeout", 1200.0))
+        if serve_threads:
+            self.serve_results = serve_results
+            failed = [r for r in serve_results if r is not None and r.error]
+            if failed:
+                raise RuntimeError(
+                    f"{len(failed)} serve replica(s) failed:\n"
+                    + "\n".join(r.error for r in failed))
         if self.obs_rig is not None:
             self.obs_rig.finish()
         if self.verbose:
@@ -609,6 +692,9 @@ class ThreadedPSSession(TrainingSession):
         out = _ps_metrics(self.engine, self.server, self.obs_rig)
         if self.ft_rig is not None:
             out["ft"] = self.ft_rig.metrics()
+        if self.serve_results is not None:
+            from repro.serve import aggregate_serve
+            out["serve"] = aggregate_serve(self.serve_results)
         return out
 
     def _close(self) -> None:
@@ -639,6 +725,7 @@ class TransportPSSession(TrainingSession):
     results = None
     obs_rig = None
     ft_rig = None
+    serve_results = None
 
     def _start(self) -> None:
         from repro.transport import PSServerEndpoint, make_transport
@@ -653,8 +740,12 @@ class TransportPSSession(TrainingSession):
             collector=self.obs_rig.collector if self.obs_rig else None)
         if self.obs_rig is not None:
             self.obs_rig.start(_obs_snapshot_fn(self.server))
+        # Serving replicas take transport slots AFTER the trainers'
+        # (shmem pre-allocates one segment per id; tcp ignores the
+        # count) — workers 0..W-1, replicas W..W+R-1.
         self.transport = make_transport(
-            spec.transport.kind, n_workers=spec.ps.workers,
+            spec.transport.kind,
+            n_workers=spec.ps.workers + spec.serve.replicas,
             host=spec.transport.host, port=spec.transport.port)
         self.transport.serve(self.endpoint)
 
@@ -692,17 +783,39 @@ class TransportPSSession(TrainingSession):
         slowdowns = _speed_factors(spec, self._ov.get("speed_factors"))
         pool = ProcessWorkerPool(self.transport.address(), task, w,
                                  slowdowns=slowdowns)
+        rpool = None
+        if spec.serve.replicas > 0:
+            from repro.serve import ReplicaPool, ReplicaTask
+            rtask = ReplicaTask.from_spec(
+                spec, trace_spill=(self.obs_rig.make_spill_dir()
+                                   if self.obs_rig else ""))
+            rpool = ReplicaPool(self.transport.address(), rtask,
+                                spec.serve.replicas, first_id=w)
         pool.start()
+        if rpool is not None:
+            rpool.start()
         try:
             self.results = pool.join(
                 timeout=self._ov.get("timeout", 1200.0),
                 endpoint=self.endpoint)
+            if rpool is not None:
+                # Replicas drain their own request load; join them
+                # while the wire is still up (their last refreshes and
+                # TRACE flushes ride it).
+                self.serve_results = rpool.join(
+                    timeout=self._ov.get("timeout", 1200.0),
+                    endpoint=self.endpoint)
         finally:
             # Training is over either way: release gated workers and
             # tear the wire down before surfacing failures.
             self.close()
             pool.terminate()
+            if rpool is not None:
+                rpool.terminate()
         raise_on_failure(self.results)
+        if rpool is not None:
+            from repro.serve import raise_on_replica_failure
+            raise_on_replica_failure(self.serve_results)
         if self.verbose:
             m = self.server.metrics
             done = sum(r.iterations_done for r in self.results)
@@ -718,6 +831,9 @@ class TransportPSSession(TrainingSession):
                                          for r in self.results)
         if self.ft_rig is not None:
             out["ft"] = self.ft_rig.metrics()
+        if self.serve_results is not None:
+            from repro.serve import aggregate_serve
+            out["serve"] = aggregate_serve(self.serve_results)
         return out
 
     def _close(self) -> None:

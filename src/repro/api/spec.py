@@ -370,6 +370,65 @@ class FtSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class ServeSpec:
+    """Online serving tier (``repro.serve``): N replicas ride the SAME
+    run as the training workers, keeping a resident packed parameter
+    buffer fresh over the transport via version-delta pulls and serving
+    decode requests through a continuous-batching queue.
+
+    ``staleness_bound`` is the SSP-style freshness contract mirrored to
+    the consumer side: a replica whose resident version vector trails
+    the server by more than this many applied updates BLOCKS admission
+    (forcing an immediate refresh) instead of serving stale weights —
+    the serving analogue of the training gate's bound on gradient
+    staleness.  ``refresh_every_s`` is the background refresh cadence
+    between forced refreshes; ``batch_window_ms``/``max_batch`` shape
+    the continuous-batching window; ``requests``/``prompt_len``/
+    ``max_new`` size each replica's closed-loop request stream and
+    ``request_every_ms`` paces it (so serving can be spread across the
+    training run instead of bursting up front).
+    """
+
+    replicas: int = 0              # 0 disables the serving tier
+    refresh_every_s: float = 0.05  # background delta-pull cadence
+    staleness_bound: int = 4       # max versions behind at admission
+    batch_window_ms: float = 2.0   # continuous-batching linger
+    max_batch: int = 8             # decode requests per batch
+    requests: int = 32             # closed-loop requests per replica
+    request_every_ms: float = 0.0  # pacing between submits (0 = burst)
+    start_at_version: int = 0      # delay serving until the server has
+                                   # applied this many updates (0 = now)
+    prompt_len: int = 16
+    max_new: int = 8
+
+    def __post_init__(self):
+        _require(self.replicas >= 0,
+                 "serve.replicas must be >= 0 (0 disables serving)")
+        _require(self.refresh_every_s > 0.0,
+                 "serve.refresh_every_s is the replica refresh cadence "
+                 "in seconds (> 0)")
+        _require(self.staleness_bound >= 0,
+                 "serve.staleness_bound is the max applied updates a "
+                 "replica may trail the server at admission (>= 0)")
+        _require(self.batch_window_ms >= 0.0,
+                 "serve.batch_window_ms is a linger in milliseconds "
+                 "(>= 0; 0 batches only already-queued requests)")
+        _require(self.max_batch >= 1, "serve.max_batch must be >= 1")
+        _require(self.requests >= 1,
+                 "serve.requests is each replica's closed-loop request "
+                 "count (>= 1)")
+        _require(self.request_every_ms >= 0.0,
+                 "serve.request_every_ms paces the request stream in "
+                 "milliseconds (>= 0; 0 submits as fast as possible)")
+        _require(self.start_at_version >= 0,
+                 "serve.start_at_version delays the request stream "
+                 "until the server has applied that many updates "
+                 "(>= 0; 0 serves from the initial weights)")
+        _require(self.prompt_len >= 1, "serve.prompt_len must be >= 1")
+        _require(self.max_new >= 1, "serve.max_new must be >= 1")
+
+
+@dataclasses.dataclass(frozen=True)
 class RunSpec:
     """The whole run, validated as a unit.
 
@@ -392,7 +451,11 @@ class RunSpec:
       a parameter server with ``ps.apply='fused'``/``'packed'``; the
       ``FaultPlan`` kills/drops cross a process boundary, so faults and
       worker reconnect need a process transport (and killing/restarting
-      the server needs tcp — shmem segments die with their owner).
+      the server needs tcp — shmem segments die with their owner);
+    * ``serve.replicas > 0`` rides the delta-pull protocol: it needs a
+      parameter server, the packed wire with ``wire.delta_pull=true``,
+      and a registry arch (replicas rebuild the decode path from the
+      config name — ``'custom'`` cannot cross the spawn boundary).
     """
 
     model: ModelSpec = dataclasses.field(default_factory=ModelSpec)
@@ -406,10 +469,29 @@ class RunSpec:
         default_factory=TransportSpec)
     obs: ObsSpec = dataclasses.field(default_factory=ObsSpec)
     ft: FtSpec = dataclasses.field(default_factory=FtSpec)
+    serve: ServeSpec = dataclasses.field(default_factory=ServeSpec)
 
     def __post_init__(self):
         ps, wire, tp, sync = self.ps, self.wire, self.transport, self.sync
         ft = self.ft
+        if self.serve.replicas > 0:
+            _require(ps.kind != "none",
+                     "serve.replicas subscribe to a live parameter "
+                     "server; the SPMD pipeline (ps.kind='none') has "
+                     "none — set ps.kind='mono'/'sharded'")
+            _require(wire.format == "packed",
+                     "serving replicas keep a resident packed buffer; "
+                     "set wire.format='packed' (and ps.apply='fused'/"
+                     "'packed')")
+            _require(wire.delta_pull,
+                     "serving replicas refresh via version-delta pulls "
+                     "(bytes proportional to change — the high-"
+                     "frequency refresh path); set wire.delta_pull="
+                     "true")
+            _require(self.model.arch != CUSTOM_ARCH,
+                     "serving replicas rebuild the decode path from "
+                     "the model config name — model.arch='custom' "
+                     "cannot serve; name a registry architecture")
         if ft.snapshots:
             _require(ps.kind != "none",
                      "ft snapshots checkpoint a parameter server's "

@@ -1,99 +1,110 @@
-"""Serving driver: batched prefill + decode with the production step
-bundles (the same functions the decode_32k / long_500k dry-run cells
-lower at scale).
+"""Serving driver: train and serve the SAME parameters in one run.
 
-On this container it serves the reduced configs on one CPU device; on a
-pod the identical code path runs under the production mesh via
-``build_serve_step``.
+One ``RunSpec`` stands up the whole loop — a DSSP training fleet
+pushing gradients at the parameter server while ``repro.serve``
+replicas subscribe to it over the same transport, keep a resident
+packed buffer fresh via version-delta pulls, and decode continuously-
+batched requests behind the ``serve.staleness_bound`` admission gate.
+
+On this container it runs the reduced smoke configs on CPU processes;
+on a pod the identical code path serves the production configs — the
+spec is the only thing that changes.
 
 CLI:
   PYTHONPATH=src python -m repro.launch.serve --arch h2o-danube-1.8b \
-      --smoke --batch 4 --prompt-len 16 --max-new 16
+      --transport tcp --workers 2 --replicas 2 --steps 40 \
+      --requests 16 --prompt-len 8 --max-new 4
 """
 
 from __future__ import annotations
 
 import argparse
-import time
-from typing import Tuple
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.configs import get_config, get_smoke_config
-from repro.data.synthetic import DataConfig, MarkovLM
-from repro.models import registry, transformer
+import json
 
 
-def generate(cfg, params, prompts: jax.Array, max_new: int,
-             ) -> Tuple[np.ndarray, float]:
-    """Greedy continuation. Dense/MoE/VLM get fused prefill; recurrent
-    families (ssm/hybrid) prefill by scanning their decode step (their
-    per-token state update IS the prefill)."""
-    b, prompt_len = prompts.shape
-    fam = registry.family(cfg)
-    total = prompt_len + max_new
-    t0 = time.monotonic()
-
-    if cfg.family in ("dense", "moe", "vlm"):
-        logits, cache = jax.jit(
-            lambda p, t: transformer.forward_prefill(cfg, p, t)
-        )(params, prompts)
-        cache = {k: jnp.pad(v, ((0, 0), (0, 0), (0, total - v.shape[2]),
-                                (0, 0), (0, 0)))
-                 for k, v in cache.items()}
-        next_tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
-        start = prompt_len
-    else:
-        state = (fam.init_state(cfg, b, total, total)
-                 if cfg.family == "audio"
-                 else fam.init_state(cfg, b, total))
-        step = jax.jit(lambda p, t, s, i: fam.decode_fn(cfg, p, t, s, i))
-        logits = None
-        for i in range(prompt_len):
-            logits, state = step(params, prompts[:, i:i + 1], state,
-                                 jnp.int32(i))
-        cache = state
-        next_tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
-        start = prompt_len
-
-    decode = jax.jit(lambda p, t, c, i: fam.decode_fn(cfg, p, t, c, i))
-    out = [next_tok]
-    for j in range(max_new - 1):
-        logits, cache = decode(params, next_tok, cache,
-                               jnp.int32(start + j))
-        next_tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
-        out.append(next_tok)
-    tokens = np.asarray(jnp.concatenate(out, axis=1))
-    return tokens, time.monotonic() - t0
+def build_spec(args) -> "RunSpec":
+    from repro.api import (
+        DataSpec,
+        ModelSpec,
+        ObsSpec,
+        RunSpec,
+        ServeSpec,
+        ServerSpec,
+        SyncSpec,
+        TransportSpec,
+        WireSpec,
+    )
+    return RunSpec(
+        model=ModelSpec(arch=args.arch, smoke=args.smoke),
+        data=DataSpec(seq_len=args.seq_len, global_batch=args.batch),
+        ps=ServerSpec(kind="sharded", shards=args.shards,
+                      workers=args.workers, apply="fused"),
+        sync=SyncSpec(mode=args.sync),
+        wire=WireSpec(format="packed", delta_pull=True),
+        transport=TransportSpec(kind=args.transport, endpoint=True),
+        obs=ObsSpec(trace=bool(args.trace), trace_path=args.trace),
+        serve=ServeSpec(replicas=args.replicas,
+                        refresh_every_s=args.refresh_every_s,
+                        staleness_bound=args.staleness_bound,
+                        batch_window_ms=args.batch_window_ms,
+                        max_batch=args.max_batch,
+                        requests=args.requests,
+                        request_every_ms=args.request_every_ms,
+                        start_at_version=args.start_at_version,
+                        prompt_len=args.prompt_len,
+                        max_new=args.max_new))
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        description="train + serve one parameter store over a live "
+                    "transport (repro.serve)")
     ap.add_argument("--arch", default="h2o-danube-1.8b")
     ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--transport", default="tcp",
+                    choices=("tcp", "shmem"))
+    ap.add_argument("--sync", default="dssp",
+                    choices=("bsp", "ssp", "dssp", "asp"))
+    ap.add_argument("--workers", type=int, default=2)
+    ap.add_argument("--shards", type=int, default=2)
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--seq-len", type=int, default=32)
     ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--requests", type=int, default=16,
+                    help="closed-loop requests per replica")
+    ap.add_argument("--request-every-ms", type=float, default=100.0)
+    ap.add_argument("--start-at-version", type=int, default=1,
+                    help="hold requests until the server has applied "
+                         "this many updates (serving overlaps live "
+                         "training, not worker compile time)")
+    ap.add_argument("--refresh-every-s", type=float, default=0.05)
+    ap.add_argument("--staleness-bound", type=int, default=4)
+    ap.add_argument("--batch-window-ms", type=float, default=2.0)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=4)
+    ap.add_argument("--trace", default="",
+                    help="write the merged run trace here (.jsonl or "
+                         "chrome .json)")
     args = ap.parse_args()
 
-    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    if cfg.family == "audio":
-        raise SystemExit("audio serving demo: see examples/serve_decode.py"
-                         " (needs encoder frames)")
-    params = registry.init_params(cfg, jax.random.PRNGKey(0))
-    chain = MarkovLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=64,
-                                global_batch=args.batch))
-    rows = chain.sample_rows(0, np.arange(args.batch))
-    prompts = jnp.asarray(rows[:, :args.prompt_len])
-    tokens, dt = generate(cfg, params, prompts, args.max_new)
-    per_tok = dt / (args.max_new * args.batch) * 1e3
-    print(f"arch={cfg.name} batch={args.batch} "
-          f"prompt={args.prompt_len} new={args.max_new}")
-    print(f"generated {tokens.shape} in {dt:.2f}s "
-          f"({per_tok:.1f} ms/token incl. compile)")
-    print("sample:", tokens[0][:12].tolist())
+    from repro.api import build_session
+    spec = build_spec(args)
+    with build_session(spec) as session:
+        metrics = session.run(steps=args.steps)
+
+    serve = metrics.get("serve", {})
+    print(f"\narch={args.arch} transport={args.transport} "
+          f"workers={args.workers} replicas={args.replicas}")
+    print(f"train: pushes={metrics['pushes']} "
+          f"applied_updates={metrics['applied_updates']} "
+          f"final_loss={metrics['final_loss']}")
+    print("serve:", json.dumps(serve, indent=2, sort_keys=True))
+    if serve.get("violations", 0):
+        raise SystemExit(
+            f"{serve['violations']} staleness-bound violations — the "
+            "admission gate failed")
 
 
 if __name__ == "__main__":

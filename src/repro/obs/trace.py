@@ -76,6 +76,10 @@ EVENT_NAMES = (
     "reconnect",         # span: a client's backoff reconnect loop
     "failover",          # span: server restart-and-resume from a snapshot
     "fault",             # instant: one injected FaultPlan event
+    "replica_refresh",   # span: a serving replica's delta-pull refresh
+    "decode_batch",      # span: one continuously-batched decode call
+    "staleness_block",   # span: admission blocked on the serve-side
+                         #       SSP gate until a fresh refresh landed
 )
 
 

@@ -1,0 +1,59 @@
+"""repro.serve — online serving replicas fed by version-delta pulls.
+
+Train and serve the SAME parameters: N replica processes subscribe to
+the live parameter server (``MSG_SUB`` — no barrier seat), keep a
+resident packed wire buffer fresh through ``MSG_PULL_DELTA`` refreshes
+(bytes proportional to change), and decode continuously-batched
+requests behind an SSP-style admission gate — a replica trailing the
+server by more than ``serve.staleness_bound`` applied updates blocks
+until its refresh lands.
+
+Drive it declaratively through ``repro.api`` (the ``serve`` block on
+``RunSpec``) or assemble the pieces directly:
+
+    from repro.serve import (BatchQueue, Decoder, ParamSubscriber,
+                             Refresher, ReplicaWorker)
+
+Protocol and contract details: ``src/repro/serve/README.md``.
+"""
+
+from repro.serve.batching import BatchQueue, DecodeRequest
+from repro.serve.engine import (
+    Decoder,
+    ReplicaPool,
+    ReplicaResult,
+    ReplicaTask,
+    ReplicaWorker,
+    aggregate_serve,
+    drive_replica,
+    legal_fraction,
+    raise_on_replica_failure,
+)
+from repro.serve.replica import (
+    DirectSubscription,
+    ParamSubscriber,
+    Refresher,
+    Subscription,
+    TransportSubscription,
+    bootstrap_versions,
+)
+
+__all__ = [
+    "BatchQueue",
+    "DecodeRequest",
+    "Decoder",
+    "DirectSubscription",
+    "ParamSubscriber",
+    "Refresher",
+    "ReplicaPool",
+    "ReplicaResult",
+    "ReplicaTask",
+    "ReplicaWorker",
+    "Subscription",
+    "TransportSubscription",
+    "aggregate_serve",
+    "bootstrap_versions",
+    "drive_replica",
+    "legal_fraction",
+    "raise_on_replica_failure",
+]

@@ -45,6 +45,7 @@ from repro.wireformat import (
     MSG_PULL_DELTA,
     MSG_PUSH,
     MSG_STOP,
+    MSG_SUB,
     MSG_TRACE,
     Frame,
     FrameError,
@@ -110,6 +111,15 @@ class PSTransportClient:
         """Join the barrier group; returns the full wire-buffer row
         count (what ``pull_packed()`` with no shard routing yields)."""
         reply = self._request(Frame(kind=MSG_HELLO, worker=self.worker_id))
+        self.server_rows = int(reply.aux)
+        return self.server_rows
+
+    def subscribe(self) -> int:
+        """Register as a serving REPLICA: same reply as ``hello`` (wire
+        rows in aux, server version in clock) but the server takes no
+        barrier seat for us — a subscriber only ever pulls, and must
+        never slow the training workers' sync-policy gate."""
+        reply = self._request(Frame(kind=MSG_SUB, worker=self.worker_id))
         self.server_rows = int(reply.aux)
         return self.server_rows
 

@@ -40,6 +40,7 @@ from repro.wireformat import (
     MSG_PULL_DELTA,
     MSG_PUSH,
     MSG_STOP,
+    MSG_SUB,
     MSG_TRACE,
     decode_frame,
     encode_frame,
@@ -76,6 +77,9 @@ class PSServerEndpoint:
                 raise ValueError(f"endpoint routes shards {bad} but the "
                                  f"server has {len(known)} shard(s)")
         self._hello_lock = threading.Lock()
+        # Serving replicas (MSG_SUB): pull-only peers that hold no
+        # barrier seat, so on_disconnect must NOT remove_worker them.
+        self._subscribers: set = set()
         # Pull replies re-serialize the full parameter buffer (device->
         # host) on every request; between applies that is the same
         # bytes W times per iteration.  Cache the host copy keyed by
@@ -122,6 +126,18 @@ class PSServerEndpoint:
                 server.add_worker(frame.worker)  # idempotent
             return Frame(kind=MSG_OK, worker=frame.worker,
                          clock=server.version, aux=float(self.wire_rows()))
+        if kind == MSG_SUB:
+            if self.shards is not None:
+                raise FrameError(
+                    "replica subscriptions need a full-store endpoint "
+                    "(their delta pulls cover every shard); this one "
+                    f"routes shards {sorted(self.shards)} only")
+            with self._hello_lock:
+                self._subscribers.add(frame.worker)
+            # Deliberately NO add_worker: a subscriber never pushes, so
+            # seating it would change every BSP/SSP/DSSP gate decision.
+            return Frame(kind=MSG_OK, worker=frame.worker,
+                         clock=server.version, aux=float(self.wire_rows()))
         if kind == MSG_PULL:
             if server.stopped:
                 return Frame(kind=MSG_STOP, worker=frame.worker,
@@ -131,8 +147,16 @@ class PSServerEndpoint:
                          clock=server.version, payload=np.asarray(buf))
         if kind == MSG_PULL_DELTA:
             if server.stopped:
-                return Frame(kind=MSG_STOP, worker=frame.worker,
-                             clock=server.version)
+                # Training workers take STOP and exit; a subscribed
+                # replica still gets deltas until its vector matches
+                # the FINAL weights — only then does STOP freeze it
+                # (stopping earlier would pin pre-final parameters).
+                with self._hello_lock:
+                    is_sub = frame.worker in self._subscribers
+                if not is_sub or tuple(frame.versions or ()) == \
+                        tuple(server.shard_versions()):
+                    return Frame(kind=MSG_STOP, worker=frame.worker,
+                                 clock=server.version)
             if self.shards is not None:
                 raise FrameError(
                     "delta pulls need a full-store endpoint; this one "
@@ -229,7 +253,14 @@ class PSServerEndpoint:
     def on_disconnect(self, worker: int) -> None:
         """A connection died without BYE (killed worker, broken pipe):
         drop it from the barrier group so survivors are not gated on a
-        corpse — same contract as ``PSWorker``'s finally-block."""
+        corpse — same contract as ``PSWorker``'s finally-block.
+        Subscribed replicas hold no seat, so a dead replica is only
+        unregistered — removing a worker id it never held would be a
+        no-op, but keeping the sets separate keeps the intent loud."""
+        with self._hello_lock:
+            if worker in self._subscribers:
+                self._subscribers.discard(worker)
+                return
         self.server.remove_worker(worker)
 
 

@@ -105,10 +105,13 @@ MSG_ECHO = 9    # payload round-trip diagnostic (health checks + tests)
 MSG_PULL_DELTA = 10  # request: body = client's per-shard version vector
 MSG_DELTA = 11  # reply: advanced shards' regions + fresh version vector
 MSG_TRACE = 12  # worker ring-buffer flush: body = utf-8 JSON event list
+MSG_SUB = 13    # replica subscription: like HELLO (reply OK carries
+                # clock=version, aux=rows) but takes NO barrier seat —
+                # a serving replica must never gate training workers
 
 _KINDS = frozenset((MSG_HELLO, MSG_PULL, MSG_PUSH, MSG_LOSS, MSG_BYE,
                     MSG_STOP, MSG_OK, MSG_ERR, MSG_ECHO,
-                    MSG_PULL_DELTA, MSG_DELTA, MSG_TRACE))
+                    MSG_PULL_DELTA, MSG_DELTA, MSG_TRACE, MSG_SUB))
 
 #: Kinds whose body is NOT one (rows, 512) buffer: MSG_ERR carries a
 #: utf-8 message, MSG_PULL_DELTA an int64 version vector, MSG_DELTA the
