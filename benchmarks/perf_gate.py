@@ -26,7 +26,11 @@ exists to eliminate:
   6. serving (only with ``--serving``, see ``check_serving``): zero
      staleness-bound violations and a request stream that was actually
      served from advancing versions; latency/throughput may not blow
-     up versus ``--serving-previous``.
+     up versus ``--serving-previous``;
+  7. kernels (only with ``--kernels``, see ``check_kernels``): every
+     registry (op, variant) pair is present, matches its ``ref.py``
+     oracle absolutely, and its achieved step time may not blow up
+     versus ``--kernels-previous``.
 
 Exit code 1 on any violation (the CI job fails), 0 otherwise.
 """
@@ -229,6 +233,67 @@ def check_serving(current: dict, previous: dict | None) -> list:
     return failures
 
 
+#: every (op, variant) pair BENCH_kernels.json must cover — the full
+#: registry surface minus ssm_scan's extra associative variant (which is
+#: gated too when present, just not required).
+REQUIRED_KERNEL_ROWS = tuple(
+    (op, variant)
+    for op in ("attention", "rmsnorm", "residual_rmsnorm", "ssm_scan")
+    for variant in ("pallas", "xla"))
+
+#: oracle parity bound for the f32 benchmark shapes (absolute max |err|).
+KERNEL_PARITY_TOL = 5e-3
+
+
+def check_kernels(current: dict, previous: dict | None) -> list:
+    """Gate over ``BENCH_kernels.json`` (``roofline_table.py --kernels``).
+
+    Absolute: every required (op, variant) row is present and its output
+    matches the ``kernels/ref.py`` oracle to ``KERNEL_PARITY_TOL`` — a
+    registry variant that drifts from the oracle is a wrong answer, not
+    a perf problem.  Trajectory: a row's achieved step time may not blow
+    up versus the previous artifact (generous bound — CPU interpret-mode
+    timings on shared runners are noisy, but a 5x/+1s jump means real
+    work landed on the dispatch path); rows or metrics missing from
+    either side are skipped, never failed.
+    """
+    failures = []
+    rows = {(r["op"], r["variant"]): r for r in current.get("rows", [])}
+    for op, variant in REQUIRED_KERNEL_ROWS:
+        if (op, variant) not in rows:
+            failures.append(
+                f"kernel coverage broken: no ({op}, {variant}) row in "
+                "the benchmark report — the registry grid shrank")
+    for (op, variant), row in sorted(rows.items()):
+        err = row.get("parity_max_err")
+        if err is None:
+            failures.append(f"kernel row ({op}, {variant}) carries no "
+                            "parity_max_err")
+        elif err > KERNEL_PARITY_TOL:
+            failures.append(
+                f"kernel parity broken: {op}={variant} differs from its "
+                f"ref.py oracle by {err:.2e} (tol {KERNEL_PARITY_TOL})")
+        if row.get("achieved_ms") is None \
+                or row.get("predicted_ms") is None:
+            failures.append(
+                f"kernel row ({op}, {variant}) misses achieved_ms/"
+                "predicted_ms (achieved-vs-predicted contract)")
+    if not current.get("derived", {}).get("parity_ok", False):
+        failures.append("derived.parity_ok is false")
+    if previous is not None:
+        prev_rows = {(r["op"], r["variant"]): r
+                     for r in previous.get("rows", [])}
+        for key in sorted(set(rows) & set(prev_rows)):
+            now = rows[key].get("achieved_ms")
+            before = prev_rows[key].get("achieved_ms")
+            if now is not None and before is not None \
+                    and now > max(before * 5.0, before + 1000.0):
+                failures.append(
+                    f"{key[0]}={key[1]}: achieved step time regressed "
+                    f"{before:.3f}ms -> {now:.3f}ms")
+    return failures
+
+
 def _load(path: str | None, label: str) -> dict | None:
     if not path:
         return None
@@ -263,11 +328,16 @@ def main() -> int:
                          "serving freshness gate)")
     ap.add_argument("--serving-previous", default=None,
                     help="prior run's BENCH_serving.json artifact")
+    ap.add_argument("--kernels", default=None,
+                    help="fresh BENCH_kernels.json (adds the kernel-"
+                         "registry parity + step-time gate)")
+    ap.add_argument("--kernels-previous", default=None,
+                    help="prior run's BENCH_kernels.json artifact")
     args = ap.parse_args()
     if args.current is None and args.recovery is None \
-            and args.serving is None:
+            and args.serving is None and args.kernels is None:
         ap.error("nothing to gate: pass BENCH_push_pull.json and/or "
-                 "--recovery and/or --serving")
+                 "--recovery and/or --serving and/or --kernels")
 
     failures = []
     previous = None
@@ -313,6 +383,16 @@ def main() -> int:
               f"versions=[{sv.get('version_min')}, "
               f"{sv.get('version_max')}]")
         failures += check_serving(serving, serving_prev)
+    kernels = _load(args.kernels, "kernels")
+    if kernels is not None:
+        kernels_prev = _load(args.kernels_previous, "kernels-previous")
+        print(f"\nkernels ({kernels.get('backend')}):")
+        for r in kernels.get("rows", []):
+            print(f"  {r['op']:>18} {r['variant']:>16}  "
+                  f"achieved {r.get('achieved_ms', 0):8.3f}ms  "
+                  f"predicted {r.get('predicted_ms', 0):8.4f}ms  "
+                  f"parity {r.get('parity_max_err', float('nan')):.2e}")
+        failures += check_kernels(kernels, kernels_prev)
     obs = _load(args.obs, "obs")
     if obs is not None:
         obs_prev = _load(args.obs_previous, "obs-previous")

@@ -1,10 +1,19 @@
 """Roofline table renderer: reads the dry-run JSON reports and emits the
-EXPERIMENTS.md §Roofline table + CSV rows for benchmarks.run."""
+EXPERIMENTS.md §Roofline table + CSV rows for benchmarks.run.
+
+``--kernels`` (or ``--smoke``) switches to the kernel-registry
+benchmark: time every (op, variant) pair the registry dispatches
+(``repro.kernels.registry``) against a roofline *prediction* from its
+flop/byte counts, check each variant's output against the
+``kernels/ref.py`` oracle, and write the ``BENCH_kernels.json`` report
+``perf_gate.py --kernels`` gates in CI."""
 
 from __future__ import annotations
 
+import argparse
 import json
 import os
+import time
 from typing import Dict, List, Optional
 
 REPORT = os.path.join(os.path.dirname(os.path.dirname(__file__)),
@@ -65,5 +74,165 @@ def markdown_table(results: Optional[List[Dict]] = None) -> str:
     return "\n".join(lines)
 
 
-if __name__ == "__main__":
+# ===================================================== kernel registry bench
+#: order-of-magnitude (flops/s, bytes/s) peaks per backend — the
+#: *prediction* side of achieved-vs-predicted.  CPU numbers are
+#: deliberately conservative: the point is a stable yardstick for the
+#: trajectory gate, not an absolute hardware claim.
+_PEAKS = {"tpu": (197e12, 819e9), "cpu": (5e10, 2e10)}
+
+
+def _kernel_cases(smoke: bool):
+    """(op, variants, make_inputs, flops, bytes) per registry op.
+
+    Flop counts are the textbook per-op numbers (2 flops per MAC);
+    byte counts assume every operand and result moves HBM<->compute
+    exactly once — the roofline lower bound a fused kernel targets.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    if smoke:
+        b, l, hq, hkv, d = 1, 128, 4, 2, 64
+        rows, dm = 256, 512
+        sb, sl, di, ds = 1, 64, 8, 16
+    else:
+        b, l, hq, hkv, d = 2, 1024, 8, 4, 128
+        rows, dm = 4096, 2048
+        sb, sl, di, ds = 2, 512, 32, 32
+
+    def attn_inputs(key):
+        ks = jax.random.split(key, 3)
+        return (jax.random.normal(ks[0], (b, l, hq, d)),
+                jax.random.normal(ks[1], (b, l, hkv, d)),
+                jax.random.normal(ks[2], (b, l, hkv, d)))
+
+    def norm_inputs(key):
+        ks = jax.random.split(key, 3)
+        return (jax.random.normal(ks[0], (rows, dm)),
+                jax.random.normal(ks[1], (rows, dm)),
+                jax.random.normal(ks[2], (dm,)))
+
+    def ssm_inputs(key):
+        ks = jax.random.split(key, 5)
+        return (jax.random.normal(ks[0], (sb, sl, di)),
+                jax.nn.softplus(jax.random.normal(ks[1], (sb, sl, di))),
+                -jax.nn.softplus(jax.random.normal(ks[2], (di, ds))),
+                jax.random.normal(ks[3], (sb, sl, ds)),
+                jax.random.normal(ks[4], (sb, sl, ds)),
+                jnp.zeros((sb, di, ds), jnp.float32))
+
+    f32 = 4
+    return [
+        ("attention", ("pallas", "xla"), attn_inputs,
+         4.0 * b * l * l * hq * d,
+         f32 * (b * l * hq * d * 2 + b * l * hkv * d * 2)),
+        ("rmsnorm", ("pallas", "xla"), norm_inputs,
+         3.0 * rows * dm,
+         f32 * (2 * rows * dm + dm)),
+        ("residual_rmsnorm", ("pallas", "xla"), norm_inputs,
+         4.0 * rows * dm,
+         f32 * (4 * rows * dm + dm)),
+        ("ssm_scan", ("pallas", "xla", "xla_associative"), ssm_inputs,
+         8.0 * sb * sl * di * ds,
+         f32 * (sb * sl * (2 * di + 2 * ds + di) + di * ds
+                + 2 * sb * di * ds)),
+    ]
+
+
+def _time_best_ms(fn, args, iters: int) -> float:
+    import jax
+    out = jax.block_until_ready(fn(*args))     # compile outside the clock
+    del out
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e3
+
+
+def kernel_bench(smoke: bool = True, iters: int = 3) -> Dict:
+    """Achieved vs roofline-predicted step time per (op, variant), plus
+    oracle parity — the ``BENCH_kernels.json`` payload."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels import ref, registry
+
+    backend = jax.default_backend()
+    peak_flops, peak_bw = _PEAKS.get(backend, _PEAKS["cpu"])
+    oracle = {"attention": lambda *a: ref.flash_attention_ref(*a),
+              "rmsnorm": lambda x, r, w: ref.rmsnorm_ref(x, w),
+              "residual_rmsnorm":
+                  lambda x, r, w: ref.residual_rmsnorm_ref(x, r, w),
+              "ssm_scan": lambda *a: ref.ssm_scan_ref(*a)}
+    call = {"attention":
+                lambda spec: lambda q, k, v: registry.attention(
+                    q, k, v, causal=True, kernels=spec),
+            "rmsnorm":
+                lambda spec: lambda x, r, w: registry.rmsnorm(
+                    x, w, kernels=spec),
+            "residual_rmsnorm":
+                lambda spec: lambda x, r, w: registry.residual_rmsnorm(
+                    x, r, w, kernels=spec),
+            "ssm_scan":
+                lambda spec: lambda *a: registry.ssm_scan(
+                    *a, chunk=32, kernels=spec)}
+
+    rows = []
+    key = jax.random.PRNGKey(0)
+    for op, variants, make_inputs, flops, bytes_ in _kernel_cases(smoke):
+        args = make_inputs(key)
+        want = jax.tree_util.tree_leaves(oracle[op](*args))
+        predicted_ms = max(flops / peak_flops, bytes_ / peak_bw) * 1e3
+        for variant in variants:
+            fn = jax.jit(call[op](f"{op}={variant}"))
+            got = jax.tree_util.tree_leaves(fn(*args))
+            err = max(float(jnp.max(jnp.abs(
+                g.astype(jnp.float32) - w.astype(jnp.float32))))
+                for g, w in zip(got, want))
+            achieved = _time_best_ms(fn, args, iters)
+            rows.append({
+                "op": op, "variant": variant,
+                "achieved_ms": achieved,
+                "predicted_ms": predicted_ms,
+                "roofline_fraction": predicted_ms / max(achieved, 1e-9),
+                "flops": flops, "bytes": bytes_,
+                "parity_max_err": err,
+                "resolved_auto":
+                    registry.resolved(op).name.lower() == variant,
+            })
+            print(f"{op:>18} {variant:>16}  achieved {achieved:8.3f}ms  "
+                  f"predicted {predicted_ms:8.4f}ms  parity {err:.2e}")
+    return {"backend": backend, "smoke": smoke, "iters": iters,
+            "peak_flops": peak_flops, "peak_bytes_per_s": peak_bw,
+            "rows": rows,
+            "derived": {"parity_ok":
+                        all(r["parity_max_err"] <= 5e-3 for r in rows)}}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--kernels", action="store_true",
+                    help="run the kernel-registry benchmark instead of "
+                         "rendering the dry-run roofline table")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes / few iters (CI; implies --kernels)")
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--out", default="BENCH_kernels.json",
+                    help="kernel benchmark report path")
+    args = ap.parse_args()
+    if args.kernels or args.smoke:
+        report = kernel_bench(smoke=args.smoke, iters=args.iters)
+        with open(args.out, "w") as f:
+            json.dump(report, f, indent=1, sort_keys=True)
+        print(f"wrote {args.out} ({len(report['rows'])} rows, "
+              f"backend={report['backend']})")
+        return
     print(markdown_table())
+
+
+if __name__ == "__main__":
+    main()

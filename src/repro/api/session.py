@@ -373,6 +373,9 @@ def _model_setup(spec: RunSpec):
             "the model zoo")
     cfg = (get_smoke_config(spec.model.arch) if spec.model.smoke
            else get_config(spec.model.arch))
+    if spec.model.kernels != cfg.kernels:
+        import dataclasses as _dc
+        cfg = _dc.replace(cfg, kernels=spec.model.kernels)
     data_cfg = DataConfig(vocab_size=cfg.vocab_size,
                           seq_len=spec.data.seq_len,
                           global_batch=spec.data.global_batch,

@@ -61,10 +61,18 @@ def _choice(value: str, field: str, choices) -> None:
 class ModelSpec:
     """What to train.  ``arch`` is a ``repro.configs`` key (dashed CLI
     id) or ``'custom'`` when params/step come from build-time
-    overrides; ``smoke`` selects the reduced config."""
+    overrides; ``smoke`` selects the reduced config.
+
+    ``kernels`` selects worker-step kernel variants via the dispatch
+    registry (``repro.kernels.registry``): ``'auto'`` (per-backend
+    default — Pallas on TPU, the XLA formulations elsewhere), a bare
+    variant applied to every op (``'pallas'``/``'xla'``), or
+    comma-separated per-op overrides such as
+    ``'attention=pallas,ssm_scan=xla_associative'``."""
 
     arch: str = "xlstm-125m"
     smoke: bool = True
+    kernels: str = "auto"
 
     def __post_init__(self):
         _require(bool(self.arch), "model.arch must be a non-empty name")
@@ -74,6 +82,13 @@ class ModelSpec:
                      f"model.arch={self.arch!r} is not a known "
                      f"architecture (have {arch_names()} or "
                      f"{CUSTOM_ARCH!r} for build-time overrides)")
+        # jax-free half of the kernel registry: validates the grammar
+        # and the per-op variant tables without importing jax
+        from repro.kernels.interface import parse_kernels
+        try:
+            parse_kernels(self.kernels)
+        except ValueError as e:
+            raise SpecError(str(e)) from e
 
 
 @dataclasses.dataclass(frozen=True)

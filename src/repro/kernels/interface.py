@@ -1,0 +1,134 @@
+"""Kernel dispatch interface: ops, variants, and spec-string parsing.
+
+This module is the jax-free half of the kernel registry (in the style
+of ddrous/mamba-jax's ``KernelType`` interface): it defines WHICH hot
+ops exist, WHICH variants each op implements, and how the validated
+``model.kernels`` spec string maps onto them.  The jax-heavy half —
+the actual enum-dispatched implementations with their ``custom_vjp``
+pairings — lives in ``repro.kernels.registry``.
+
+The spec-string grammar (the ``model.kernels`` knob):
+
+    "auto"                          per-backend default for every op
+    "pallas" / "xla"                one variant for every op
+    "attention=pallas,ssm_scan=xla_associative"
+                                    per-op overrides (unlisted ops stay
+                                    on the global default, "auto" unless
+                                    a bare token set one)
+    "xla,ssm_scan=pallas"           bare token + overrides compose
+
+``"auto"`` resolves per backend: every op takes its Pallas kernel on
+TPU; off-TPU the XLA variants win (Pallas interpret mode is a
+correctness harness, not a fast path), with ``ssm_scan`` taking the
+chunked associative scan — the historical model code paths exactly.
+
+Importing this module never imports jax, so the spec layer
+(``repro.api.spec``) can validate ``model.kernels`` in its
+import-light ``--dump-schema`` world.
+"""
+
+from __future__ import annotations
+
+import enum
+from typing import Dict
+
+
+class KernelType(enum.Enum):
+    PALLAS = 0              # Pallas kernel (interpret=True off-TPU)
+    XLA = 1                 # plain-jnp reference implementation
+    XLA_ASSOCIATIVE = 2     # associative-scan formulation (ssm_scan)
+
+
+#: spec-string token -> enum member.
+KernelTypeMapping: Dict[str, KernelType] = {
+    "pallas": KernelType.PALLAS,
+    "xla": KernelType.XLA,
+    "xla_associative": KernelType.XLA_ASSOCIATIVE,
+}
+
+AUTO = "auto"
+
+#: Registry surface: op name -> the variant tokens it implements.
+OPS: Dict[str, tuple] = {
+    "attention": ("pallas", "xla"),
+    "rmsnorm": ("pallas", "xla"),
+    "residual_rmsnorm": ("pallas", "xla"),
+    "ssm_scan": ("pallas", "xla", "xla_associative"),
+}
+
+#: "auto" resolution per backend.  TPU: Pallas everywhere (the native
+#: lowerings).  Anything else: the XLA formulations the models always
+#: ran (interpret-mode Pallas stays a test/bench harness off-TPU).
+_AUTO_TPU: Dict[str, str] = {op: "pallas" for op in OPS}
+_AUTO_OTHER: Dict[str, str] = {
+    "attention": "xla",
+    "rmsnorm": "xla",
+    "residual_rmsnorm": "xla",
+    "ssm_scan": "xla_associative",
+}
+
+
+def valid_overrides() -> str:
+    """Human-readable per-op override table for error messages."""
+    return ", ".join(f"{op}={{{'|'.join(vs)}}}" for op, vs in OPS.items())
+
+
+def parse_kernels(spec: str) -> Dict[str, str]:
+    """Parse a ``model.kernels`` string into {op: variant-or-'auto'}.
+
+    Returns a FULL mapping (every op present).  Raises ``ValueError``
+    with a message listing the valid per-op overrides on any unknown
+    op, unknown variant, or a variant an op does not implement.
+    """
+    if not isinstance(spec, str) or not spec.strip():
+        raise ValueError(
+            "model.kernels must be a non-empty string: 'auto', a "
+            f"variant ({'/'.join(KernelTypeMapping)}), or per-op "
+            f"overrides ({valid_overrides()})")
+    chosen = {op: AUTO for op in OPS}
+    for token in spec.split(","):
+        token = token.strip()
+        if not token:
+            raise ValueError(
+                f"model.kernels={spec!r} has an empty entry; valid "
+                f"per-op overrides: {valid_overrides()}")
+        if "=" not in token:
+            if token != AUTO and token not in KernelTypeMapping:
+                raise ValueError(
+                    f"model.kernels variant {token!r} is unknown; use "
+                    f"'auto', {'/'.join(KernelTypeMapping)}, or per-op "
+                    f"overrides ({valid_overrides()})")
+            for op, variants in OPS.items():
+                if token == AUTO or token in variants:
+                    chosen[op] = token
+                else:
+                    raise ValueError(
+                        f"model.kernels={token!r} does not apply to "
+                        f"every op ({op} implements only "
+                        f"{'/'.join(variants)}); use per-op overrides: "
+                        f"{valid_overrides()}")
+            continue
+        op, _, variant = token.partition("=")
+        op, variant = op.strip(), variant.strip()
+        if op not in OPS:
+            raise ValueError(
+                f"model.kernels names unknown op {op!r}; valid per-op "
+                f"overrides: {valid_overrides()}")
+        if variant != AUTO and variant not in OPS[op]:
+            raise ValueError(
+                f"model.kernels: op {op!r} has no variant {variant!r} "
+                f"(it implements {'/'.join(OPS[op])}); valid per-op "
+                f"overrides: {valid_overrides()}")
+        chosen[op] = variant
+    return chosen
+
+
+def resolve(spec: str, op: str, *, tpu: bool) -> KernelType:
+    """The variant a spec string selects for ``op`` on this backend."""
+    if op not in OPS:
+        raise ValueError(f"unknown registry op {op!r}; registry ops: "
+                         f"{sorted(OPS)}")
+    variant = parse_kernels(spec)[op]
+    if variant == AUTO:
+        variant = (_AUTO_TPU if tpu else _AUTO_OTHER)[op]
+    return KernelTypeMapping[variant]

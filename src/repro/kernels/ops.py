@@ -1,10 +1,18 @@
-"""Jit'd public wrappers around the Pallas kernels.
+"""Jit'd public wrappers around the PS-path Pallas kernels.
 
-On this container (CPU) the kernels execute in ``interpret=True`` mode
-for correctness validation; on TPU the same calls compile natively.  The
+These wrappers fall back cleanly on every backend: off TPU the kernels
+execute in ``interpret=True`` mode (same code path, CPU semantics), and
+``flash_attention`` additionally drops to the jnp reference when the
+sequence lengths do not divide its block size — callers never see a
+TPU-only error.  On TPU the same calls compile natively.  The
 flash-attention wrapper adds a ``jax.custom_vjp`` whose backward
 recomputes through the jnp reference — forward-pass memory wins are the
 kernel's contribution, the bwd kernel is future work (DESIGN.md §7).
+
+The worker-step ops (attention / rmsnorm / residual_rmsnorm / ssm_scan)
+have moved behind the enum-dispatched ``repro.kernels.registry``; the
+wrappers here serve the server/compression path (fused update, wire
+codecs) plus direct kernel experimentation.
 """
 
 from __future__ import annotations
@@ -31,8 +39,15 @@ def on_tpu() -> bool:
 def flash_attention(q, k, v, causal: bool = True,
                     window: Optional[int] = None,
                     block: int = 128):
+    lq, lk = q.shape[1], k.shape[1]
+    if lq % min(block, lq) or lk % min(block, lk):
+        # block does not tile the sequence: clean reference fallback
+        # (same math, same vjp) instead of the kernel's grid error
+        return _ref.flash_attention_ref(q, k, v, causal=causal,
+                                        window=window)
     return _fa.flash_attention_fwd(q, k, v, causal=causal, window=window,
-                                   block_q=block, block_k=block,
+                                   block_q=min(block, lq),
+                                   block_k=min(block, lk),
                                    interpret=not on_tpu())
 
 

@@ -52,6 +52,52 @@ def rmsnorm_ref(x: jax.Array, weight: jax.Array,
             * weight.astype(jnp.float32)).astype(x.dtype)
 
 
+def residual_rmsnorm_ref(x: jax.Array, res: jax.Array, weight: jax.Array,
+                         eps: float = 1e-6) -> Tuple[jax.Array, jax.Array]:
+    """Oracle for ``residual_rmsnorm.residual_rmsnorm``: the pre-norm
+    block glue ``s = x + res; (s, rms_norm(s) * weight)`` with the sum
+    and the reduction both in f32, outputs cast back to x's dtype."""
+    sf = x.astype(jnp.float32) + res.astype(jnp.float32)
+    var = jnp.mean(sf * sf, axis=-1, keepdims=True)
+    normed = sf * jax.lax.rsqrt(var + eps) * weight.astype(jnp.float32)
+    return sf.astype(x.dtype), normed.astype(x.dtype)
+
+
+def ssm_scan_ref(u: jax.Array, delta: jax.Array, a: jax.Array,
+                 bmat: jax.Array, cmat: jax.Array, h0: jax.Array,
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Oracle for the selective scan (Mamba S6): the literal sequential
+    recurrence
+
+        h_t = exp(delta_t * A) * h_{t-1} + delta_t * B_t * u_t
+        y_t = C_t . h_t
+
+    u/delta (b, l, di); a (di, ds); bmat/cmat (b, l, ds); h0 (b, di, ds).
+    Returns (y (b, l, di) in u's dtype, h_last (b, di, ds) f32).  All
+    math in f32 — this is the definition both the Pallas kernel and the
+    chunked associative-scan formulation must reproduce.
+    """
+    uf = u.astype(jnp.float32)
+    df = delta.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+    bf = bmat.astype(jnp.float32)
+    cf = cmat.astype(jnp.float32)
+
+    def step(h, xs):
+        ut, dt, bt, ct = xs                # (b, di), (b, di), (b, ds) x2
+        abar = jnp.exp(dt[..., None] * af[None])           # (b, di, ds)
+        bbar = dt[..., None] * bt[:, None, :] * ut[..., None]
+        h = abar * h + bbar
+        y = jnp.einsum("bds,bs->bd", h, ct)
+        return h, y
+
+    h_last, ys = jax.lax.scan(
+        step, h0.astype(jnp.float32),
+        (uf.transpose(1, 0, 2), df.transpose(1, 0, 2),
+         bf.transpose(1, 0, 2), cf.transpose(1, 0, 2)))
+    return ys.transpose(1, 0, 2).astype(u.dtype), h_last
+
+
 def fused_update_ref(p: jax.Array, m: jax.Array, g: jax.Array, *,
                      lr: float, beta: float,
                      scale: float = 1.0) -> Tuple[jax.Array, jax.Array]:

@@ -1,0 +1,98 @@
+"""Selective-scan (Mamba S6) recurrence as a Pallas TPU kernel.
+
+    h_t = exp(delta_t * A) * h_{t-1} + delta_t * B_t * u_t
+    y_t = C_t . h_t
+
+The XLA formulations materialize the discretized (l, d_inner, d_state)
+Abar/Bbar tensors in HBM before scanning them; this kernel streams one
+chunk of (u, delta, B, C) into VMEM, discretizes per-timestep on the
+fly, and carries the (d_inner, d_state) hidden state in a VMEM scratch
+across chunk steps — the state tensor never round-trips HBM and the
+per-step working set is O(d_inner * d_state) instead of
+O(l * d_inner * d_state).
+
+Grid: (batch, l / chunk) with the chunk axis innermost — TPU executes
+it sequentially, which is exactly the dependence order of the scan (and
+interpret mode preserves the same order on CPU).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssm_scan_kernel(u_ref, delta_ref, a_ref, b_ref, c_ref, h0_ref,
+                     y_ref, hlast_ref, h_ref, *, chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = h0_ref[...].astype(jnp.float32)
+
+    a = a_ref[...].astype(jnp.float32)                  # (di, ds)
+
+    def step(t, h):
+        dt = pl.load(delta_ref, (pl.ds(t, 1), slice(None))
+                     ).astype(jnp.float32).reshape(-1, 1)        # (di, 1)
+        ut = pl.load(u_ref, (pl.ds(t, 1), slice(None))
+                     ).astype(jnp.float32).reshape(-1, 1)        # (di, 1)
+        bt = pl.load(b_ref, (pl.ds(t, 1), slice(None))
+                     ).astype(jnp.float32).reshape(1, -1)        # (1, ds)
+        ct = pl.load(c_ref, (pl.ds(t, 1), slice(None))
+                     ).astype(jnp.float32).reshape(1, -1)        # (1, ds)
+        h = jnp.exp(dt * a) * h + dt * bt * ut          # (di, ds)
+        yt = jnp.sum(h * ct, axis=1)                    # (di,)
+        pl.store(y_ref, (pl.ds(t, 1), slice(None)),
+                 yt.reshape(1, -1).astype(y_ref.dtype))
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, step, h_ref[...])
+    h_ref[...] = h
+    hlast_ref[...] = h.astype(hlast_ref.dtype)
+
+
+def ssm_scan(u: jax.Array, delta: jax.Array, a: jax.Array,
+             bmat: jax.Array, cmat: jax.Array, h0: jax.Array, *,
+             chunk: int = 128, interpret: bool = False
+             ) -> Tuple[jax.Array, jax.Array]:
+    """u/delta (b, l, di); a (di, ds); bmat/cmat (b, l, ds);
+    h0 (b, di, ds) -> (y (b, l, di) in u's dtype, h_last (b, di, ds) f32).
+    """
+    b, l, di = u.shape
+    ds = a.shape[-1]
+    chunk = min(chunk, l) if chunk > 0 else l
+    if l % chunk:
+        chunk = l
+    grid = (b, l // chunk)
+
+    y, h_last = pl.pallas_call(
+        functools.partial(_ssm_scan_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, chunk, di), lambda bi, ci: (bi, ci, 0)),
+            pl.BlockSpec((None, chunk, di), lambda bi, ci: (bi, ci, 0)),
+            pl.BlockSpec((di, ds), lambda bi, ci: (0, 0)),
+            pl.BlockSpec((None, chunk, ds), lambda bi, ci: (bi, ci, 0)),
+            pl.BlockSpec((None, chunk, ds), lambda bi, ci: (bi, ci, 0)),
+            pl.BlockSpec((None, di, ds), lambda bi, ci: (bi, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, chunk, di), lambda bi, ci: (bi, ci, 0)),
+            pl.BlockSpec((None, di, ds), lambda bi, ci: (bi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, l, di), u.dtype),
+            jax.ShapeDtypeStruct((b, di, ds), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((di, ds), jnp.float32),   # carried hidden state
+        ],
+        interpret=interpret,
+    )(u, delta, a, bmat, cmat, h0)
+    return y, h_last

@@ -45,6 +45,7 @@ class WorkerTask:
     n_shards: int             # parent's ShardPlan arity (layout must match)
     n_iterations: int
     smoke: bool = True
+    kernels: str = "auto"     # model.kernels dispatch string (registry)
     seq_len: int = 64
     global_batch: int = 8
     data_seed: int = 0        # worker w streams shard seed data_seed+1+w
@@ -80,6 +81,7 @@ class WorkerTask:
                    n_shards=max(1, spec.ps.shards),
                    n_iterations=n_iterations,
                    smoke=spec.model.smoke,
+                   kernels=spec.model.kernels,
                    seq_len=spec.data.seq_len,
                    global_batch=spec.data.global_batch,
                    data_seed=spec.data.seed,
@@ -126,6 +128,8 @@ def _worker_main(task: Dict[str, Any], address, worker_id: int,
 
         cfg = (get_smoke_config(task["arch"]) if task["smoke"]
                else get_config(task["arch"]))
+        if task.get("kernels", "auto") != cfg.kernels:
+            cfg = dataclasses.replace(cfg, kernels=task["kernels"])
         data_cfg = DataConfig(vocab_size=cfg.vocab_size,
                               seq_len=task["seq_len"],
                               global_batch=task["global_batch"],

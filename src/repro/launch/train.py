@@ -233,6 +233,7 @@ def train_ps(cfg, data_cfg: DataConfig, *, sync: str, n_steps: int,
 
 # ------------------------------------------------------- flags -> spec
 def spec_from_flags(*, arch: str, smoke: bool = True, sync: str = "dssp",
+                    model_kernels: str = "auto",
                     seq: int = 64, batch: int = 8,
                     seed: int = 0, lr: float = 3e-3,
                     optimizer: Optional[str] = None,
@@ -287,7 +288,7 @@ def spec_from_flags(*, arch: str, smoke: bool = True, sync: str = "dssp",
         ps = api.ServerSpec(kind="none", shards=0, workers=ps_workers)
         opt = api.OptimizerSpec(name=optimizer, lr=lr)
     return api.RunSpec(
-        model=api.ModelSpec(arch=arch, smoke=smoke),
+        model=api.ModelSpec(arch=arch, smoke=smoke, kernels=model_kernels),
         data=api.DataSpec(seq_len=seq, global_batch=batch, seed=seed),
         optimizer=opt,
         sync=api.SyncSpec(mode=sync, staleness=max(s_lower, 1),
@@ -321,6 +322,12 @@ def main() -> None:
     ap.add_argument("--sync", default="dssp",
                     choices=["bsp", "ssp", "dssp", "asp"],
                     help="asp is valid only with --ps-shards (PS layer)")
+    ap.add_argument("--model-kernels", default="auto", metavar="SPEC",
+                    help="worker-step kernel dispatch (repro.kernels."
+                         "registry): 'auto' picks per backend; a bare "
+                         "variant ('pallas'/'xla') applies to every op; "
+                         "per-op overrides compose as e.g. "
+                         "'attention=pallas,ssm_scan=xla_associative'")
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=64)
@@ -396,6 +403,7 @@ def main() -> None:
             ("--arch", "xlstm-125m", args.arch),
             ("--full", True, args.smoke),
             ("--sync", "dssp", args.sync),
+            ("--model-kernels", "auto", args.model_kernels),
             ("--batch", 8, args.batch),
             ("--seq", 64, args.seq),
             ("--lr", 3e-3, args.lr),
@@ -424,6 +432,7 @@ def main() -> None:
     else:
         spec = spec_from_flags(
             arch=args.arch, smoke=args.smoke, sync=args.sync,
+            model_kernels=args.model_kernels,
             seq=args.seq, batch=args.batch, lr=args.lr,
             optimizer=args.optimizer, s_lower=args.s_lower,
             s_upper=args.s_upper, compress=args.compress,

@@ -66,6 +66,10 @@ class ModelConfig:
     # optimizer selection for the training step (adafactor for the
     # largest models so optimizer state fits per-chip HBM; see DESIGN.md)
     optimizer: str = "adamw"
+    # kernel variant selection for the worker-step hot ops, dispatched by
+    # repro.kernels.registry ("auto" | variant | per-op overrides, see
+    # repro.kernels.interface); validated upstream by api.spec
+    kernels: str = "auto"
     # how the 'model' mesh axis is used: "tp" (tensor/expert parallel,
     # default) or "dp" (extra data parallelism + ZeRO param/opt sharding
     # -- the right choice for small models where 16-way TP is pure

@@ -78,10 +78,11 @@ def _slot_body(cfg: ModelConfig, mixer: str, ffn: str, x, w, mask):
     h = L.apply_norm(cfg, x, w["mixer_norm"])
     if mixer == "attn":
         cos = sin = jnp.zeros(())            # rope off for jamba
-        x = x + L.attention_block(cfg, h, w["attn"], cos, sin, mask)
+        mix = L.attention_block(cfg, h, w["attn"], cos, sin, mask)
     else:
-        x = x + ssm.mamba_block(cfg, h, w["mamba"])
-    h = L.apply_norm(cfg, x, w["ffn_norm"])
+        mix = ssm.mamba_block(cfg, h, w["mamba"])
+    # fused residual-add + norm via the kernel registry
+    x, h = L.residual_apply_norm(cfg, mix, x, w["ffn_norm"])
     if ffn == "moe":
         out, aux = moe_lib.moe_block(cfg, h, w["moe"])
     else:
@@ -119,7 +120,7 @@ def forward(cfg: ModelConfig, params: Dict[str, Any], tokens: jax.Array,
 
     x, auxs = jax.lax.scan(step, x, params["slots"],
                            unroll=cfg.scan_unroll)
-    x = L.rms_norm(x, params["final_norm"]["scale"])
+    x = L.rms_norm(x, params["final_norm"]["scale"], kernels=cfg.kernels)
     table = params["embed"] if cfg.tie_embeddings else params["unembed"]
     return L.unembed(x, table, cfg.vocab_size), jnp.sum(auxs)
 
@@ -208,7 +209,7 @@ def forward_decode(cfg: ModelConfig, params: Dict[str, Any],
           state["mamba"]["conv"], state["mamba"]["h"])
     x, (nk, nv, nconv, nh) = jax.lax.scan(step, x, xs,
                                           unroll=cfg.scan_unroll)
-    x = L.rms_norm(x, params["final_norm"]["scale"])
+    x = L.rms_norm(x, params["final_norm"]["scale"], kernels=cfg.kernels)
     table = params["embed"] if cfg.tie_embeddings else params["unembed"]
     new_state = {"kv": {"k": nk, "v": nv},
                  "mamba": {"conv": nconv, "h": nh}}

@@ -1,5 +1,10 @@
-"""Shared neural building blocks (pure JAX; Pallas kernels are swapped in
-through ``repro.kernels.ops`` where enabled).
+"""Shared neural building blocks.
+
+The worker-step hot ops (attention, RMSNorm, fused residual+RMSNorm)
+route through ``repro.kernels.registry`` — enum dispatch over
+Pallas/XLA variants selected by ``cfg.kernels`` — on the unsharded
+path; the mesh-sharded SP/TP formulations below stay XLA (their layout
+pins are the point, see EXPERIMENTS.md §Perf).
 
 Conventions:
   activations   (batch, seq, d_model)                 bf16/f32
@@ -16,6 +21,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import registry as K
 from repro.models.config import ModelConfig
 from repro.models.sharding import shard
 
@@ -23,11 +29,10 @@ NEG_INF = -1e30  # large-but-finite: -inf breaks softmax rows that are fully mas
 
 
 # ----------------------------------------------------------------- norms
-def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
-    xf = x.astype(jnp.float32)
-    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
-    out = xf * jax.lax.rsqrt(var + eps)
-    return (out * weight.astype(jnp.float32)).astype(x.dtype)
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6,
+             kernels: str = "auto") -> jax.Array:
+    """Registry-dispatched RMSNorm (``kernels`` = ``cfg.kernels``)."""
+    return K.rmsnorm(x, weight, eps=eps, kernels=kernels)
 
 
 def layer_norm(x: jax.Array, weight: jax.Array, bias: jax.Array,
@@ -42,8 +47,22 @@ def layer_norm(x: jax.Array, weight: jax.Array, bias: jax.Array,
 
 def apply_norm(cfg: ModelConfig, x: jax.Array, w: Dict[str, jax.Array]) -> jax.Array:
     if cfg.norm == "rmsnorm":
-        return rms_norm(x, w["scale"])
+        return rms_norm(x, w["scale"], kernels=cfg.kernels)
     return layer_norm(x, w["scale"], w["bias"])
+
+
+def residual_apply_norm(cfg: ModelConfig, delta: jax.Array, x: jax.Array,
+                        w: Dict[str, jax.Array],
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """Pre-norm block glue: ``(x + delta, norm(x + delta))``.
+
+    For rmsnorm this is the registry's fused residual+RMSNorm op (one
+    VMEM pass on the Pallas variant); layernorm keeps the unfused form.
+    """
+    if cfg.norm == "rmsnorm":
+        return K.residual_rmsnorm(delta, x, w["scale"], kernels=cfg.kernels)
+    s = x + delta
+    return s, layer_norm(s, w["scale"], w["bias"])
 
 
 # ----------------------------------------------------------------- rotary
@@ -151,15 +170,23 @@ def _shard_scores(s: jax.Array) -> jax.Array:
 
 
 def attention(cfg: ModelConfig, q: jax.Array, k: jax.Array, v: jax.Array,
-              *, mask: jax.Array) -> jax.Array:
-    """Grouped-query attention (XLA path; the Pallas flash kernel replaces
-    this on TPU — kernels/flash_attention.py).
+              *, mask: jax.Array,
+              causal_structure: Optional[Tuple[bool, Optional[int]]] = None,
+              ) -> jax.Array:
+    """Grouped-query attention.
 
     q (b, lq, hq, d); k/v (b, lk, hkv, d); mask (lq, lk) or (b, lq, lk).
-    Returns (b, lq, hq, d).
+    Returns (b, lq, hq, d).  ``causal_structure`` = (causal, window)
+    asserts that ``mask`` is exactly ``causal_window_mask(lq, lk,
+    q_offset=lk-lq, window=window)`` — the structured form the kernel
+    registry can dispatch on.
 
-    Three paths:
-      * decode (lq == 1): grouped (hkv, g) form, tiny scores;
+    Four paths:
+      * decode (lq == 1): grouped (hkv, g) form, tiny scores (XLA);
+      * unsharded (no mesh) with a structured mask: dispatched through
+        ``repro.kernels.registry.attention`` per ``cfg.kernels`` — the
+        Pallas flash kernel (kernels/flash_attention.py, native on TPU,
+        interpret mode elsewhere) or the quadratic XLA formulation;
       * SP mode (sequence-parallel attention — the measured default,
         EXPERIMENTS.md §Perf it.9): queries/scores/outputs stay
         seq-sharded over 'model', heads unsharded, K/V gathered to full
@@ -167,8 +194,10 @@ def attention(cfg: ModelConfig, q: jax.Array, k: jax.Array, v: jax.Array,
         wo psum;
       * TP mode: KV broadcast to hq heads so scores shard on heads; when
         ``cfg.attn_chunk`` divides lq, queries go through a lax.scan in
-        chunks — same math, (chunk × lk) score blocks (the
-        flash-attention memory insight minus the online softmax).
+        chunks — same math with (chunk × lk) score blocks bounding live
+        memory, but NOT an online softmax: each chunk still materializes
+        its full score rows (that fusion is the registry's Pallas flash
+        variant, which the sharded paths do not use).
     """
     b, lq, hq, d = q.shape
     hkv = k.shape[2]
@@ -176,6 +205,11 @@ def attention(cfg: ModelConfig, q: jax.Array, k: jax.Array, v: jax.Array,
     if lq == 1:
         out = _attention_grouped(q.reshape(b, lq, hkv, g, d), k, v, mask)
         return out.reshape(b, lq, hq, d)
+
+    if causal_structure is not None and not _has_mesh() and mask.ndim == 2:
+        causal, window = causal_structure
+        return K.attention(q, k, v, causal=causal, window=window,
+                           kernels=cfg.kernels)
 
     if _sp_mode():
         # k/v gathered over l (they arrive seq-sharded), heads unsharded
@@ -219,6 +253,12 @@ def _sp_mode() -> bool:
     return r is not None and getattr(r, "attn_mode", "tp") == "sp"
 
 
+def _has_mesh() -> bool:
+    from repro.models.sharding import current_rules
+    r = current_rules()
+    return r is not None and r.mesh is not None
+
+
 def shard_attn_q(x: jax.Array) -> jax.Array:
     """q (b, l, hq, d): SP mode -> seq-sharded; TP mode -> heads over
     'model' when divisible, else fall back to sequence(-query) sharding
@@ -254,8 +294,11 @@ def attention_block(cfg: ModelConfig, x: jax.Array, w: Dict[str, Any],
                     mask: jax.Array, *, collect_kv: bool = False):
     """Full self-attention sublayer (training / prefill path).
 
-    With ``collect_kv`` also returns the post-rotary (k, v) — the prefill
-    path stacks them into the serving KV cache."""
+    ``mask`` contract: every caller passes ``causal_window_mask(l, l,
+    window=cfg.sliding_window)`` — asserted structurally to
+    ``attention`` so the kernel registry can dispatch the flash
+    variant.  With ``collect_kv`` also returns the post-rotary (k, v) —
+    the prefill path stacks them into the serving KV cache."""
     b, l, _ = x.shape
     q = jnp.einsum("bld,dhk->blhk", x, w["wq"])
     k = jnp.einsum("bld,dhk->blhk", x, w["wk"])
@@ -265,13 +308,14 @@ def attention_block(cfg: ModelConfig, x: jax.Array, w: Dict[str, Any],
         k = k + w["bk"]
         v = v + w["bv"]
     if cfg.qk_norm:
-        q = rms_norm(q, w["q_norm"])
-        k = rms_norm(k, w["k_norm"])
+        q = rms_norm(q, w["q_norm"], kernels=cfg.kernels)
+        k = rms_norm(k, w["k_norm"], kernels=cfg.kernels)
     if cfg.use_rope:
         q = apply_rotary(q, cos, sin)
         k = apply_rotary(k, cos, sin)
     q = shard_attn_q(q)
-    out = attention(cfg, q, k, v, mask=mask)
+    out = attention(cfg, q, k, v, mask=mask,
+                    causal_structure=(True, cfg.sliding_window))
     out = jnp.einsum("blhk,hkd->bld", out, w["wo"])
     out = shard(out, "batch", None, None)
     if collect_kv:
@@ -310,8 +354,8 @@ def decode_attention_block(cfg: ModelConfig, x: jax.Array, w: Dict[str, Any],
     if cfg.qkv_bias:
         q, k, v = q + w["bq"], k + w["bk"], v + w["bv"]
     if cfg.qk_norm:
-        q = rms_norm(q, w["q_norm"])
-        k = rms_norm(k, w["k_norm"])
+        q = rms_norm(q, w["q_norm"], kernels=cfg.kernels)
+        k = rms_norm(k, w["k_norm"], kernels=cfg.kernels)
     if cfg.use_rope:
         pos = jnp.full((b, 1), index, jnp.int32)
         cos, sin = rotary_embedding(pos, cfg.resolved_head_dim,

@@ -4,10 +4,13 @@ TPU adaptation notes (see DESIGN.md §3):
   * mLSTM trains with the stabilized *parallel* (quadratic) form — an
     attention-shaped einsum that maps onto the MXU — and decodes with the
     O(1) matrix-memory recurrence.
-  * Mamba's selective scan uses a *chunked associative scan*: parallel
-    within chunks (``jax.lax.associative_scan``), sequential across chunk
-    boundaries (``lax.scan`` carry), which bounds the materialized state
-    to (chunk, d_inner, d_state) instead of (L, d_inner, d_state).
+  * Mamba's selective scan goes through ``repro.kernels.registry.ssm_scan``
+    (dispatched by ``cfg.kernels``): the Pallas kernel streams the state
+    through VMEM on TPU; the XLA_ASSOCIATIVE variant is the *chunked
+    associative scan* — parallel within chunks
+    (``jax.lax.associative_scan``), sequential across chunk boundaries
+    (``lax.scan`` carry) — which bounds the materialized state to
+    (chunk, d_inner, d_state) instead of (L, d_inner, d_state).
   * sLSTM is inherently sequential (true recurrence on the hidden state);
     it runs as ``lax.scan`` over time.  This does not parallelize over
     the sequence — an acknowledged property of the architecture, noted in
@@ -27,6 +30,7 @@ from typing import Any, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import registry as K
 from repro.models.config import ModelConfig
 from repro.models.params import ParamDef
 from repro.models.sharding import shard
@@ -237,45 +241,6 @@ def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
     return y.astype(x.dtype), new_tail
 
 
-def _ssm_chunked(u: jax.Array, delta: jax.Array, a: jax.Array, bmat: jax.Array,
-                 cmat: jax.Array, h0: jax.Array, chunk: int,
-                 ) -> Tuple[jax.Array, jax.Array]:
-    """Selective scan h_t = Ā_t h_{t-1} + B̄_t u_t ; y_t = C_t·h_t.
-
-    u/delta (b, l, di); a (di, ds); b/c (b, l, ds); h0 (b, di, ds).
-    Chunked: associative scan within chunks, carry across chunks.
-    """
-    b, l, di = u.shape
-    ds = a.shape[-1]
-    da = delta[..., None] * a[None, None]                       # (b,l,di,ds)
-    abar = jnp.exp(da)
-    bbar = delta[..., None] * bmat[:, :, None, :] * u[..., None]
-
-    nc = max(1, l // chunk)
-    abar = abar.reshape(b, nc, chunk, di, ds)
-    bbar = bbar.reshape(b, nc, chunk, di, ds)
-    cseq = cmat.reshape(b, nc, chunk, ds)
-
-    def combine(e1, e2):
-        a1, b1 = e1
-        a2, b2 = e2
-        return a2 * a1, a2 * b1 + b2
-
-    def chunk_step(h, xs):
-        ac, bc, cc = xs                       # (b, chunk, di, ds), ..., (b, chunk, ds)
-        acc_a, acc_b = jax.lax.associative_scan(combine, (ac, bc), axis=1)
-        hs = acc_a * h[:, None] + acc_b       # (b, chunk, di, ds)
-        y = jnp.einsum("bcds,bcs->bcd", hs, cc)
-        return hs[:, -1], y
-
-    h_last, ys = jax.lax.scan(
-        chunk_step, h0,
-        (abar.transpose(1, 0, 2, 3, 4), bbar.transpose(1, 0, 2, 3, 4),
-         cseq.transpose(1, 0, 2, 3)))
-    y = ys.transpose(1, 0, 2, 3).reshape(b, l, di)
-    return y, h_last
-
-
 def mamba_block(cfg: ModelConfig, x: jax.Array, w: Dict[str, Any],
                 ) -> jax.Array:
     b, l, d = x.shape
@@ -293,11 +258,11 @@ def mamba_block(cfg: ModelConfig, x: jax.Array, w: Dict[str, Any],
         + w["dt_bias"].astype(jnp.float32))
     a = -jnp.exp(w["a_log"].astype(jnp.float32))
     h0 = jnp.zeros((b, di, ds), jnp.float32)
-    chunk = min(cfg.mamba_chunk, l) if cfg.mamba_chunk > 0 else l
-    if l % chunk:
-        chunk = l
-    y, _ = _ssm_chunked(xc.astype(jnp.float32), delta, a, bmat, cmat, h0,
-                        chunk)
+    chunk = cfg.mamba_chunk if cfg.mamba_chunk > 0 else l
+    # selective scan via the kernel registry (Pallas on TPU; chunked
+    # associative scan as the XLA formulation — see kernels/registry.py)
+    y, _ = K.ssm_scan(xc.astype(jnp.float32), delta, a, bmat, cmat, h0,
+                      chunk=chunk, kernels=cfg.kernels)
     y = y + xc.astype(jnp.float32) * w["d_skip"].astype(jnp.float32)
     y = (y.astype(x.dtype)
          * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype))
@@ -383,7 +348,8 @@ def xlstm_forward(cfg: ModelConfig, params: Dict[str, Any],
         blk = mlstm_block if kind == "mlstm" else slstm_block
 
         def layer_fn(y, w_=w, nrm_=nrm, blk_=blk):
-            return y + blk_(cfg, L.rms_norm(y, nrm_["scale"]), w_)
+            return y + blk_(cfg, L.rms_norm(y, nrm_["scale"],
+                                            kernels=cfg.kernels), w_)
 
         if cfg.remat == "full":
             # per-layer remat: the mLSTM parallel form materializes an
@@ -391,7 +357,7 @@ def xlstm_forward(cfg: ModelConfig, params: Dict[str, Any],
             # unrolled 12-layer backward keeps all of them live
             layer_fn = jax.checkpoint(layer_fn)
         x = layer_fn(x)
-    x = L.rms_norm(x, params["final_norm"]["scale"])
+    x = L.rms_norm(x, params["final_norm"]["scale"], kernels=cfg.kernels)
     table = params["embed"] if cfg.tie_embeddings else params["unembed"]
     return L.unembed(x, table, cfg.vocab_size), jnp.zeros((), jnp.float32)
 
@@ -425,7 +391,7 @@ def xlstm_decode(cfg: ModelConfig, params: Dict[str, Any], token: jax.Array,
     for kind, j in _xlstm_layer_plan(cfg):
         w = _slice_layer(params[kind], j)
         nrm = _slice_layer(params[f"{kind}_norm"], j)
-        h = L.rms_norm(x, nrm["scale"])
+        h = L.rms_norm(x, nrm["scale"], kernels=cfg.kernels)
         st = _slice_layer(state[kind], j)
         if kind == "mlstm":
             out, st2 = mlstm_decode(cfg, h, w, st)
@@ -434,6 +400,6 @@ def xlstm_decode(cfg: ModelConfig, params: Dict[str, Any], token: jax.Array,
         x = x + out
         for key, val in st2.items():
             new_state[kind][key] = new_state[kind][key].at[j].set(val)
-    x = L.rms_norm(x, params["final_norm"]["scale"])
+    x = L.rms_norm(x, params["final_norm"]["scale"], kernels=cfg.kernels)
     table = params["embed"] if cfg.tie_embeddings else params["unembed"]
     return L.unembed(x, table, cfg.vocab_size), new_state

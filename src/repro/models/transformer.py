@@ -124,8 +124,9 @@ def _layer(cfg: ModelConfig, x: jax.Array, w: Dict[str, Any],
     kv = None
     if collect_kv:
         att, kv = att
-    x = x + att
-    h = L.apply_norm(cfg, x, w["mlp_norm"])
+    # fused residual-add + norm (registry residual_rmsnorm): one pass
+    # produces the updated stream AND its normed view for the MLP
+    x, h = L.residual_apply_norm(cfg, att, x, w["mlp_norm"])
     if "moe" in w:
         out, aux = moe_lib.moe_block(cfg, h, w["moe"])
     else:

@@ -288,6 +288,7 @@ class ReplicaTask:
     arch: str
     n_shards: int
     smoke: bool = True
+    kernels: str = "auto"
     compress: str = "none"
     requests: int = 32
     request_every_ms: float = 0.0
@@ -310,6 +311,7 @@ class ReplicaTask:
         return cls(arch=spec.model.arch,
                    n_shards=max(1, spec.ps.shards),
                    smoke=spec.model.smoke,
+                   kernels=spec.model.kernels,
                    compress=("int8" if spec.wire.compression == "int8"
                              else "none"),
                    requests=spec.serve.requests,
@@ -344,6 +346,8 @@ def _replica_main(task: Dict[str, Any], address, replica_id: int,
 
         cfg = (get_smoke_config(task["arch"]) if task["smoke"]
                else get_config(task["arch"]))
+        if task.get("kernels", "auto") != cfg.kernels:
+            cfg = dataclasses.replace(cfg, kernels=task["kernels"])
         params = registry.init_params(cfg, jax.random.PRNGKey(0))
         plan = build_shard_plan(params, task["n_shards"])
         layout = plan.wire_layout()

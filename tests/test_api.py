@@ -185,6 +185,13 @@ def test_engine_selection():
           wire=dict(format="packed"), transport=dict(kind="tcp"),
           ft=dict(snapshot_every_s=1.0)), "ft.dir"),
     (dict(ft=dict(fault_drop_prob=1.5)), "probability"),
+    # PR-9 knob: model.kernels dispatch strings (repro.kernels.interface)
+    (dict(model=dict(kernels="cuda")), "model.kernels"),
+    (dict(model=dict(kernels="xla_associative")), "attention"),
+    (dict(model=dict(kernels="attention=xla_associative")),
+     "ssm_scan={pallas|xla|xla_associative}"),
+    (dict(model=dict(kernels="flash=pallas")), "unknown op"),
+    (dict(model=dict(kernels="")), "non-empty"),
 ])
 def test_invalid_combos_raise_actionable_spec_errors(mutate, needle):
     base = RunSpec().to_dict()

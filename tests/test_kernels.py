@@ -10,9 +10,10 @@ import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro.kernels import ops, ref
+from repro.kernels import interface, ops, ref, registry
 from repro.kernels.flash_attention import flash_attention_fwd
 from repro.kernels.fused_update import fused_update
+from repro.kernels.interface import KernelType
 from repro.kernels.rmsnorm import rmsnorm
 
 
@@ -171,3 +172,194 @@ def test_fused_update_property(n, seed, beta):
     pe, me = ref.fused_update_ref(p, m, g, lr=0.05, beta=beta)
     np.testing.assert_allclose(po, pe, atol=1e-5, rtol=1e-5)
     np.testing.assert_allclose(mo, me, atol=1e-5, rtol=1e-5)
+
+# ================================================== registry parity grid
+# Every registry op, every variant, fwd AND bwd (grads flow through the
+# jax.custom_vjp pairing) vs. its kernels/ref.py oracle.  Pallas runs
+# interpret=True here (CPU); the same dispatch compiles natively on TPU.
+
+def _tols(dtype, bwd=False):
+    if dtype == jnp.float32:
+        return (1e-4, 1e-4) if bwd else (3e-5, 3e-5)
+    # bf16 bwd: variants legitimately differ from the oracle by ~1 ulp
+    # in the probs dtype for the PV matmul — allow a couple of ulps
+    return (6e-2, 2e-2) if bwd else (2e-2, 2e-2)
+
+
+def _assert_close(got, want, dtype, bwd=False):
+    atol, rtol = _tols(dtype, bwd)
+    for g, w in zip(jax.tree_util.tree_leaves(got),
+                    jax.tree_util.tree_leaves(want)):
+        np.testing.assert_allclose(np.asarray(g, np.float32),
+                                   np.asarray(w, np.float32),
+                                   atol=atol, rtol=rtol)
+
+
+def _sq(out):
+    """Scalar loss over an array or tuple-of-arrays output (f32)."""
+    return sum(jnp.sum(jnp.square(o.astype(jnp.float32)))
+               for o in jax.tree_util.tree_leaves(out))
+
+
+def _attention_inputs(dtype):
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (1, 128, 4, 64)).astype(dtype)
+    k = jax.random.normal(ks[1], (1, 128, 2, 64)).astype(dtype)
+    v = jax.random.normal(ks[2], (1, 128, 2, 64)).astype(dtype)
+    return q, k, v
+
+
+def _norm_inputs(dtype):
+    x = jax.random.normal(jax.random.PRNGKey(8), (4, 256)).astype(dtype)
+    r = jax.random.normal(jax.random.PRNGKey(9), (4, 256)).astype(dtype)
+    w = jax.random.normal(jax.random.PRNGKey(10), (256,)).astype(dtype)
+    return x, r, w
+
+
+def _ssm_inputs(dtype):
+    ks = jax.random.split(jax.random.PRNGKey(11), 6)
+    b, l, di, ds = 2, 64, 4, 8
+    u = jax.random.normal(ks[0], (b, l, di)).astype(dtype)
+    delta = jax.nn.softplus(jax.random.normal(ks[1], (b, l, di))) \
+        .astype(dtype)
+    a = -jax.nn.softplus(jax.random.normal(ks[2], (di, ds)))
+    bmat = jax.random.normal(ks[3], (b, l, ds)).astype(dtype)
+    cmat = jax.random.normal(ks[4], (b, l, ds)).astype(dtype)
+    h0 = jnp.zeros((b, di, ds), jnp.float32)
+    return u, delta, a, bmat, cmat, h0
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("variant", ["pallas", "xla"])
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 32),
+                                           (False, None)])
+def test_registry_attention_parity(dtype, variant, causal, window):
+    q, k, v = _attention_inputs(dtype)
+    spec = f"attention={variant}"
+    out = registry.attention(q, k, v, causal=causal, window=window,
+                             kernels=spec)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    _assert_close(out, want, dtype)
+    g = jax.grad(lambda *xs: _sq(registry.attention(
+        *xs, causal=causal, window=window, kernels=spec)),
+        argnums=(0, 1, 2))(q, k, v)
+    gw = jax.grad(lambda *xs: _sq(ref.flash_attention_ref(
+        *xs, causal=causal, window=window)), argnums=(0, 1, 2))(q, k, v)
+    _assert_close(g, gw, dtype, bwd=True)
+
+
+def test_registry_attention_pallas_block_fallback():
+    """lq=100 divides no _BLOCKS entry: PALLAS must fall back to the XLA
+    formulation, never raise, and still match the oracle."""
+    ks = jax.random.split(jax.random.PRNGKey(12), 3)
+    q = jax.random.normal(ks[0], (1, 100, 2, 64))
+    k = jax.random.normal(ks[1], (1, 100, 2, 64))
+    v = jax.random.normal(ks[2], (1, 100, 2, 64))
+    out = registry.attention(q, k, v, causal=True, kernels="pallas")
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(out, want, atol=3e-5, rtol=3e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("variant", ["pallas", "xla"])
+def test_registry_rmsnorm_parity(dtype, variant):
+    x, _, w = _norm_inputs(dtype)
+    spec = f"rmsnorm={variant}"
+    out = registry.rmsnorm(x, w, kernels=spec)
+    _assert_close(out, ref.rmsnorm_ref(x, w), dtype)
+    g = jax.grad(lambda x_, w_: _sq(registry.rmsnorm(
+        x_, w_, kernels=spec)), argnums=(0, 1))(x, w)
+    gw = jax.grad(lambda x_, w_: _sq(ref.rmsnorm_ref(x_, w_)),
+                  argnums=(0, 1))(x, w)
+    _assert_close(g, gw, dtype, bwd=True)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("variant", ["pallas", "xla"])
+def test_registry_residual_rmsnorm_parity(dtype, variant):
+    x, r, w = _norm_inputs(dtype)
+    spec = f"residual_rmsnorm={variant}"
+    out = registry.residual_rmsnorm(x, r, w, kernels=spec)
+    want = ref.residual_rmsnorm_ref(x, r, w)
+    assert len(out) == 2 and out[0].dtype == x.dtype
+    _assert_close(out, want, dtype)
+    g = jax.grad(lambda *xs: _sq(registry.residual_rmsnorm(
+        *xs, kernels=spec)), argnums=(0, 1, 2))(x, r, w)
+    gw = jax.grad(lambda *xs: _sq(ref.residual_rmsnorm_ref(*xs)),
+                  argnums=(0, 1, 2))(x, r, w)
+    _assert_close(g, gw, dtype, bwd=True)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("variant", ["pallas", "xla", "xla_associative"])
+@pytest.mark.parametrize("chunk", [16, 64, 7])   # 7: forced to l
+def test_registry_ssm_scan_parity(dtype, variant, chunk):
+    u, delta, a, bmat, cmat, h0 = _ssm_inputs(dtype)
+    spec = f"ssm_scan={variant}"
+    y, h = registry.ssm_scan(u, delta, a, bmat, cmat, h0, chunk=chunk,
+                             kernels=spec)
+    yw, hw = ref.ssm_scan_ref(u, delta, a, bmat, cmat, h0)
+    assert y.dtype == u.dtype and h.dtype == jnp.float32
+    _assert_close((y, h), (yw, hw), dtype)
+    g = jax.grad(lambda *xs: _sq(registry.ssm_scan(
+        *xs, h0, chunk=chunk, kernels=spec)),
+        argnums=(0, 1, 2, 3, 4))(u, delta, a, bmat, cmat)
+    gw = jax.grad(lambda *xs: _sq(ref.ssm_scan_ref(*xs, h0)),
+                  argnums=(0, 1, 2, 3, 4))(u, delta, a, bmat, cmat)
+    _assert_close(g, gw, dtype, bwd=True)
+
+
+# ================================================== dispatch resolution
+def test_dispatch_auto_tpu_picks_pallas_everywhere():
+    for op in interface.OPS:
+        assert interface.resolve("auto", op, tpu=True) is KernelType.PALLAS
+
+
+def test_dispatch_auto_off_tpu_matches_historical_paths():
+    assert interface.resolve("auto", "attention", tpu=False) \
+        is KernelType.XLA
+    assert interface.resolve("auto", "rmsnorm", tpu=False) is KernelType.XLA
+    assert interface.resolve("auto", "residual_rmsnorm", tpu=False) \
+        is KernelType.XLA
+    assert interface.resolve("auto", "ssm_scan", tpu=False) \
+        is KernelType.XLA_ASSOCIATIVE
+
+
+def test_dispatch_bare_variant_applies_to_every_op():
+    for op in interface.OPS:
+        assert interface.resolve("pallas", op, tpu=False) \
+            is KernelType.PALLAS
+        assert interface.resolve("xla", op, tpu=True) is KernelType.XLA
+
+
+def test_dispatch_per_op_override_composes_with_auto():
+    spec = "ssm_scan=xla_associative,attention=pallas"
+    assert interface.resolve(spec, "ssm_scan", tpu=True) \
+        is KernelType.XLA_ASSOCIATIVE
+    assert interface.resolve(spec, "attention", tpu=False) \
+        is KernelType.PALLAS
+    # untouched ops keep their auto resolution
+    assert interface.resolve(spec, "rmsnorm", tpu=False) is KernelType.XLA
+    assert interface.resolve(spec, "rmsnorm", tpu=True) \
+        is KernelType.PALLAS
+
+
+@pytest.mark.parametrize("bad", [
+    "xla_associative",            # bare: attention has no such variant
+    "attention=xla_associative",  # per-op: not implemented for this op
+    "flash=pallas",               # unknown op
+    "attention=cuda",             # unknown variant
+    "attention",                  # missing '='
+])
+def test_dispatch_rejects_invalid_spec_listing_overrides(bad):
+    with pytest.raises(ValueError) as e:
+        interface.parse_kernels(bad)
+    msg = str(e.value)
+    assert interface.valid_overrides() in msg  # lists valid overrides
+
+
+def test_registry_resolved_uses_live_backend():
+    want_tpu = jax.default_backend() == "tpu"
+    assert registry.resolved("attention", "auto") \
+        is interface.resolve("auto", "attention", tpu=want_tpu)
+    assert registry.resolved("ssm_scan", "pallas") is KernelType.PALLAS
