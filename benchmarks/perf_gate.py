@@ -144,10 +144,14 @@ def check_recovery(current: dict, previous: dict | None) -> list:
     Absolute: the per-shard snapshot pause is bounded (no global
     stop-the-world hides in the capture path), the on-disk restore
     round-trips (``resume.ok``), and every client reconnected in one
-    re-HELLO against an idle rebound listener.  Trajectory: the pause
-    and restore time may not blow up versus the previous artifact
-    (generous bounds — shared runners are noisy, but a 5x jump means
-    the capture started holding locks across real work).
+    re-HELLO against an idle rebound listener.  When the report carries
+    a ``reshard`` section (``recovery.py --reshard``): ZERO pushes lost
+    or double-applied across the live migration, and the per-shard
+    copy-out pause stays under the 0.5s acceptance bound.  Trajectory:
+    the pause, restore time and migration time may not blow up versus
+    the previous artifact (generous bounds — shared runners are noisy,
+    but a 5x jump means the capture started holding locks across real
+    work).
     """
     failures = []
     snap = current.get("snapshot", {})
@@ -169,11 +173,32 @@ def check_recovery(current: dict, previous: dict | None) -> list:
         failures.append(
             f"reconnect contract broken: {mean_rc:.2f} reconnects/client "
             "against an idle rebound listener (expected exactly 1)")
+    reshard = current.get("reshard")
+    if reshard is not None:
+        lost = reshard.get("lost")
+        if lost is None:
+            failures.append("reshard report carries no loss ledger")
+        elif lost != 0:
+            failures.append(
+                f"reshard zero-loss contract broken: ledger reads "
+                f"{lost} (parked={reshard.get('parked')} "
+                f"replayed={reshard.get('replayed')} "
+                f"sent={reshard.get('pushes_sent')} "
+                f"applied={reshard.get('pushes_applied')}) — a push "
+                "racing the migration was lost or double-applied")
+        pause = reshard.get("pause_per_shard_us_max", 0.0)
+        if pause > 500_000.0:
+            failures.append(
+                f"reshard pause contract broken: a shard's lock was "
+                f"held {pause:.0f}us for copy-out (bound 0.5s — the "
+                "migration must not stop the world)")
     if previous is not None:
         for path_, label in ((("snapshot", "pause_per_shard_us_max"),
                               "per-shard snapshot pause (us)"),
                              (("resume", "restore_ms"),
-                              "restore wall time (ms)")):
+                              "restore wall time (ms)"),
+                             (("reshard", "migration_ms"),
+                              "live-reshard migration time (ms)")):
             sec, key = path_
             now = current.get(sec, {}).get(key)
             before = previous.get(sec, {}).get(key)
@@ -371,6 +396,15 @@ def main() -> int:
               f"restore={recovery.get('resume', {}).get('restore_ms', 0):.1f}ms "
               f"reconnects/client="
               f"{recovery.get('reconnect', {}).get('mean_reconnects')}")
+        rs = recovery.get("reshard")
+        if rs is not None:
+            print(f"reshard: {rs.get('from_shards')} -> "
+                  f"{rs.get('to_shards')} shards "
+                  f"migration={rs.get('migration_ms', 0):.1f}ms "
+                  f"pause_max={rs.get('pause_per_shard_us_max', 0):.0f}us "
+                  f"parked={rs.get('parked')} "
+                  f"replayed={rs.get('replayed')} "
+                  f"lost={rs.get('lost')}")
         failures += check_recovery(recovery, recovery_prev)
     serving = _load(args.serving, "serving")
     if serving is not None:

@@ -1,6 +1,6 @@
 """Recovery-path microbenchmark: what fault tolerance actually costs.
 
-Three measurements over a real sharded server (registry smoke model,
+Measurements over a real sharded server (registry smoke model,
 packed fused store), emitted as ``BENCH_recovery.json``:
 
   1. **snapshot** — per-shard pause imposed by an async snapshot: the
@@ -16,9 +16,14 @@ packed fused store), emitted as ``BENCH_recovery.json``:
   3. **reconnect** — wall time for ``--workers`` tcp clients to
      detect a dead listener, back off, and re-HELLO against a
      rebound one on the same port (mean tries per client recorded).
+  4. **reshard** (``--reshard``) — live-migration cost S -> S' under
+     concurrent pushes: per-shard pause (the copy-out lock hold, from
+     ``reshard_shard`` spans), end-to-end migration wall time, and
+     the zero-loss ledger (every parked push replayed, every sent
+     push applied — the gate requires ``lost == 0``).
 
-Run: ``PYTHONPATH=src python benchmarks/recovery.py [--smoke]``.
-Gate: ``perf_gate.py --recovery BENCH_recovery.json
+Run: ``PYTHONPATH=src python benchmarks/recovery.py [--smoke]
+[--reshard]``.  Gate: ``perf_gate.py --recovery BENCH_recovery.json
 [--recovery-previous <prior>]``.
 """
 
@@ -135,6 +140,77 @@ def bench_reconnect(server, n_workers: int) -> dict:
                 c.reconnects for c in clients)}
 
 
+def bench_reshard(arch: str, n_shards: int, to_shards: int,
+                  n_workers: int, rounds: int) -> dict:
+    """Live-migration cost under load: ``--workers`` threads keep
+    pushing while the server reshards S -> S'.  Pushes racing the
+    migration park-and-replay; the ledger must balance exactly."""
+    import threading
+
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.perfcount import WIRE
+
+    server = build_server(arch, n_shards, n_workers)
+    g_tree = jax.tree_util.tree_map(
+        lambda p: jnp.ones_like(p), server.params)
+    wires: dict = {}
+    sent = [0] * n_workers
+    start = threading.Barrier(n_workers + 1)
+
+    def pusher(w: int) -> None:
+        start.wait()
+        for _ in range(rounds):
+            # re-grab the live plan each round: pushes packed under the
+            # retired plan are inferred by shape and translated
+            plan = server.plan
+            wire = wires.get(id(plan))
+            if wire is None:
+                wires[id(plan)] = wire = plan.pack(g_tree)
+            server.push_packed(w, wire)
+            sent[w] += 1
+
+    TRACE.enable(source="bench")
+    WIRE.reset()
+    threads = [threading.Thread(target=pusher, args=(w,), daemon=True)
+               for w in range(n_workers)]
+    for t in threads:
+        t.start()
+    start.wait()
+    time.sleep(0.05)                 # let the push load build up
+    t0 = time.perf_counter()
+    assert server.reshard(to_shards)
+    migration_s = time.perf_counter() - t0
+    for t in threads:
+        t.join(timeout=300.0)
+    pauses = [e["dur"] for e in TRACE.drain()
+              if e.get("name") == "reshard_shard"]
+    TRACE.disable()
+    ev = WIRE.snapshot()
+    applied = server.metrics.total_pushes
+    version_sum = server.version
+    server.stop()
+    return {
+        "from_shards": n_shards,
+        "to_shards": to_shards,
+        "workers": n_workers,
+        "migration_ms": migration_s * 1e3,
+        "pause_per_shard_us_max": max(pauses) * 1e6,
+        "pause_per_shard_us_mean": statistics.fmean(pauses) * 1e6,
+        "parked": ev["reshard_parked"],
+        "replayed": ev["reshard_replayed"],
+        "translated": ev["reshard_translated"],
+        # both ledgers must read zero: every parked region replayed,
+        # every push a worker sent accounted in the server's metrics
+        "lost": (ev["reshard_parked"] - ev["reshard_replayed"])
+        + (sum(sent) - applied),
+        "pushes_sent": sum(sent),
+        "pushes_applied": applied,
+        "version_sum": int(version_sum),
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="xlstm-125m")
@@ -143,6 +219,11 @@ def main() -> None:
     ap.add_argument("--rounds", type=int, default=20)
     ap.add_argument("--smoke", action="store_true",
                     help="CI sizing: fewer snapshot rounds")
+    ap.add_argument("--reshard", action="store_true",
+                    help="also measure the live S -> S' migration "
+                         "under concurrent pushes")
+    ap.add_argument("--reshard-to", type=int, default=0,
+                    help="target arity (default: shards + 2)")
     ap.add_argument("--out", default="BENCH_recovery.json")
     args = ap.parse_args()
     if args.smoke:
@@ -158,6 +239,11 @@ def main() -> None:
             "reconnect": bench_reconnect(server, args.workers),
         }
     server.stop()
+    if args.reshard:
+        report["reshard"] = bench_reshard(
+            args.arch, args.shards,
+            args.reshard_to or args.shards + 2, args.workers,
+            rounds=max(4, args.rounds))
 
     print(json.dumps(report, indent=2, sort_keys=True))
     with open(args.out, "w") as f:

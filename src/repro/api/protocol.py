@@ -47,12 +47,18 @@ class DeltaPull:
     version vector did not match the server's shard arity (or ran
     ahead of it), so every non-empty shard's region is included and
     the client should treat the patch as a complete rebuild.
+    ``epoch`` is the server's live-reshard epoch at snapshot time: a
+    change from the client's last-seen epoch means the shard arity
+    (and wire layout) moved under it — the reply is already a full
+    snapshot in the NEW layout, and the client must rebuild its
+    plan/buffers before patching.
     """
 
     versions: Tuple[int, ...]
     shards: Tuple[int, ...] = ()
     regions: Tuple[Any, ...] = ()
     full: bool = False
+    epoch: int = 0
 
     @property
     def empty(self) -> bool:

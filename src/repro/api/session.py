@@ -757,6 +757,21 @@ class TransportPSSession(TrainingSession):
         self.start()
         return self.transport.address()
 
+    def reshard(self, n_shards: int) -> bool:
+        """Manual live-reshard trigger: migrate the running server's
+        packed store to ``n_shards`` partitions WITHOUT stopping
+        training (``repro.ft.reshard``).  Workers and replicas resync
+        through the version-delta full-pull fallback on their next
+        pull.  Returns False when the server is already at that arity."""
+        self.start()
+        if not hasattr(self.server, "reshard"):
+            raise SpecError(
+                "live resharding migrates the sharded server's packed "
+                "stores — this spec builds "
+                f"ps.kind={self.spec.ps.kind!r}; set ps.kind='sharded' "
+                "with ps.apply='fused'")
+        return bool(self.server.reshard(int(n_shards)))
+
     def _run(self, steps: int) -> None:
         if self._ov.get("external_workers"):
             raise SpecError("this session was built with "
@@ -797,6 +812,14 @@ class TransportPSSession(TrainingSession):
         pool.start()
         if rpool is not None:
             rpool.start()
+        trigger_stop = None
+        if spec.ft.reshards:
+            import threading
+            trigger_stop = threading.Event()
+            threading.Thread(
+                target=_reshard_watch,
+                args=(self.server, spec.ft, trigger_stop),
+                name="reshard-trigger", daemon=True).start()
         try:
             self.results = pool.join(
                 timeout=self._ov.get("timeout", 1200.0),
@@ -811,6 +834,8 @@ class TransportPSSession(TrainingSession):
         finally:
             # Training is over either way: release gated workers and
             # tear the wire down before surfacing failures.
+            if trigger_stop is not None:
+                trigger_stop.set()
             self.close()
             pool.terminate()
             if rpool is not None:
@@ -851,6 +876,34 @@ class TransportPSSession(TrainingSession):
         # spill files the rig is about to recover.
         if self.obs_rig is not None:
             self.obs_rig.finish()
+
+
+def _reshard_watch(server, ft, stop) -> None:
+    """Background live-reshard trigger for the in-parent transport
+    session: fire at the manual push round (``ft.reshard_round``)
+    and/or when one shard's applied-update growth exceeds
+    ``ft.reshard_hot_factor`` x the uniform share (the hot-shard
+    policy).  One-shot — the thread exits after triggering.  The
+    ``repro.ft.server_proc`` process runs its own copy of this logic
+    (plus the mid-migration kill hook) for out-of-process servers."""
+    import time as _time
+    last = server.shard_versions()
+    while not stop.is_set() and not server.stopped:
+        _time.sleep(0.02)
+        if ft.reshard_round >= 0 \
+                and server.metrics.total_pushes >= ft.reshard_round:
+            server.reshard(ft.reshard_shards)
+            return
+        if ft.reshard_hot_factor > 0.0:
+            cur = server.shard_versions()
+            if len(cur) == len(last):
+                deltas = [c - b for c, b in zip(cur, last)]
+                total = sum(deltas)
+                if total > 0 and max(deltas) > \
+                        ft.reshard_hot_factor * (total / len(deltas)):
+                    server.reshard(ft.reshard_shards)
+                    return
+            last = cur
 
 
 def _ps_metrics(engine: str, server, obs_rig=None) -> Dict[str, Any]:

@@ -337,7 +337,18 @@ class FtSpec:
     fault_drop_prob: float = 0.0
     fault_delay_kind: int = 0
     fault_delay_ms: float = 0.0
+    fault_kill_mid_reshard: bool = False
     fault_seed: int = 0
+    #: Live reshard (``repro.ft.reshard``): migrate the packed store to
+    #: ``reshard_shards`` partitions WITHOUT stopping training, when
+    #: the aggregate push count crosses ``reshard_round`` (manual
+    #: trigger; -1 = never) and/or whenever one shard's share of the
+    #: recent pushes exceeds ``reshard_hot_factor`` x the uniform share
+    #: (hot-shard policy, read from the per-shard push metrics; 0
+    #: disables).  0 shards disables resharding entirely.
+    reshard_shards: int = 0
+    reshard_round: int = -1
+    reshard_hot_factor: float = 0.0
 
     def __post_init__(self):
         _require(self.snapshot_every_s >= 0.0,
@@ -358,17 +369,40 @@ class FtSpec:
             _require(bool(self.dir),
                      "ft snapshots/resume need ft.dir (the checkpoint "
                      "directory)")
+        _require(self.reshard_shards >= 0,
+                 "ft.reshard_shards is a target shard count (>= 1; 0 "
+                 "disables live resharding)")
+        _require(self.reshard_hot_factor >= 0.0,
+                 "ft.reshard_hot_factor is a load-imbalance multiple "
+                 "(> 1 makes sense; 0 disables the hot-shard policy)")
+        if self.reshard_round >= 0 or self.reshard_hot_factor > 0.0:
+            _require(self.reshard_shards >= 1,
+                     "a reshard trigger (ft.reshard_round / "
+                     "ft.reshard_hot_factor) needs a target arity: set "
+                     "ft.reshard_shards >= 1")
+        if self.fault_kill_mid_reshard:
+            _require(self.reshard_shards >= 1 and self.reshard_round >= 0,
+                     "ft.fault_kill_mid_reshard kills the server inside "
+                     "a live migration — arm one with ft.reshard_round "
+                     ">= 0 and ft.reshard_shards >= 1")
 
     @property
     def snapshots(self) -> bool:
         return self.snapshot_every_s > 0 or self.resume
 
     @property
+    def reshards(self) -> bool:
+        """Is a live reshard armed (by round and/or hot-shard policy)?"""
+        return self.reshard_shards >= 1 and (
+            self.reshard_round >= 0 or self.reshard_hot_factor > 0.0)
+
+    @property
     def faults(self) -> bool:
         return (self.fault_kill_server_round >= 0
                 or (self.fault_kill_worker >= 0
                     and self.fault_kill_worker_round >= 0)
-                or self.fault_drop_prob > 0.0 or self.fault_delay_ms > 0.0)
+                or self.fault_drop_prob > 0.0 or self.fault_delay_ms > 0.0
+                or self.fault_kill_mid_reshard)
 
     def fault_plan(self):
         """The picklable ``repro.ft.FaultPlan`` these fields describe."""
@@ -381,6 +415,7 @@ class FtSpec:
             drop_prob=self.fault_drop_prob,
             delay_kind=self.fault_delay_kind,
             delay_ms=self.fault_delay_ms,
+            kill_mid_reshard=self.fault_kill_mid_reshard,
             seed=self.fault_seed)
 
 
@@ -518,13 +553,32 @@ class RunSpec:
                      "ps.apply='tree' keeps no packed buffers to "
                      "snapshot — set ps.apply='fused' (sharded) or "
                      "'packed' (mono)")
+        if ft.reshards:
+            _require(ps.kind == "sharded" and ps.apply == "fused",
+                     "ft.reshard_* migrates packed regions between the "
+                     "sharded server's stores; set ps.kind='sharded' "
+                     "and ps.apply='fused'")
+            _require(wire.format == "packed" and wire.delta_pull,
+                     "live resharding resyncs clients through the "
+                     "version-delta full-pull fallback; set wire."
+                     "format='packed' and wire.delta_pull=true")
+            _require(tp.kind in ("tcp", "shmem"),
+                     "live resharding changes the wire layout under "
+                     "running workers, which only the frame protocol "
+                     "renegotiates — set transport.kind='tcp' or "
+                     "'shmem'")
+            _require(ft.reshard_shards != ps.shards,
+                     f"ft.reshard_shards={ft.reshard_shards} equals "
+                     "ps.shards — a live reshard to the same arity is "
+                     "a no-op")
         if ft.faults:
             _require(tp.kind != "inproc",
                      "the FaultPlan kills processes and drops frames; "
                      "over transport.kind='inproc' there is no process "
                      "boundary to fault — set transport.kind='tcp' or "
                      "'shmem'")
-        if ft.fault_kill_server_round >= 0 or ft.reconnect_tries > 0:
+        if (ft.fault_kill_server_round >= 0 or ft.reconnect_tries > 0
+                or ft.fault_kill_mid_reshard):
             _require(tp.kind == "tcp",
                      "killing/restarting the server (and reconnecting "
                      "to it) needs transport.kind='tcp': shmem segments "

@@ -126,6 +126,15 @@ class CheckpointManager:
         s = self.steps()
         return s[-1] if s else None
 
+    def peek_extras(self, step: int) -> Dict[str, Any]:
+        """The extras dict of one snapshot WITHOUT loading its arrays —
+        restore decisions (e.g. "must the server reshard to this
+        snapshot's arity first?") read this before building the
+        template tree that ``restore`` validates shapes against."""
+        with open(os.path.join(self._step_dir(step),
+                               "manifest.json")) as f:
+            return json.load(f)["extras"]
+
     def restore(self, step: int, like: Any,
                 ) -> Tuple[Any, Dict[str, Any]]:
         """Restore into the structure of ``like`` (names must match)."""

@@ -6,6 +6,7 @@ Submodules (see ``src/repro/ft/README.md`` for the protocol):
   * ``snapshot``    — server state capture/restore + ``ServerSnapshotter``
   * ``faults``      — deterministic ``FaultPlan`` chaos injection
   * ``server_proc`` — restartable out-of-process server host
+  * ``reshard``     — live shard migration (S -> S' without stopping)
 
 Only ``backoff`` is imported eagerly (it is stdlib-only and the
 transport layer depends on it); the rest load lazily so importing
@@ -32,6 +33,12 @@ _LAZY = {
     "FaultyChannel": "repro.ft.faults",
     "wrap_channel": "repro.ft.faults",
     "ServerProcess": "repro.ft.server_proc",
+    "MigrationMap": "repro.ft.reshard",
+    "RegionMove": "repro.ft.reshard",
+    "build_migration": "repro.ft.reshard",
+    "live_reshard": "repro.ft.reshard",
+    "spread_versions": "repro.ft.reshard",
+    "equalized_counts": "repro.ft.reshard",
 }
 
 

@@ -53,6 +53,9 @@ class FaultPlan:
     drop_prob: float = 0.0        # per-frame drop probability
     delay_kind: int = 0           # frame kind to delay (0 = any)
     delay_ms: float = 0.0         # injected per-frame latency
+    kill_mid_reshard: bool = False  # SIGKILL the server INSIDE a live
+    #                               reshard (between shard migrations —
+    #                               the torn-window failover case)
     seed: int = 0                 # RNG seed (per-worker offset added)
 
     def __post_init__(self):
@@ -65,7 +68,8 @@ class FaultPlan:
     def active(self) -> bool:
         return (self.kill_server_round >= 0
                 or (self.kill_worker >= 0 and self.kill_worker_round >= 0)
-                or self.drop_prob > 0.0 or self.delay_ms > 0.0)
+                or self.drop_prob > 0.0 or self.delay_ms > 0.0
+                or self.kill_mid_reshard)
 
     @property
     def wants_channel(self) -> bool:

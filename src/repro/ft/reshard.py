@@ -1,0 +1,238 @@
+"""Live resharding: migrate packed shard regions between stores.
+
+A reshard takes a running ``ShardedParameterServer`` from S shards to
+S' without stopping training.  The whole protocol rides the two
+invariants the packed wire format already guarantees:
+
+  * every ``LeafSlice`` occupies a **canonically contiguous** element
+    range (``leaf_off[leaf] + start * row_elems``, see
+    ``ShardPlan._build_wire_layout``), and within a shard's wire region
+    slices are laid out in that same canonical order — so the overlap
+    of an old slice with a new slice is one contiguous copy in BOTH
+    wire layouts,
+  * jax arrays are immutable, so grabbing a reference under a shard's
+    lock IS a consistent snapshot of that shard.
+
+The migration map
+-----------------
+``build_migration(old_plan, new_plan)`` intersects the two plans'
+canonical partitions into a flat list of ``RegionMove``s::
+
+    RegionMove(old_shard, old_off, new_shard, new_off, size)
+
+``old_off``/``new_off`` are element offsets into the flat view of the
+respective shard's ``(rows, 512)`` wire region.  The moves cover every
+real element exactly once (padding never moves — it is zero in both
+layouts), so ``migrate`` over the parameter and momentum buffers is a
+permutation: bitwise, dtype-preserving, invertible.
+
+The same map translates *gradients*: a push packed under the old plan
+(a stale ``reshard_epoch``) is resliced into new-plan regions and
+applied normally — no gradient is lost or double-applied when clients
+lag the server by an epoch.
+
+The live protocol (server side, see ``ShardedParameterServer.reshard``)
+-----------------------------------------------------------------------
+1. retire old shards one at a time under their own locks: mark the
+   shard ``retired`` (new applies for it PARK as raw regions), drain
+   any in-flight coalesce window, and reference-grab ``(p, m,
+   version)`` — the lock hold is the only per-shard pause and is
+   emitted as a ``reshard_shard`` obs span,
+2. outside every lock, fold the copied regions through the migration
+   map into the new plan's packed buffers,
+3. atomically swap ``(plan, shards, n_shards)`` and bump
+   ``reshard_epoch``; trackers/credits carry over (counts equalized to
+   the per-worker minimum across old shards — the same rule failover
+   restore uses), versions redistribute so their SUM is preserved
+   (``server.version`` is continuous across the migration),
+4. release any gate waiter still parked on an old shard's barrier
+   (its peers now push to the new shards), wait for in-flight
+   old-epoch pushes to drain, then REPLAY every parked region through
+   the map onto the new shards — momentum folded only over the moved
+   segments, so elements that already saw this push through another
+   shard are not decayed twice.
+
+Clients observe the epoch in HELLO/SUB replies and ``MSG_DELTA``
+(carried in the frame's otherwise-unused ``shard`` field) and force a
+full pull — the PR-5 version-vector fallback — then rebuild their
+plan/buffers from the reply itself.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.wireformat import WIRE_LANES
+
+
+@dataclasses.dataclass(frozen=True)
+class RegionMove:
+    """One contiguous copy between two packed shard regions.
+
+    Offsets are ELEMENT offsets into the flat view of each shard's
+    ``(rows, 512)`` wire region; ``size`` is the element count.
+    """
+
+    old_shard: int
+    old_off: int
+    new_shard: int
+    new_off: int
+    size: int
+
+
+def _canonical_segments(plan) -> List[Tuple[int, int, int, int]]:
+    """``(canon_start, size, shard, region_off)`` per slice, sorted by
+    canonical position.  Mirrors ``ShardPlan._build_wire_layout``: a
+    slice's wire bytes sit at ``region_off`` in its shard's flat region
+    and cover canonical elements ``[canon_start, canon_start+size)``."""
+    sizes = [math.prod(s) if s else 1 for s in plan.leaf_shapes]
+    leaf_off = np.concatenate([[0], np.cumsum(sizes)])
+    segs: List[Tuple[int, int, int, int]] = []
+    for j, shard in enumerate(plan.shards):
+        off = 0
+        for sl in shard.slices:
+            shape = plan.leaf_shapes[sl.leaf]
+            row_elems = math.prod(shape[1:]) if len(shape) > 1 else 1
+            canon0 = int(leaf_off[sl.leaf]) + sl.start * row_elems
+            segs.append((canon0, sl.size, j, off))
+            off += sl.size
+    segs.sort()
+    return segs
+
+
+@dataclasses.dataclass(frozen=True)
+class MigrationMap:
+    """The full S -> S' region-move list plus both layouts' row counts."""
+
+    old_n_shards: int
+    new_n_shards: int
+    old_shard_rows: Tuple[int, ...]
+    new_shard_rows: Tuple[int, ...]
+    dtype: Any
+    moves: Tuple[RegionMove, ...]
+
+    # -- state migration -----------------------------------------------------
+    def migrate(self, old_bufs: Sequence[Any]) -> List[np.ndarray]:
+        """Old per-shard packed buffers -> new per-shard packed buffers.
+
+        Pure contiguous copies, one move at a time; padding stays zero.
+        Dtype-preserving, so params and momentum migrate bitwise.
+        """
+        olds = [np.asarray(b).reshape(-1) for b in old_bufs]
+        news = [np.zeros(r * WIRE_LANES, self.dtype)
+                for r in self.new_shard_rows]
+        for mv in self.moves:
+            news[mv.new_shard][mv.new_off:mv.new_off + mv.size] = \
+                olds[mv.old_shard][mv.old_off:mv.old_off + mv.size]
+        return [b.reshape(-1, WIRE_LANES) for b in news]
+
+    def migrate_grads(self, old_bufs: Sequence[Any]) -> List[np.ndarray]:
+        """Gradient translation is the same permutation (padding rows
+        carry zero gradient in both layouts)."""
+        return self.migrate(old_bufs)
+
+    def moves_from(self, old_shard: int) -> List[RegionMove]:
+        """The moves that source from one old shard — the replay unit
+        for a push parked against that shard mid-migration."""
+        return [mv for mv in self.moves if mv.old_shard == old_shard]
+
+    def describe(self) -> str:
+        lines = [f"MigrationMap: {self.old_n_shards} -> "
+                 f"{self.new_n_shards} shards, {len(self.moves)} moves, "
+                 f"{sum(m.size for m in self.moves):,} elements"]
+        for mv in self.moves:
+            lines.append(
+                f"  shard {mv.old_shard}[{mv.old_off}:"
+                f"{mv.old_off + mv.size}] -> shard {mv.new_shard}"
+                f"[{mv.new_off}:{mv.new_off + mv.size}]")
+        return "\n".join(lines)
+
+
+def build_migration(old_plan, new_plan, dtype=None) -> MigrationMap:
+    """Intersect the two plans' canonical partitions into contiguous
+    region moves.  Both plans must describe the SAME tree (that is what
+    makes the canonical element space shared)."""
+    if (old_plan.leaf_shapes != new_plan.leaf_shapes):
+        raise ValueError(
+            "migration requires both plans to describe the same tree "
+            f"({len(old_plan.leaf_shapes)} vs "
+            f"{len(new_plan.leaf_shapes)} leaves / shapes differ)")
+    old_layout = old_plan.wire_layout(dtype)
+    new_layout = new_plan.wire_layout(dtype)
+    if old_layout.dtype != new_layout.dtype:
+        raise ValueError("wire dtypes differ between plans")
+    old_segs = _canonical_segments(old_plan)
+    new_segs = _canonical_segments(new_plan)
+    moves: List[RegionMove] = []
+    i = j = 0
+    while i < len(old_segs) and j < len(new_segs):
+        oc, osz, osh, ooff = old_segs[i]
+        nc, nsz, nsh, noff = new_segs[j]
+        lo = max(oc, nc)
+        hi = min(oc + osz, nc + nsz)
+        if hi > lo:
+            moves.append(RegionMove(
+                old_shard=osh, old_off=ooff + (lo - oc),
+                new_shard=nsh, new_off=noff + (lo - nc),
+                size=hi - lo))
+        if oc + osz <= nc + nsz:
+            i += 1
+        if nc + nsz <= oc + osz:
+            j += 1
+    covered = sum(m.size for m in moves)
+    if covered != old_layout.total_elems:
+        raise AssertionError(
+            f"migration map covers {covered} of "
+            f"{old_layout.total_elems} elements — plans disagree")
+    return MigrationMap(
+        old_n_shards=old_plan.n_shards, new_n_shards=new_plan.n_shards,
+        old_shard_rows=old_layout.shard_rows,
+        new_shard_rows=new_layout.shard_rows,
+        dtype=np.dtype(old_layout.dtype), moves=tuple(moves))
+
+
+def spread_versions(total: int, n_shards: int) -> List[int]:
+    """Redistribute a version SUM over a new arity: ``server.version``
+    (the sum) is the run's logical clock — snapshots, the loss
+    trajectory and serving staleness all ride it — so it must be
+    continuous across a reshard."""
+    base, rem = divmod(int(total), n_shards)
+    return [base + (1 if k < rem else 0) for k in range(n_shards)]
+
+
+def equalized_counts(per_shard_counts: Sequence[Dict[int, int]],
+                     ) -> Dict[int, int]:
+    """Per-worker push counts for the new trackers: the MINIMUM across
+    old shards — the same clamp rule failover restore uses, for the
+    same reason (a count that runs ahead on some shards could gate two
+    workers against each other's barriers forever)."""
+    workers: Dict[int, int] = {}
+    for counts in per_shard_counts:
+        for w, c in counts.items():
+            c = int(c)
+            workers[w] = c if w not in workers else min(workers[w], c)
+    return workers
+
+
+def live_reshard(server, n_shards: int) -> bool:
+    """Public entry point: live-migrate ``server`` to ``n_shards``.
+
+    Returns True if a migration ran (False for a no-op same-arity
+    call).  Training, pulls and serving continue throughout; see the
+    module doc for the protocol.
+    """
+    return server.reshard(n_shards)
+
+
+__all__ = [
+    "MigrationMap",
+    "RegionMove",
+    "build_migration",
+    "equalized_counts",
+    "live_reshard",
+    "spread_versions",
+]

@@ -113,6 +113,51 @@ def _server_main(spec_dict: Dict[str, Any], port: int, queue,
                          daemon=True).start()
 
     stop = threading.Event()
+    if spec.ft.reshards:
+        # Live-reshard trigger: manual (aggregate push round) and/or
+        # the hot-shard policy (per-shard applied-update growth read
+        # off the server's version vector — the obs per-shard push
+        # metric).  Re-armed in EVERY incarnation: reshard() to an
+        # arity the restore already reached is a no-op, and a restart
+        # that resumed from a pre-migration snapshot gets to finish
+        # the move.  The mid-migration SIGKILL fires once, in the
+        # first incarnation only (mirrors the kill watchdog).
+        armed_kill = (spec.ft.fault_kill_mid_reshard
+                      and incarnation == 0)
+
+        def _mid_hook(shard_index: int) -> None:
+            # Fires after each old shard's state is copied out; dying
+            # at index >= 1 leaves the migration genuinely mid-flight.
+            if shard_index >= 1:  # pragma: no cover - dies via SIGKILL
+                os.kill(os.getpid(), signal.SIGKILL)
+
+        def reshard_trigger() -> None:
+            target = spec.ft.reshard_shards
+            round_ = spec.ft.reshard_round
+            hot = spec.ft.reshard_hot_factor
+            last = server.shard_versions()
+            while not stop.is_set() and not server.stopped:
+                time.sleep(0.02)
+                if round_ >= 0 \
+                        and server.metrics.total_pushes >= round_:
+                    server.reshard(
+                        target,
+                        _mid_hook=_mid_hook if armed_kill else None)
+                    return
+                if hot > 0.0:
+                    cur = server.shard_versions()
+                    if len(cur) == len(last):
+                        deltas = [c - b for c, b in zip(cur, last)]
+                        total = sum(deltas)
+                        if total > 0 and max(deltas) > \
+                                hot * (total / len(deltas)):
+                            server.reshard(target)
+                            return
+                    last = cur
+
+        threading.Thread(target=reshard_trigger,
+                         name="ft-reshard-trigger",
+                         daemon=True).start()
     signal.signal(signal.SIGTERM, lambda *_: stop.set())
     queue.put(("up", transport.address(), resumed_step))
     stop.wait()

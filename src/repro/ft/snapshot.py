@@ -162,6 +162,25 @@ def snapshot_server(server) -> Tuple[Dict[str, Any], Dict[str, Any]]:
     """
     _require_packed(server)
     t0 = TRACE.now() if TRACE.enabled else 0.0
+    for _attempt in range(8):
+        out = _snapshot_once(server)
+        if out is not None:
+            tree, extras = out
+            break
+    else:  # pragma: no cover - needs 8 reshards racing one capture
+        raise RuntimeError("snapshot raced a live reshard 8 times")
+    if TRACE.enabled:
+        TRACE.span("snapshot", t0,
+                   args={"shards": extras["n_shards"],
+                         "version": sum(extras["versions"])})
+    return tree, extras
+
+
+def _snapshot_once(server):
+    """One capture attempt; ``None`` when a live reshard swapped the
+    shard list mid-capture (the caller retries — mixing regions from
+    two plans in one snapshot would be a torn, unrestorable state)."""
+    epoch0 = int(getattr(server, "reshard_epoch", 0))
     tree: Dict[str, Any] = {}
     versions: List[int] = []
     shard_states: List[Dict[str, Any]] = []
@@ -205,6 +224,8 @@ def snapshot_server(server) -> Tuple[Dict[str, Any], Dict[str, Any]]:
             TRACE.span("snapshot_shard", ts, shard=0)
         tree["shard000"] = {"p": p, "m": m}
         gate, gating = None, "mono"
+    if int(getattr(server, "reshard_epoch", 0)) != epoch0:
+        return None  # a reshard swapped plans mid-capture: retry
     opt = (shards[0].optimizer if shards is not None
            else server.optimizer)
     extras = {
@@ -218,10 +239,11 @@ def snapshot_server(server) -> Tuple[Dict[str, Any], Dict[str, Any]]:
         "optimizer": {"lr": opt.lr, "momentum": opt.momentum,
                       "staleness_damping": bool(opt.staleness_damping)},
         "metrics": metrics,
+        # The live-reshard epoch these regions were laid out under —
+        # restore uses it (with n_shards) to decide whether the target
+        # server must be resharded before the install.
+        "reshard_epoch": epoch0,
     }
-    if TRACE.enabled:
-        TRACE.span("snapshot", t0, args={"shards": len(versions),
-                                         "version": sum(versions)})
     return tree, extras
 
 
@@ -272,10 +294,20 @@ def restore_server(server, tree: Dict[str, Any],
     shards = getattr(server, "shards", None)
     n = len(shards) if shards is not None else 1
     if extras["n_shards"] != n:
-        raise ValueError(
-            f"snapshot has {extras['n_shards']} shard(s), server has "
-            f"{n} — restore needs the same RunSpec the snapshot came "
-            "from")
+        # Cross-plan restore: the snapshot was taken under a different
+        # shard arity (a live reshard ran before — or after — the
+        # capture).  A resharding-capable server is moved to the
+        # snapshot's arity FIRST (which also installs the migration
+        # map old->new, so stale-epoch client pushes keep translating);
+        # then the install below proceeds shard-for-shard.
+        if shards is None or not hasattr(server, "reshard"):
+            raise ValueError(
+                f"snapshot has {extras['n_shards']} shard(s), server "
+                f"has {n} and cannot reshard — restore needs the same "
+                "RunSpec the snapshot came from")
+        server.reshard(extras["n_shards"])
+        shards = server.shards
+        n = len(shards)
     versions = [int(v) for v in extras["versions"]]
     states = extras["shards"]
     if shards is not None:
@@ -327,13 +359,26 @@ def restore_server(server, tree: Dict[str, Any],
 def restore_latest(server, manager) -> Optional[int]:
     """Failover entry point: restore the newest usable snapshot from
     ``manager`` into ``server``.  Returns the snapshot step, or
-    ``None`` when the directory holds no (complete) snapshot."""
-    like, _ = snapshot_server(server)
+    ``None`` when the directory holds no (complete) snapshot.
+
+    Cross-plan aware: when the snapshot was captured at a different
+    shard arity (it straddles a live reshard), a resharding-capable
+    server is moved to the snapshot's arity BEFORE the template tree is
+    built, so the shape validation in ``CheckpointManager.restore``
+    sees matching region buffers.  The run then resumes under exactly
+    the plan the snapshot recorded — never a torn mixture."""
     t0 = TRACE.now() if TRACE.enabled else 0.0
-    hit = manager.restore_latest(like)
-    if hit is None:
+    step = manager.latest_step()
+    if step is None:
         return None
-    step, tree, extras = hit
+    peek = manager.peek_extras(step)
+    want = int(peek.get("n_shards", 0))
+    shards = getattr(server, "shards", None)
+    if (shards is not None and want and want != len(shards)
+            and hasattr(server, "reshard")):
+        server.reshard(want)
+    like, _ = snapshot_server(server)
+    tree, extras = manager.restore(step, like)
     restore_server(server, tree, extras)
     if TRACE.enabled:
         TRACE.span("failover", t0,

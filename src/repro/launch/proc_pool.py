@@ -124,7 +124,7 @@ def _worker_main(task: Dict[str, Any], address, worker_id: int,
         from repro.models import registry
         from repro.ps.sharded.plan import build_shard_plan
         from repro.transport import connect
-        from repro.wireformat import WIRE_LANES
+        from repro.wireformat import WIRE_LANES, FrameError
 
         cfg = (get_smoke_config(task["arch"]) if task["smoke"]
                else get_config(task["arch"]))
@@ -140,12 +140,16 @@ def _worker_main(task: Dict[str, Any], address, worker_id: int,
         layout = plan.wire_layout()
         del params  # the live weights come over the wire
 
-        @functools.partial(jax.jit, donate_argnums=(1,))
-        def packed_step(wire_p, wire_g_prev, batch):
-            p = plan.unpack(wire_p)
-            (loss, _), grads = jax.value_and_grad(
-                loss_fn, has_aux=True)(p, batch)
-            return wire_g_prev.at[:].set(plan.pack(grads)), loss
+        def make_step(plan):
+            @functools.partial(jax.jit, donate_argnums=(1,))
+            def packed_step(wire_p, wire_g_prev, batch):
+                p = plan.unpack(wire_p)
+                (loss, _), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(p, batch)
+                return wire_g_prev.at[:].set(plan.pack(grads)), loss
+            return packed_step
+
+        packed_step = make_step(plan)
 
         from repro.ft.backoff import BackoffPolicy
         from repro.ft.faults import FaultPlan, kill_self, wrap_channel
@@ -214,6 +218,31 @@ def _worker_main(task: Dict[str, Any], address, worker_id: int,
                              layout.dtype) if delta_pull else None
         versions = (-1,) * task["n_shards"]
         row_start = layout.shard_row_start
+        epoch = client.reshard_epoch
+
+        def rebuild_layout(n_shards: int, new_epoch: int) -> None:
+            """Live-reshard rebuild: the server's shard arity changed
+            under us (delta reply carried a new epoch / a different
+            version-vector length).  Re-derive the plan at the new
+            arity — ``rebuild`` only needs leaf shapes, never weights —
+            re-jit the step, and re-size every layout-shaped buffer.
+            The triggering reply is a full snapshot in the NEW layout,
+            so patching it into the fresh host buffer is complete."""
+            nonlocal plan, layout, row_start, wire_host, wire_g
+            nonlocal packed_step, epoch
+            plan = plan.rebuild(n_shards)
+            layout = plan.wire_layout()
+            row_start = layout.shard_row_start
+            if wire_host is not None:
+                wire_host = np.zeros((layout.total_rows, WIRE_LANES),
+                                     layout.dtype)
+            wire_g = jnp.zeros((layout.total_rows, WIRE_LANES),
+                               layout.dtype)
+            packed_step = make_step(plan)
+            epoch = new_epoch
+            # Future pushes are packed against the NEW layout; stamp
+            # the epoch they should be applied under.
+            client.reshard_epoch = new_epoch
         try:
             it = 0
             while it < task["n_iterations"]:
@@ -230,6 +259,17 @@ def _worker_main(task: Dict[str, Any], address, worker_id: int,
                         d = client.pull_delta(versions, copy=False)
                         if d is None:
                             break  # server stopped
+                        if (d.epoch != epoch
+                                or len(d.versions) != len(versions)):
+                            rebuild_layout(len(d.versions), d.epoch)
+                            if not d.full:
+                                # Paranoia: an epoch change must arrive
+                                # as a full snapshot; if it somehow did
+                                # not, re-pull from scratch.
+                                d = client.pull_delta(
+                                    (-1,) * len(d.versions), copy=False)
+                                if d is None:
+                                    break
                         for j, region in zip(d.shards, d.regions):
                             wire_host[row_start[j]:
                                       row_start[j]
@@ -243,6 +283,21 @@ def _worker_main(task: Dict[str, Any], address, worker_id: int,
                         wire_np = client.pull_packed()
                         if wire_np is None:
                             break  # server stopped
+                        if wire_np.shape[0] != layout.total_rows:
+                            # Live reshard changed the wire layout.  A
+                            # plain pull carries no arity, so probe it
+                            # with a deliberately-mismatched delta pull:
+                            # the full-fallback reply's version vector
+                            # length IS the new arity, and it carries
+                            # the new epoch.
+                            probe = client.pull_delta((-1,))
+                            if probe is None:
+                                break
+                            rebuild_layout(len(probe.versions),
+                                           probe.epoch)
+                            wire_np = client.pull_packed()
+                            if wire_np is None:
+                                break
                         wire_p = jnp.asarray(wire_np)
                     batch = {k: jnp.asarray(v)
                              for k, v in next(stream).items()}
@@ -264,6 +319,16 @@ def _worker_main(task: Dict[str, Any], address, worker_id: int,
                                               clock=it):
                         done += 1
                         break  # released with a STOP: training is over
+                except FrameError as e:
+                    if "resync" not in str(e):
+                        raise
+                    # Retryable bounce: the server could not place this
+                    # frame under any layout it still knows (e.g. a
+                    # failed-over server restored to a plan that
+                    # predates our epoch).  Retry the iteration — the
+                    # pull at the top full-resyncs and rebuilds the
+                    # local layout first.
+                    continue
                 except (TransportClosed, OSError):
                     # The server died under us.  With a reconnect
                     # budget: back off, rebuild the channel, re-HELLO

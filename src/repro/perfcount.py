@@ -73,6 +73,14 @@ class HotPathCounters(_CounterBase):
     #: what the delta actually shipped — the tentpole's "bytes
     #: proportional to change" win, directly benchmarkable.
     full_pull_bytes_avoided: int = 0
+    #: Live-reshard accounting (``repro.ft.reshard``): contributions
+    #: parked against a mid-migration shard, contributions replayed
+    #: onto the new shards after the swap, and whole pushes translated
+    #: from a stale epoch's layout.  Zero-loss is asserted as
+    #: ``reshard_parked == reshard_replayed`` once a migration settles.
+    reshard_parked: int = 0
+    reshard_replayed: int = 0
+    reshard_translated: int = 0
 
 
 #: Process-global counters — reset + snapshot around the region of

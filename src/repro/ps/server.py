@@ -95,11 +95,20 @@ class CoalesceWindow:
             return
         self.applying = True
         try:
-            window = max(1, min(srv.coalesce, len(self.tracker.workers)))
+            # The fill target is capped at the LIVE worker count and
+            # recomputed on every wake-up: a worker removed while the
+            # flusher lingers (its seat freed by ``remove_worker``,
+            # which notifies this cond) shrinks the target immediately
+            # instead of stalling the flush for the full linger on a
+            # window that can no longer fill.
+            def window() -> int:
+                return max(1, min(srv.coalesce, len(self.tracker.workers)))
+
             while self.pending and not srv.stopped:
-                if srv.coalesce_wait > 0.0 and len(self.pending) < window:
+                if srv.coalesce_wait > 0.0 and len(self.pending) < window():
                     deadline = srv._clock() + srv.coalesce_wait
-                    while len(self.pending) < window and not srv.stopped:
+                    while (len(self.pending) < window()
+                           and not srv.stopped):
                         remaining = deadline - srv._clock()
                         if remaining <= 0:
                             break

@@ -332,6 +332,24 @@ class ShardPlan:
             return jnp.zeros((rows, WIRE_LANES), layout.dtype)
         return pack_flat(pieces, layout.dtype, rows=rows)
 
+    def rebuild(self, n_shards: int, *,
+                split_oversized: bool = True) -> "ShardPlan":
+        """The SAME tree re-planned at a new arity — metadata only.
+
+        ``build_shard_plan`` touches nothing but ``.shape``/``.dtype``,
+        so a tree of ``jax.ShapeDtypeStruct``s suffices: a live reshard
+        (``repro.ft.reshard``) re-plans without materializing params.
+        Note the per-shard size target depends on ``n_shards``, so the
+        new plan may slice leaves differently — the migration map, not
+        slice identity, is what relates the two layouts.
+        """
+        dtypes = self.leaf_dtypes or (jnp.float32,) * len(self.leaf_shapes)
+        structs = [jax.ShapeDtypeStruct(s, d)
+                   for s, d in zip(self.leaf_shapes, dtypes)]
+        tree = jax.tree_util.tree_unflatten(self.treedef, structs)
+        return build_shard_plan(tree, n_shards,
+                                split_oversized=split_oversized)
+
     # -- introspection -------------------------------------------------------
     @property
     def total_size(self) -> int:

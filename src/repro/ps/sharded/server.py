@@ -75,6 +75,21 @@ server work scale with *rounds and changed state* instead:
     version moved past the worker's last-seen vector (full-snapshot
     fallback on a vector mismatch), so steady-state pull bytes are
     proportional to what actually changed.
+
+Live reshard (S -> S')
+----------------------
+``reshard(n_shards)`` migrates the packed parameter+momentum regions
+into a new plan WITHOUT stopping training (protocol + migration map in
+``repro.ft.reshard``).  Old shards are retired one at a time under
+their own locks (the only per-shard pause, traced as
+``reshard_shard``); pushes that land on a retired shard PARK their
+packed region and are replayed through the migration map after the
+atomic ``(plan, shards, n_shards)`` swap — applied exactly once,
+accounted in ``WIRE.reshard_parked``/``reshard_replayed``.  Each swap
+bumps ``reshard_epoch``; stale-epoch pushes (clients that packed
+against the old layout) are translated through the retained migration
+maps, and delta pulls carry the epoch so clients force the full-pull
+fallback and rebuild.
 """
 
 from __future__ import annotations
@@ -85,6 +100,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro._compat import warn_legacy
 from repro.api.protocol import DeltaPull, ParameterServerProtocol
@@ -123,6 +139,13 @@ class _ShardState:
         #: set by the server when coalescing is armed (fused mode):
         #: the shard's ``CoalesceWindow`` over its packed buffers.
         self.window = None
+        #: live-reshard state (see ``ShardedParameterServer.reshard``):
+        #: a retired shard parks incoming applies for replay; an
+        #: abandoned shard releases its barrier waiters (its peers now
+        #: push to the new shards).
+        self.retired = False
+        self.abandoned = False
+        self.parked: List[Any] = []   # (packed region, staleness) pairs
         if apply_mode == "fused":
             # Params + momentum stay resident in the plan's wire layout
             # (8-row-aligned (rows, 512) region), so an incoming packed
@@ -134,6 +157,35 @@ class _ShardState:
             self._pieces: Optional[List[jax.Array]] = list(pieces)
         else:
             self._pieces = list(pieces)
+
+    @classmethod
+    def from_packed(cls, index: int, plan: ShardPlan,
+                    packed_p: jax.Array, packed_m: jax.Array, version: int,
+                    policy: SyncPolicy, optimizer: ServerOptimizer,
+                    workers: Sequence[int]) -> "_ShardState":
+        """A shard state born from migrated packed buffers (fused mode
+        only): what a live reshard installs — params AND momentum carry
+        over bitwise, the version is the redistributed share of the old
+        sum."""
+        st = cls.__new__(cls)
+        st.index = index
+        st.plan = plan
+        st.cond = threading.Condition()
+        st.policy = policy
+        st.optimizer = optimizer
+        st.tracker = StalenessTracker(workers)
+        st.metrics = RunMetrics(policy=f"{policy.name}/shard{index}",
+                                n_workers=len(list(workers)))
+        st.version = int(version)
+        st.apply_mode = "fused"
+        st.window = None
+        st.retired = False
+        st.abandoned = False
+        st.parked = []
+        st._packed_p = packed_p
+        st._packed_m = packed_m
+        st._pieces = None
+        return st
 
     # -- weight access (call under self.cond) -------------------------------
     def pieces(self) -> List[jax.Array]:
@@ -224,6 +276,22 @@ class ShardedParameterServer(ParameterServerProtocol):
         self.gating = gating
         self.n_shards = n_shards
         self.apply_mode = apply_mode
+        self._split_oversized = split_oversized
+        # Factories are kept so a live reshard can mint policies and
+        # optimizer state for the new shard set.
+        self._policy_factory = policy_factory
+        self._optimizer_factory = optimizer_factory
+        # Live-reshard state: the epoch counts completed migrations and
+        # rides HELLO/SUB/DELTA replies; ``_reshard_cond`` makes
+        # ``(plan, shards, n_shards, epoch)`` reads/swaps atomic and
+        # tracks in-flight pushes per epoch so parked regions are
+        # replayed only once nothing can still append to them.
+        self.reshard_epoch = 0
+        self._reshard_lock = threading.Lock()     # one migration at a time
+        self._reshard_cond = threading.Condition()
+        self._inflight: Dict[int, int] = {}       # epoch -> active pushes
+        self._retired_plans: Dict[int, ShardPlan] = {}
+        self._migrations: Dict[int, Any] = {}     # epoch e -> map e -> e+1
         workers = range(n_workers)
         pieces = self.plan.split(params)
         self.shards: List[_ShardState] = [
@@ -260,6 +328,29 @@ class ShardedParameterServer(ParameterServerProtocol):
         self.stopped = False
 
     # -- worker API ----------------------------------------------------------
+    def _plan_state(self):
+        """Mutually-consistent ``(plan, shards, epoch)``: a live reshard
+        swaps all three under ``_reshard_cond``, so readers that touch
+        more than one must grab them together."""
+        with self._reshard_cond:
+            return self.plan, self.shards, self.reshard_epoch
+
+    def _plan_for_epoch(self, epoch: Optional[int]):
+        """The plan a push was packed against.  ``None`` / the current
+        epoch -> the live plan; an older epoch -> the retired plan kept
+        for stale-push translation (raises once evicted — the client
+        must re-pull, a retryable condition)."""
+        with self._reshard_cond:
+            cur = self.reshard_epoch
+            if epoch is None or int(epoch) == cur:
+                return self.plan, cur
+            plan = self._retired_plans.get(int(epoch))
+        if plan is None:
+            raise ValueError(
+                f"unknown reshard epoch {epoch} (server at {cur}); "
+                "re-pull to resync")
+        return plan, int(epoch)
+
     def _shard_snapshot(self, st: _ShardState) -> List[jax.Array]:
         """One shard's piece list, unpacking OUTSIDE the shard lock.
 
@@ -289,8 +380,9 @@ class ShardedParameterServer(ParameterServerProtocol):
         gating policies).
         """
         t0 = TRACE.now() if TRACE.enabled else 0.0
-        params = self.plan.assemble(
-            [self._shard_snapshot(st) for st in self.shards])
+        plan, shards, _ = self._plan_state()
+        params = plan.assemble(
+            [self._shard_snapshot(st) for st in shards])
         if TRACE.enabled:
             TRACE.span("pull", t0, worker=worker)
         return params
@@ -308,12 +400,16 @@ class ShardedParameterServer(ParameterServerProtocol):
             raise ValueError("pull_packed requires apply_mode='fused' "
                              "(tree mode has no resident packed store)")
         t0 = TRACE.now() if TRACE.enabled else 0.0
+        _, shards, epoch = self._plan_state()
         snaps, versions = [], []
-        for st in self.shards:
+        for st in shards:
             with st.cond:
                 snaps.append(st._packed_p)
                 versions.append(st.version)
-        key = tuple(versions)
+        # The cache key leads with the reshard epoch: version vectors
+        # from different epochs have different arity and are not
+        # comparable — a newer epoch always wins.
+        key = (epoch,) + tuple(versions)
         with self._snap_lock:
             if self._snap_key == key:
                 wire = self._snap_wire
@@ -334,9 +430,10 @@ class ShardedParameterServer(ParameterServerProtocol):
             # regression test hammers push+pull and asserts the cached
             # key always matches the cached bytes and never regresses.
             cached = self._snap_key
-            if cached is None or (
-                    all(n >= c for n, c in zip(key, cached))
-                    and any(n > c for n, c in zip(key, cached))):
+            if cached is None or key[0] > cached[0] or (
+                    key[0] == cached[0]
+                    and all(n >= c for n, c in zip(key[1:], cached[1:]))
+                    and any(n > c for n, c in zip(key[1:], cached[1:]))):
                 self._snap_key, self._snap_wire = key, wire
         if TRACE.enabled:
             TRACE.span("pull", t0, worker=worker,
@@ -350,7 +447,8 @@ class ShardedParameterServer(ParameterServerProtocol):
         if self.apply_mode != "fused":
             raise ValueError("pull_packed_shard requires apply_mode='fused' "
                              "(tree mode has no resident packed store)")
-        st = self.shards[shard]
+        _, shards, _ = self._plan_state()
+        st = shards[shard]
         with st.cond:
             return st._packed_p
 
@@ -372,19 +470,24 @@ class ShardedParameterServer(ParameterServerProtocol):
             raise ValueError("pull_delta requires apply_mode='fused' "
                              "(tree mode has no resident packed store)")
         t0 = TRACE.now() if TRACE.enabled else 0.0
+        plan, shards, epoch = self._plan_state()
+        n_shards = len(shards)
         snaps, cur = [], []
-        for st in self.shards:
+        for st in shards:
             with st.cond:
                 snaps.append(st._packed_p)
                 cur.append(st.version)
         cur_t = tuple(cur)
-        layout = self.plan.wire_layout()
+        layout = plan.wire_layout()
         itemsize = jnp.dtype(layout.dtype).itemsize
         full_bytes = layout.total_rows * WIRE_LANES * itemsize
-        mismatch = (versions is None or len(versions) != self.n_shards
+        # An arity mismatch is exactly what a client sees after a live
+        # reshard: its vector is from the old epoch and cannot be
+        # diffed — the full-snapshot fallback IS the resync.
+        mismatch = (versions is None or len(versions) != n_shards
                     or any(int(v) > c for v, c in zip(versions, cur)))
         if mismatch:
-            changed = [j for j in range(self.n_shards)
+            changed = [j for j in range(n_shards)
                        if snaps[j].shape[0]]
         else:
             changed = [j for j, (v, c) in enumerate(zip(versions, cur))
@@ -400,7 +503,7 @@ class ShardedParameterServer(ParameterServerProtocol):
                        args={"shards": len(changed), "bytes": delta_bytes,
                              "full": mismatch})
         return DeltaPull(versions=cur_t, shards=tuple(changed),
-                         regions=regions, full=mismatch)
+                         regions=regions, full=mismatch, epoch=epoch)
 
     def push_packed_shard(self, worker: int, shard: int, buf) -> None:
         """Single-shard packed push: the unit of per-shard endpoint
@@ -427,14 +530,22 @@ class ShardedParameterServer(ParameterServerProtocol):
             raise ValueError(
                 "per-shard routed pushes require gating='sharded' (the "
                 "global gate must see one push spanning all shards)")
-        layout = self.plan.wire_layout()
-        if buf.shape != (layout.shard_rows[shard], WIRE_LANES):
-            raise ValueError(
-                f"shard {shard}: buffer {buf.shape} does not match "
-                f"layout ({layout.shard_rows[shard]}, {WIRE_LANES})")
-        if self.wire_compression is not None:
-            buf = self._compress_packed_one(worker, shard, buf)
-        self._push_shard(shard, worker, buf, packed=True)
+        with self._reshard_cond:
+            plan, shards, epoch = self.plan, self.shards, self.reshard_epoch
+            self._inflight[epoch] = self._inflight.get(epoch, 0) + 1
+        try:
+            layout = plan.wire_layout()
+            if buf.shape != (layout.shard_rows[shard], WIRE_LANES):
+                raise ValueError(
+                    f"shard {shard}: buffer {buf.shape} does not match "
+                    f"layout ({layout.shard_rows[shard]}, {WIRE_LANES})")
+            if self.wire_compression is not None:
+                buf = self._compress_packed_one(worker, shard, buf)
+            self._push_shard(shards[shard], worker, buf, packed=True)
+        finally:
+            with self._reshard_cond:
+                self._inflight[epoch] -= 1
+                self._reshard_cond.notify_all()
 
     def push(self, worker: int, grads: Grads) -> None:
         """Split grads by the plan and push shard-by-shard.
@@ -448,12 +559,15 @@ class ShardedParameterServer(ParameterServerProtocol):
         every shard's policy has released the worker (the ``global`` mode
         gates once, after all applies).
         """
-        pieces_per_shard = self.plan.split(grads)
+        plan, _, epoch = self._plan_state()
+        pieces_per_shard = plan.split(grads)
         if self.compressor is not None:
             pieces_per_shard = self._compress(worker, pieces_per_shard)
-        self._push_payloads(worker, pieces_per_shard, packed=False)
+        self._push_payloads(worker, pieces_per_shard, packed=False,
+                            epoch=epoch)
 
-    def push_packed(self, worker: int, wire) -> None:
+    def push_packed(self, worker: int, wire, epoch: Optional[int] = None
+                    ) -> None:
         """Packed-wire push: the zero-repack hot path.
 
         ``wire`` is either the full (total_rows, 512) buffer (the worker
@@ -463,16 +577,27 @@ class ShardedParameterServer(ParameterServerProtocol):
         ``fused_update`` launch (plus one fused-compression launch when
         ``wire_compression`` is set).  Gating/metrics semantics are
         identical to ``push``.
+
+        ``epoch`` is the reshard epoch the pusher packed against
+        (transports carry it on the frame).  A stale epoch means the
+        layout changed under the client: the push is validated against
+        the RETIRED plan and translated through the migration map, so
+        nothing a lagging client sent is lost.  ``None`` means "the
+        layout this buffer matches" — inferred for in-heap callers that
+        hold a plan reference rather than an epoch.
         """
         if self.apply_mode != "fused":
             raise ValueError("push_packed requires apply_mode='fused' "
                              "(tree mode has no resident packed store)")
-        layout = self.plan.wire_layout()
+        if epoch is None and not isinstance(wire, (list, tuple)):
+            epoch = self._infer_epoch(int(wire.shape[0]))
+        plan, epoch = self._plan_for_epoch(epoch)
+        layout = plan.wire_layout()
         if isinstance(wire, (list, tuple)):
             shard_bufs = list(wire)
-            if len(shard_bufs) != self.n_shards:
+            if len(shard_bufs) != plan.n_shards:
                 raise ValueError(f"got {len(shard_bufs)} shard buffers, "
-                                 f"plan has {self.n_shards} shards")
+                                 f"plan has {plan.n_shards} shards")
             for j, buf in enumerate(shard_bufs):
                 if buf.shape != (layout.shard_rows[j], WIRE_LANES):
                     raise ValueError(
@@ -486,51 +611,113 @@ class ShardedParameterServer(ParameterServerProtocol):
                 raise ValueError(
                     f"wire buffer {wire.shape} does not match layout "
                     f"({layout.total_rows}, {WIRE_LANES})")
-            shard_bufs = self.plan.shard_wires(wire)
-        if self.wire_compression is not None:
+            shard_bufs = plan.shard_wires(wire)
+        # Stale-epoch pushes skip wire compression: the per-(worker,
+        # shard) error-feedback buffers were reset at the swap and are
+        # shaped for the NEW plan — a lossless transition-window push
+        # beats quantizing against mismatched feedback state.
+        if self.wire_compression is not None and epoch == self.reshard_epoch:
             shard_bufs = self._compress_packed(worker, shard_bufs)
-        self._push_payloads(worker, shard_bufs, packed=True)
+        self._push_payloads(worker, shard_bufs, packed=True, epoch=epoch)
+
+    def _infer_epoch(self, rows: int) -> Optional[int]:
+        """Map a full-buffer row count onto the epoch whose layout it
+        matches — newest first, so in-heap callers still holding an old
+        plan keep working across a reshard."""
+        with self._reshard_cond:
+            if self.plan.wire_layout().total_rows == rows:
+                return self.reshard_epoch
+            for e in sorted(self._retired_plans, reverse=True):
+                if self._retired_plans[e].wire_layout().total_rows == rows:
+                    return e
+            return self.reshard_epoch   # let validation raise with detail
 
     def _push_payloads(self, worker: int, payloads: Sequence[Any],
-                       packed: bool) -> None:
+                       packed: bool, epoch: Optional[int] = None) -> None:
         t_push = TRACE.now() if TRACE.enabled else 0.0
-        order = range(self.n_shards)
-        now = self._clock() - self._t0
-        # Global mode: the gate decides FIRST (monolithic order — decide,
-        # apply, then maybe block), and its decision governs every shard's
-        # apply so update-dropping policies (backup workers) and credit
-        # accounting match the monolithic server exactly.
-        gate_dec = gate_stale = None
-        if self.gating == "global":
-            gate_dec, gate_stale = self._gate_decide(worker)
-        max_stale, any_applied, any_credit = 0, False, False
-        total_wait = 0.0
-        for j in order:
-            stale, applied, credit, waited = self._push_shard(
-                j, worker, payloads[j], packed, gate_dec, gate_stale)
-            max_stale = max(max_stale, stale)
-            any_applied = any_applied or applied
-            any_credit = any_credit or credit
-            total_wait += waited
-        if gate_dec is not None:
-            total_wait += self._gate_wait(worker, gate_dec)
-            max_stale = gate_stale
-        with self._metrics_lock:
-            self.metrics.record_push(worker, max_stale, applied=any_applied,
-                                     credit=any_credit, time=now)
-            if total_wait > 0:
-                self.metrics.record_wait(worker, total_wait)
-            clock = self.metrics.pushes.get(worker, -1)
-        if TRACE.enabled:
-            TRACE.span("push", t_push, worker=worker, clock=clock,
-                       args={"staleness": max_stale, "applied": any_applied,
-                             "credit": any_credit})
+        # Atomically: which epoch's shard set does this push apply to,
+        # and register it in flight — a live reshard replays parked
+        # regions only after every push registered under the old epoch
+        # has finished (nothing can still append to a parked list).
+        with self._reshard_cond:
+            cur = self.reshard_epoch
+            shards = self.shards
+            self._inflight[cur] = self._inflight.get(cur, 0) + 1
+        try:
+            if epoch is not None and epoch != cur:
+                if not packed:
+                    # A tree push that raced the swap: pack each piece
+                    # list into its OLD-plan region, then translate like
+                    # any other stale packed push.
+                    old_plan = self._retired_plans.get(epoch)
+                    if old_plan is None:
+                        raise ValueError(
+                            f"unknown reshard epoch {epoch}; re-pull")
+                    payloads = [old_plan.pack_shard_pieces(p, j)
+                                for j, p in enumerate(payloads)]
+                    packed = True
+                payloads = self._translate_stale(payloads, epoch, cur)
+            now = self._clock() - self._t0
+            # Global mode: the gate decides FIRST (monolithic order —
+            # decide, apply, then maybe block), and its decision governs
+            # every shard's apply so update-dropping policies (backup
+            # workers) and credit accounting match the monolithic server
+            # exactly.
+            gate_dec = gate_stale = None
+            if self.gating == "global":
+                gate_dec, gate_stale = self._gate_decide(worker)
+            max_stale, any_applied, any_credit = 0, False, False
+            total_wait = 0.0
+            for j, st in enumerate(shards):
+                stale, applied, credit, waited = self._push_shard(
+                    st, worker, payloads[j], packed, gate_dec, gate_stale)
+                max_stale = max(max_stale, stale)
+                any_applied = any_applied or applied
+                any_credit = any_credit or credit
+                total_wait += waited
+            if gate_dec is not None:
+                total_wait += self._gate_wait(worker, gate_dec)
+                max_stale = gate_stale
+            with self._metrics_lock:
+                self.metrics.record_push(worker, max_stale,
+                                         applied=any_applied,
+                                         credit=any_credit, time=now)
+                if total_wait > 0:
+                    self.metrics.record_wait(worker, total_wait)
+                clock = self.metrics.pushes.get(worker, -1)
+            if TRACE.enabled:
+                TRACE.span("push", t_push, worker=worker, clock=clock,
+                           args={"staleness": max_stale,
+                                 "applied": any_applied,
+                                 "credit": any_credit})
+        finally:
+            with self._reshard_cond:
+                self._inflight[cur] -= 1
+                self._reshard_cond.notify_all()
 
-    def _push_shard(self, j: int, worker: int, payload: Any,
+    def _translate_stale(self, payloads: Sequence[Any], epoch: int,
+                         cur: int) -> List[jax.Array]:
+        """Re-slice per-shard gradient regions packed under a retired
+        plan into the current plan's regions, chaining the retained
+        migration maps epoch by epoch."""
+        bufs = [np.asarray(b) for b in payloads]
+        e = epoch
+        while e < cur:
+            mig = self._migrations.get(e)
+            if mig is None:
+                raise ValueError(
+                    f"reshard epoch {epoch} predates the retained "
+                    "migration maps; re-pull to resync")
+            bufs = mig.migrate_grads(bufs)
+            e += 1
+        WIRE.reshard_translated += 1
+        return [jnp.asarray(b) for b in bufs]
+
+    def _push_shard(self, st: _ShardState, worker: int, payload: Any,
                     packed: bool = False,
                     gate_dec: Optional[Decision] = None,
                     gate_stale: Optional[int] = None):
-        st = self.shards[j]
+        j = st.index
         with st.cond:
             now = self._clock() - self._t0
             rec = st.tracker.record_push(worker, now)
@@ -547,7 +734,13 @@ class ShardedParameterServer(ParameterServerProtocol):
                 apply_staleness = gate_stale
             if dec.apply_update:
                 t_apply = TRACE.now() if TRACE.enabled else 0.0
-                if self.coalesce > 1:
+                if st.retired:
+                    # Mid-migration: the shard's packed state has been
+                    # copied out.  Park the region; the reshard replays
+                    # it through the migration map onto the NEW shards
+                    # — applied exactly once, never lost.
+                    self._park(st, payload, packed, apply_staleness)
+                elif self.coalesce > 1:
                     self._apply_coalesced(st, payload, packed,
                                           apply_staleness)
                 elif packed:
@@ -565,7 +758,11 @@ class ShardedParameterServer(ParameterServerProtocol):
             if not dec.release_now:
                 t_wait = TRACE.now() if TRACE.enabled else 0.0
                 arrival = self._clock()
-                while (not self.stopped
+                # ``st.abandoned``: a live reshard swapped this shard
+                # out — peers now push to the NEW shards, so this
+                # barrier can never fill; release (the new trackers
+                # were equalized, so gating stays consistent there).
+                while (not self.stopped and not st.abandoned
                        and not st.policy.may_release(st.tracker, worker)):
                     st.cond.wait(timeout=0.5)
                 waited = self._clock() - arrival
@@ -611,6 +808,193 @@ class ShardedParameterServer(ParameterServerProtocol):
             st.version += 1
             return
         st.window.submit(payload, scale)
+
+    # -- live reshard ----------------------------------------------------------
+    def _park(self, st: _ShardState, payload: Any, packed: bool,
+              staleness: int) -> None:
+        """Called under ``st.cond`` on a retired shard: hold the packed
+        gradient region for replay onto the new shards.  The retired
+        shard's version does NOT move (its buffer does not change), so
+        delta pulls stay truthful during the migration window."""
+        if not packed:
+            if not payload:
+                return
+            payload = st.plan.pack_shard_pieces(payload, st.index)
+        if payload.shape[0] == 0:
+            return
+        st.parked.append((payload, int(staleness)))
+        WIRE.reshard_parked += 1
+
+    def reshard(self, n_shards: int, *, split_oversized: Optional[bool] = None,
+                _mid_hook: Optional[Callable[[int], None]] = None) -> bool:
+        """Live-migrate the packed store to a new shard count S'.
+
+        Training continues throughout: each old shard is paused only for
+        the copy-out under its own lock (traced as ``reshard_shard``),
+        pushes racing the migration park-and-replay (see ``_park``), and
+        everything else — pulls, serving, gating on not-yet-retired
+        shards — proceeds.  The full protocol is documented in
+        ``repro.ft.reshard``.
+
+        Returns True if a migration ran; a same-plan call is a no-op.
+        ``_mid_hook`` (tests/chaos only) fires after each shard's
+        copy-out — ``FaultPlan.kill_mid_reshard`` SIGKILLs the server
+        process there to exercise reshard x failover.
+        """
+        if self.apply_mode != "fused":
+            raise ValueError("live reshard requires apply_mode='fused' "
+                             "(the packed store is what migrates)")
+        if n_shards < 1:
+            raise ValueError("n_shards must be >= 1")
+        from repro.ft.reshard import (build_migration, equalized_counts,
+                                      spread_versions)
+        from repro.ft.snapshot import (capture_policy_state,
+                                       restore_policy_state)
+        with self._reshard_lock:
+            old_plan, old_shards, old_epoch = self._plan_state()
+            if n_shards == len(old_shards):
+                return False
+            t0 = TRACE.now() if TRACE.enabled else 0.0
+            new_plan = old_plan.rebuild(
+                n_shards,
+                split_oversized=(self._split_oversized
+                                 if split_oversized is None
+                                 else split_oversized))
+            mig = build_migration(old_plan, new_plan)
+            # Phase 1 — retire + copy, one shard at a time.  Marking the
+            # shard retired FIRST means nothing new enters its coalesce
+            # window while we drain it; the copy itself is a reference
+            # grab (jax arrays are immutable).  The lock hold is the
+            # shard's entire migration pause.
+            copied_p, copied_m, copied_v = [], [], []
+            counts_per, credits_per = [], []
+            for st in old_shards:
+                t_s = TRACE.now() if TRACE.enabled else 0.0
+                with st.cond:
+                    st.retired = True
+                    while (st.window is not None and not self.stopped
+                           and (st.window.applying or st.window.pending)):
+                        st.cond.wait(timeout=0.1)
+                    copied_p.append(st._packed_p)
+                    copied_m.append(st._packed_m)
+                    copied_v.append(st.version)
+                    counts_per.append(dict(st.tracker.counts))
+                    credits_per.append(dict(st.tracker.credits))
+                if TRACE.enabled:
+                    TRACE.span("reshard_shard", t_s, shard=st.index)
+                if _mid_hook is not None:
+                    _mid_hook(st.index)
+            # Phase 2 — fold params + momentum through the migration map
+            # (contiguous copies in both layouts; bitwise) with no locks
+            # held.  Versions redistribute sum-preserving; tracker counts
+            # and credits equalize to the per-worker minimum across old
+            # shards (the failover clamp rule) so the new barriers are
+            # mutually consistent.
+            new_p = mig.migrate(copied_p)
+            new_m = mig.migrate(copied_m)
+            new_versions = spread_versions(sum(copied_v), n_shards)
+            eq_counts = equalized_counts(counts_per)
+            eq_credits = equalized_counts(credits_per)
+            pol_state = capture_policy_state(old_shards[0].policy)
+            workers = sorted(eq_counts)
+            new_states: List[_ShardState] = []
+            for k in range(n_shards):
+                policy = self._policy_factory()
+                restore_policy_state(policy, pol_state)
+                st = _ShardState.from_packed(
+                    k, new_plan, jnp.asarray(new_p[k]),
+                    jnp.asarray(new_m[k]), new_versions[k], policy,
+                    self._optimizer_factory(), workers)
+                st.tracker.counts.update(eq_counts)
+                st.tracker.credits.update(eq_credits)
+                st.window = self._make_window(st)
+                new_states.append(st)
+            # Phase 3 — atomic swap + epoch bump.  The old plan and the
+            # map are retained so stale-epoch pushes still translate.
+            with self._reshard_cond:
+                self.plan = new_plan
+                self.shards = new_states
+                self.n_shards = n_shards
+                self._retired_plans[old_epoch] = old_plan
+                self._migrations[old_epoch] = mig
+                self.reshard_epoch = old_epoch + 1
+                self._reshard_cond.notify_all()
+            with self._snap_lock:
+                self._snap_key = self._snap_wire = None
+            # Error-feedback state is layout-shaped; reset it (the next
+            # compressed push starts a fresh feedback loop).
+            self._err.clear()
+            self._wire_err.clear()
+            # Phase 4 — release barrier waiters stranded on old shards:
+            # their peers push to the new shards now, so those barriers
+            # can never fill.
+            for st in old_shards:
+                with st.cond:
+                    st.abandoned = True
+                    st.cond.notify_all()
+            # Phase 5 — once no push registered under the old epoch is
+            # still in flight (none can append to a parked list any
+            # more), replay every parked region onto the new shards.
+            with self._reshard_cond:
+                while (self._inflight.get(old_epoch, 0) > 0
+                       and not self.stopped):
+                    self._reshard_cond.wait(timeout=0.5)
+                self._inflight.pop(old_epoch, None)
+            replayed = 0
+            for j, st in enumerate(old_shards):
+                with st.cond:
+                    parked, st.parked = st.parked, []
+                for region, staleness in parked:
+                    self._replay_region(mig, j, region, staleness)
+                    replayed += 1
+            WIRE.reshard_replayed += replayed
+            if TRACE.enabled:
+                TRACE.span("reshard", t0,
+                           args={"from": len(old_shards), "to": n_shards,
+                                 "epoch": old_epoch + 1,
+                                 "replayed": replayed})
+            return True
+
+    def _replay_region(self, mig, old_shard: int, region,
+                       staleness: int) -> None:
+        """Apply one parked old-plan gradient region to the new shards.
+
+        The momentum fold runs ONLY over the moved segments: every
+        other element of the destination shards already saw this push's
+        decay through its own old shard (applied or replayed there), so
+        a whole-region ``fused_update`` with zero-padding would decay
+        those elements twice.
+        """
+        flat = np.asarray(region).reshape(-1)
+        by_new: Dict[int, List[Any]] = {}
+        for mv in mig.moves_from(old_shard):
+            by_new.setdefault(mv.new_shard, []).append(mv)
+        for k, mvs in by_new.items():
+            st = self.shards[k]
+            with st.cond:
+                opt = st.optimizer
+                scale = (1.0 / (1.0 + staleness)
+                         if opt.staleness_damping else 1.0)
+                p = np.asarray(st._packed_p).reshape(-1).copy()
+                m = np.asarray(st._packed_m).reshape(-1).copy()
+                lr = p.dtype.type(opt.lr)
+                beta = p.dtype.type(opt.momentum)
+                scale = p.dtype.type(scale)
+                for mv in mvs:
+                    g = flat[mv.old_off:mv.old_off + mv.size]
+                    sl = slice(mv.new_off, mv.new_off + mv.size)
+                    seg = m[sl] * beta + g * scale
+                    m[sl] = seg
+                    p[sl] = p[sl] - lr * seg
+                rows = p.size // WIRE_LANES
+                st._packed_p = jnp.asarray(p.reshape(rows, WIRE_LANES))
+                st._packed_m = jnp.asarray(m.reshape(rows, WIRE_LANES))
+                st._pieces = None
+                # The buffer changed, so the version MUST move (delta
+                # pulls diff on it) — one bump per replayed contribution
+                # per touched shard.
+                st.version += 1
+                st.cond.notify_all()
 
     def _gate_decide(self, worker: int):
         """Global-gate bookkeeping + decision (no blocking yet)."""

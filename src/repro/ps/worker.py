@@ -96,6 +96,7 @@ class PSWorker(threading.Thread):
         from repro.wireformat import WIRE_LANES
         layout = self.server.plan.wire_layout()
         state = {
+            "layout": layout,
             "host": np.zeros((layout.total_rows, WIRE_LANES),
                              layout.dtype),
             "wire": None,
@@ -104,11 +105,26 @@ class PSWorker(threading.Thread):
 
         def pull(worker_id: int):
             d = self.server.pull_delta(worker_id, state["versions"])
+            while len(d.versions) != len(state["versions"]):
+                # Live reshard: the server's arity moved under us.
+                # Rebuild the resident buffer against the server's
+                # CURRENT plan and re-bootstrap; if the plan moves yet
+                # again between reply and rebuild, the loop resyncs
+                # once more.  (In-heap workers share the plan object
+                # graph with the server, so ``server.plan`` IS the new
+                # plan.)
+                lay = self.server.plan.wire_layout()
+                state["layout"] = lay
+                state["host"] = np.zeros((lay.total_rows, WIRE_LANES),
+                                         lay.dtype)
+                state["wire"] = None
+                state["versions"] = (-1,) * len(lay.shard_row_start)
+                d = self.server.pull_delta(worker_id, state["versions"])
             state["versions"] = d.versions
             if state["wire"] is not None and d.empty:
                 return state["wire"]
             for j, region in zip(d.shards, d.regions):
-                start = layout.shard_row_start[j]
+                start = state["layout"].shard_row_start[j]
                 state["host"][start:start + region.shape[0]] = \
                     np.asarray(region)
             # jnp.array COPIES (asarray may alias on CPU, and the host

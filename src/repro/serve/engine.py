@@ -67,6 +67,7 @@ class Decoder:
                 "path needs encoder frames, not token prompts")
         self.cfg = cfg
         self.plan = plan
+        self.rows = plan.wire_layout().total_rows
         self.prompt_len = int(prompt_len)
         self.max_new = int(max_new)
         self.max_batch = int(max_batch)
@@ -89,6 +90,15 @@ class Decoder:
             self._init_state = lambda b: fam.init_state(cfg, b, total)
         self._step = jax.jit(
             lambda p, t, c, i: fam.decode_fn(cfg, p, t, c, i))
+
+    def rebuilt(self, n_shards: int) -> "Decoder":
+        """A fresh decoder for the same model at a new shard arity —
+        the serve loop swaps to this when a live reshard changes the
+        resident buffer's wire layout.  Only ``_unpack`` genuinely
+        re-traces; the prefill/step jits hit the compile cache."""
+        return Decoder(self.cfg, self.plan.rebuild(n_shards),
+                       prompt_len=self.prompt_len, max_new=self.max_new,
+                       max_batch=self.max_batch)
 
     def warmup(self) -> None:
         """Compile every jit against a zeros buffer BEFORE the serve
@@ -185,6 +195,16 @@ class ReplicaWorker:
             # within bound (or the server stopped — frozen weights).
             staleness = sub.wait_fresh(self.staleness_bound)
             wire, version = sub.snapshot()
+            for _ in range(4):  # bounded: re-snapshot if a reshard races
+                if wire.shape[0] == self.decoder.rows:
+                    break
+                # Live reshard landed between batches: the resident
+                # buffer is now in a new wire layout.  Re-derive the
+                # decode plan at the subscriber's new arity; weights
+                # occupy the same canonical element space, so the
+                # rebuilt unpack yields the same parameter tree.
+                self.decoder = self.decoder.rebuilt(len(sub.versions))
+                wire, version = sub.snapshot()
             t0 = TRACE.now() if TRACE.enabled else 0.0
             prompts = np.stack([r.prompt for r in batch]).astype(np.int32)
             tokens = self.decoder.decode(wire, prompts)

@@ -161,6 +161,25 @@ class ParamSubscriber:
                 self._cond.notify_all()
                 return False
             versions, patches, server_version, full = out
+            if len(versions) != len(self.versions):
+                # Live reshard: the server's shard arity changed, and
+                # the reply is a full snapshot in the NEW wire layout.
+                # Rebuild the resident buffer and the row starts from
+                # the reply itself — regions arrive in shard order, so
+                # the running sum of their row counts IS the new
+                # ``shard_row_start`` (a shard absent from a full
+                # reply is empty: zero rows).
+                n = len(versions)
+                rows_by_shard = [0] * n
+                for j, region in patches:
+                    rows_by_shard[int(j)] = int(region.shape[0])
+                starts, acc = [], 0
+                for r in rows_by_shard:
+                    starts.append(acc)
+                    acc += r
+                self._row_start = tuple(starts)
+                self._buf = np.zeros((acc, WIRE_LANES),
+                                     self._buf.dtype)
             for j, region in patches:
                 r0 = self._row_start[j]
                 self._buf[r0:r0 + region.shape[0]] = region

@@ -97,6 +97,12 @@ class PSTransportClient:
         self.server_rows: Optional[int] = None
         self.clock = 0
         self.reconnects = 0
+        #: The server's live-reshard epoch this client last built its
+        #: layout against (HELLO/SUB replies carry it in the frame's
+        #: ``shard`` field; old servers leave it at -1 -> treat as 0).
+        #: Pushes echo it back in ``aux`` so the server can translate a
+        #: buffer packed against a just-retired layout.
+        self.reshard_epoch = 0
 
     # -- plumbing --------------------------------------------------------
     def _request(self, frame: Frame, compress: str = "none") -> Frame:
@@ -112,6 +118,7 @@ class PSTransportClient:
         count (what ``pull_packed()`` with no shard routing yields)."""
         reply = self._request(Frame(kind=MSG_HELLO, worker=self.worker_id))
         self.server_rows = int(reply.aux)
+        self.reshard_epoch = max(0, reply.shard)
         return self.server_rows
 
     def subscribe(self) -> int:
@@ -121,6 +128,7 @@ class PSTransportClient:
         never slow the training workers' sync-policy gate."""
         reply = self._request(Frame(kind=MSG_SUB, worker=self.worker_id))
         self.server_rows = int(reply.aux)
+        self.reshard_epoch = max(0, reply.shard)
         return self.server_rows
 
     def pull_packed(self, shard: int = -1, *,
@@ -164,7 +172,8 @@ class PSTransportClient:
             shards=tuple(s for s, _ in entries),
             regions=tuple(np.array(a) if copy else a
                           for _, a in entries),
-            full=bool(reply.flags & FLAG_FULL))
+            full=bool(reply.flags & FLAG_FULL),
+            epoch=max(0, reply.shard))
 
     def push_packed(self, wire, shard: int = -1, clock: int = 0) -> bool:
         """Push a packed gradient buffer; BLOCKS until the server's sync
@@ -172,7 +181,8 @@ class PSTransportClient:
         across the process boundary by the pending reply).  Returns
         ``False`` once the server has stopped."""
         frame = Frame(kind=MSG_PUSH, worker=self.worker_id, shard=shard,
-                      clock=clock, payload=np.asarray(wire))
+                      clock=clock, aux=float(self.reshard_epoch),
+                      payload=np.asarray(wire))
         reply = self._request(frame, compress=self.compress)
         return reply.kind != MSG_STOP
 

@@ -83,10 +83,17 @@ class PSServerEndpoint:
         # Pull replies re-serialize the full parameter buffer (device->
         # host) on every request; between applies that is the same
         # bytes W times per iteration.  Cache the host copy keyed by
-        # (shard, server version) — versions are monotonic, so a stale
-        # hit is impossible.
+        # (shard, reshard epoch, server version) — the version (a sum)
+        # is preserved across a live reshard while the layout changes,
+        # so the epoch must be part of the key for a hit to be safe.
         self._pull_lock = threading.Lock()
-        self._pull_cache: Dict[int, tuple] = {}  # shard -> (version, np)
+        self._pull_cache: Dict[int, tuple] = {}  # shard->(epoch, ver, np)
+
+    def _epoch(self) -> int:
+        """The server's live-reshard epoch (0 for servers without the
+        surface) — stamped into HELLO/SUB/PULL/DELTA replies via the
+        frame's otherwise-unused ``shard`` field."""
+        return int(getattr(self.server, "reshard_epoch", 0))
 
     # -- sizing (transports pre-allocate from this) ----------------------
     def wire_rows(self) -> int:
@@ -125,7 +132,8 @@ class PSServerEndpoint:
             with self._hello_lock:
                 server.add_worker(frame.worker)  # idempotent
             return Frame(kind=MSG_OK, worker=frame.worker,
-                         clock=server.version, aux=float(self.wire_rows()))
+                         clock=server.version, shard=self._epoch(),
+                         aux=float(self.wire_rows()))
         if kind == MSG_SUB:
             if self.shards is not None:
                 raise FrameError(
@@ -137,14 +145,16 @@ class PSServerEndpoint:
             # Deliberately NO add_worker: a subscriber never pushes, so
             # seating it would change every BSP/SSP/DSSP gate decision.
             return Frame(kind=MSG_OK, worker=frame.worker,
-                         clock=server.version, aux=float(self.wire_rows()))
+                         clock=server.version, shard=self._epoch(),
+                         aux=float(self.wire_rows()))
         if kind == MSG_PULL:
             if server.stopped:
                 return Frame(kind=MSG_STOP, worker=frame.worker,
                              clock=server.version)
             buf = self._pull(frame)
             return Frame(kind=MSG_OK, worker=frame.worker,
-                         clock=server.version, payload=np.asarray(buf))
+                         clock=server.version, shard=self._epoch(),
+                         payload=np.asarray(buf))
         if kind == MSG_PULL_DELTA:
             if server.stopped:
                 # Training workers take STOP and exit; a subscribed
@@ -167,6 +177,7 @@ class PSServerEndpoint:
             return Frame(kind=MSG_DELTA, worker=frame.worker,
                          clock=server.version,
                          flags=FLAG_FULL if d.full else 0,
+                         shard=int(getattr(d, "epoch", 0)),
                          versions=tuple(d.versions), delta=entries)
         if kind == MSG_PUSH:
             if server.stopped:
@@ -216,11 +227,11 @@ class PSServerEndpoint:
 
     def _pull(self, frame: Frame) -> np.ndarray:
         shard = self._check_shard(frame)
-        version = self.server.version
+        epoch, version = self._epoch(), self.server.version
         with self._pull_lock:
             hit = self._pull_cache.get(shard)
-            if hit is not None and hit[0] == version:
-                return hit[1]
+            if hit is not None and hit[0] == epoch and hit[1] == version:
+                return hit[2]
         if shard < 0:
             buf = self.server.pull_packed(frame.worker)
         else:
@@ -228,8 +239,8 @@ class PSServerEndpoint:
         host = np.asarray(buf)
         with self._pull_lock:
             cached = self._pull_cache.get(shard)
-            if cached is None or version >= cached[0]:
-                self._pull_cache[shard] = (version, host)
+            if cached is None or (epoch, version) >= cached[:2]:
+                self._pull_cache[shard] = (epoch, version, host)
         return host
 
     def _push(self, frame: Frame) -> None:
@@ -245,7 +256,14 @@ class PSServerEndpoint:
         # worker loop guards with copy=True on pulls.)
         buf = jnp.asarray(np.array(frame.payload))
         if shard < 0:
-            self.server.push_packed(frame.worker, buf)
+            if hasattr(self.server, "reshard"):
+                # Epoch-aware server: ``aux`` carries the layout epoch
+                # the client packed against, so a push that raced a
+                # live reshard is translated instead of rejected.
+                self.server.push_packed(frame.worker, buf,
+                                        epoch=int(frame.aux))
+            else:
+                self.server.push_packed(frame.worker, buf)
         else:
             self.server.push_packed_shard(frame.worker, shard, buf)
 
@@ -276,6 +294,21 @@ class ShardRouter:
 
     def __init__(self, clients: Dict[int, PSTransportClient],
                  shard_rows: Sequence[int]):
+        if sorted(clients) != list(range(len(shard_rows))):
+            raise ValueError(
+                f"need one client per shard 0..{len(shard_rows) - 1}, "
+                f"got {sorted(clients)}")
+        self.clients = dict(clients)
+        self.shard_rows = tuple(shard_rows)
+
+    def rebuild(self, clients: Dict[int, PSTransportClient],
+                shard_rows: Sequence[int]) -> None:
+        """Re-point the routing table after a live reshard: the shard
+        count (and each shard's row extent) changed, so the old
+        shard -> client map is meaningless.  Callers re-derive
+        ``shard_rows`` from the NEW plan's wire layout and pass a
+        client per new shard (reusing connections where the endpoint
+        assignment is unchanged)."""
         if sorted(clients) != list(range(len(shard_rows))):
             raise ValueError(
                 f"need one client per shard 0..{len(shard_rows) - 1}, "

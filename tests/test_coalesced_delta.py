@@ -275,6 +275,32 @@ def test_delta_vector_mismatch_falls_back_to_full():
     srv.stop()
 
 
+def test_delta_arity_mismatch_after_live_reshard_full_fallback():
+    """Regression for the PR-5 fallback x live reshard: a client whose
+    version vector is S-long against a server that genuinely migrated
+    to S' shards gets a FULL snapshot at the new epoch, and the
+    reassembled buffer is bitwise the server's packed state."""
+    params = make_params()
+    srv = make_sharded(params, n_shards=2)
+    d0 = srv.pull_delta(0, (-1, -1))
+    assert d0.epoch == 0
+    srv.push_packed(0, srv.plan.pack(grads_like(params, 4)))
+    srv.reshard(3)                       # live migration, epoch 0 -> 1
+    d = srv.pull_delta(0, d0.versions)   # stale 2-vector vs 3 shards
+    assert d.full and d.epoch == 1
+    assert len(d.versions) == 3 and set(d.shards) == {0, 1, 2}
+    layout = srv.plan.wire_layout()
+    buf = np.zeros((layout.total_rows, wf.WIRE_LANES), layout.dtype)
+    for j, r in zip(d.shards, d.regions):
+        s = layout.shard_row_start[j]
+        buf[s:s + r.shape[0]] = r
+    np.testing.assert_array_equal(buf, np.asarray(srv.pull_packed()))
+    # the new vector is current: the next delta is empty, same epoch
+    d2 = srv.pull_delta(0, d.versions)
+    assert d2.empty and not d2.full and d2.epoch == 1
+    srv.stop()
+
+
 def test_mono_delta_paths():
     from repro.core.policies import make_policy_factory as mpf
     from repro.ps.server import ParameterServer, ServerOptimizer
@@ -456,7 +482,9 @@ def test_snapshot_cache_key_always_matches_contents_under_hammer():
             for j in range(2):
                 s = layout.shard_row_start[j]
                 region = host[s:s + layout.shard_rows[j]]
-                expect = float(key[j])
+                # the cache key leads with the reshard epoch; the
+                # per-shard versions follow
+                expect = float(key[1 + j])
                 if not np.allclose(region, expect):
                     errors.append((key, j, float(region.flat[0])))
                     stop.set()
@@ -484,18 +512,20 @@ def test_snapshot_cache_never_goes_backwards():
     srv = make_sharded(params, n_shards=2)
     srv.pull_packed(0)
     with srv._snap_lock:
-        srv._snap_key = (5, 5)       # pretend a fresher pull landed
+        # keys lead with the reshard epoch; versions follow
+        srv._snap_key = (0, 5, 5)    # pretend a fresher pull landed
         marker = srv._snap_wire
-    # a would-be install with key (6, 4) is newer on shard 0 but older
-    # on shard 1 -> must NOT replace (5, 5)
-    key = (6, 4)
+    # a would-be install with versions (6, 4) at the same epoch is
+    # newer on shard 0 but older on shard 1 -> must NOT replace (5, 5)
+    key = (0, 6, 4)
     with srv._snap_lock:
         cached = srv._snap_key
-        if cached is None or (all(n >= c for n, c in zip(key, cached))
-                              and any(n > c
-                                      for n, c in zip(key, cached))):
+        if cached is None or key[0] > cached[0] or (
+                key[0] == cached[0]
+                and all(n >= c for n, c in zip(key[1:], cached[1:]))
+                and any(n > c for n, c in zip(key[1:], cached[1:]))):
             srv._snap_key = key
-    assert srv._snap_key == (5, 5)
+    assert srv._snap_key == (0, 5, 5)
     assert srv._snap_wire is marker
     srv.stop()
 

@@ -423,6 +423,43 @@ def test_worker_failure_does_not_deadlock_any_shard_barrier():
     assert all(set(p) == set() for p in server.staleness_profile().values())
 
 
+def test_remove_worker_shrinks_inflight_coalesce_window():
+    """Satellite: a flusher lingering for a coalesce window that counts
+    a worker who just left must NOT wait out the full linger —
+    ``remove_worker`` shrinks the live fill target immediately, and the
+    queued payload applies exactly once."""
+    params = _tree()
+    server = ShardedParameterServer(
+        params, make_policy_factory("asp", n_workers=2),
+        lambda: ServerOptimizer(lr=0.05), 2, 2, apply_mode="fused",
+        coalesce=3, coalesce_wait=20.0)
+    wire = server.plan.pack(_grads_like(params, 1))
+    done = threading.Event()
+
+    def push():
+        server.push_packed(0, wire)   # window target is min(3, 2) = 2:
+        done.set()                    # lingers for worker 1's push
+
+    t = threading.Thread(target=push, daemon=True)
+    t.start()
+    assert not done.wait(0.4), "flusher did not linger for the window"
+    t0 = time.monotonic()
+    server.remove_worker(1)           # target shrinks to 1 -> flush now
+    assert done.wait(10.0), \
+        "flusher waited out the full linger after the worker left"
+    t.join(timeout=10.0)
+    assert time.monotonic() - t0 < 10.0
+    # the parked contribution applied exactly once on every shard
+    assert server.shard_versions() == [1, 1]
+    for st in server.shards:
+        assert st.tracker.workers == [0]
+        assert st.window.pending == [] and not st.window.applying
+    # the survivor keeps pushing through the (now size-1) window
+    server.push_packed(0, wire)
+    assert server.shard_versions() == [2, 2]
+    server.stop()
+
+
 def test_elastic_join_mid_run_keeps_shard_profiles_consistent():
     """Satellite: add_worker mid-run — the joiner starts at every shard's
     slowest count (no stall) and all shards agree on membership."""
